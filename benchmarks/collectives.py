@@ -1,0 +1,84 @@
+"""Collective-traffic breakdown for one saved HLO artifact: which ops,
+in which loop, move how many bytes — the profile that drives §Perf.
+
+  python -m benchmarks.collectives hlo/llama4_..._16x16.hlo.zst [-n 15]
+"""
+from __future__ import annotations
+
+import argparse
+import re
+from collections import defaultdict
+
+import zstandard
+
+from repro.analysis import hlo as H
+
+
+def breakdown(text: str, top_n: int = 15):
+    comps, entry = H._split_computations(text)
+    symtabs = {c: {op[0]: op[1] for op in ops} for c, ops in comps.items()}
+    mult = defaultdict(float)
+    kind = {}
+    mult[entry] = 1.0
+    kind[entry] = "control"
+    order, seen, i = [entry], {entry}, 0
+    while i < len(order):
+        comp = order[i]
+        i += 1
+        m0 = mult[comp]
+        for name, type_str, opcode, operands, attrs in comps.get(comp, []):
+            calls = H._called(attrs, operands)
+            if opcode == "while":
+                tm = re.search(
+                    r'known_trip_count[^0-9]*"n"\s*:\s*"(\d+)"', attrs)
+                trips = int(tm.group(1)) if tm else 1
+                for k, c in calls:
+                    mult[c] += m0 * trips
+                    kind[c] = "control"
+                    if c not in seen:
+                        seen.add(c)
+                        order.append(c)
+            else:
+                for _, c in calls:
+                    mult[c] += m0
+                    kind.setdefault(c, "fusion" if opcode == "fusion"
+                                    else "control")
+                    if c not in seen:
+                        seen.add(c)
+                        order.append(c)
+
+    rows = []
+    for comp, ops in comps.items():
+        m0 = mult.get(comp, 0.0)
+        if m0 == 0:
+            continue
+        for name, type_str, opcode, operands, attrs in ops:
+            base = opcode.replace("-start", "")
+            if base in ("all-gather", "all-reduce", "reduce-scatter",
+                        "all-to-all", "collective-permute"):
+                b = H._shape_bytes(type_str)
+                meta = re.search(r'op_name="([^"]*)"', attrs)
+                rows.append((m0 * b, base, m0, b, comp[:36],
+                             (meta.group(1) if meta else name)[:90]))
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"total collective bytes/chip: {total:.3e} "
+          f"({total / 50e9:.2f}s at 50GB/s)")
+    for r in rows[:top_n]:
+        print(f"{r[0]:.3e}  {r[1]:18s} x{r[2]:<6.0f} {r[3]:.2e}B  "
+              f"[{r[4]}]  {r[5]}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("hlo_zst")
+    ap.add_argument("-n", type=int, default=15)
+    args = ap.parse_args()
+    text = zstandard.ZstdDecompressor().decompress(
+        open(args.hlo_zst, "rb").read()).decode()
+    breakdown(text, args.n)
+
+
+if __name__ == "__main__":
+    main()

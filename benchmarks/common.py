@@ -1,0 +1,63 @@
+"""Shared benchmark utilities: datasets, metrics, timing."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PFOConfig
+from repro.data import VectorStream
+from repro.kernels import ops
+
+
+def clustered_dataset(n: int, dim: int, seed: int = 0,
+                      n_clusters: int = 32):
+    """Stand-in for MNIST/COLOR (offline container): clustered unit
+    vectors with planted neighbor structure."""
+    vs = VectorStream(dim=dim, n_clusters=n_clusters, seed=seed)
+    ids, vecs = vs.batch(0, n)
+    return ids, vecs, vs
+
+
+def error_ratio(query_d: np.ndarray, oracle_d: np.ndarray,
+                k: int) -> float:
+    """Paper Eq. 1 with the paper's penalty: a missing neighbor counts
+    as similarity 0 (angular distance 1.0)."""
+    qd = np.where(np.isfinite(query_d[:, :k]), query_d[:, :k], 1.0)
+    od = np.maximum(oracle_d[:, :k], 1e-6)
+    return float(np.mean(qd / od))
+
+
+def oracle(qvecs, vecs, k):
+    ids, d = ops.brute_force_topk(jnp.asarray(qvecs), jnp.asarray(vecs),
+                                  k, "angular")
+    return np.asarray(ids), np.asarray(d)
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3):
+    """Median wall time (s) after warmup; blocks on jax results."""
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r) if r is not None else None
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        if r is not None:
+            jax.block_until_ready(r)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def bench_cfg(**kw) -> PFOConfig:
+    base = dict(dim=64, L=4, C=2, m=2, l=32, t=4,
+                max_nodes_per_tree=128, max_leaves_per_tree=512,
+                main_m=4, main_max_nodes_per_tree=256,
+                main_max_leaves_per_tree=2048, store_capacity=32768,
+                max_candidates_per_probe=24, max_candidates_total=256,
+                max_snapshots=6, bloom_bits=1 << 14, snap_prefix_bits=10,
+                snap_budget_per_probe=24)
+    base.update(kw)
+    return PFOConfig(**base)

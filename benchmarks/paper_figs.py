@@ -1,0 +1,288 @@
+"""One benchmark per PFO paper table/figure (§7 evaluation).
+
+Each function prints CSV rows ``name,us_per_call,derived`` and returns
+a list of row tuples.  Sizes are scaled to the CPU container; the
+comparisons (not absolute numbers) are the reproduction target.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import PFOIndex, seal_step
+from repro.core.baselines import BruteForce, MultiProbeFlat, SerializedPFO, ZOrderIndex
+from repro.data import VectorStream
+
+from .common import bench_cfg, clustered_dataset, error_ratio, oracle, timeit
+
+ROWS = []
+
+
+def _emit(name: str, us: float, derived: str = ""):
+    row = (name, f"{us:.1f}", derived)
+    ROWS.append(row)
+    print(f"{name},{us:.1f},{derived}")
+    return row
+
+
+# ======================================================================
+def table1_features():
+    """Table 1: qualitative feature matrix (printed for completeness)."""
+    rows = [
+        ("multi-probe-lsh", "RAM", "single-thread", "no-online-update"),
+        ("lsb-tree", "disk", "single-thread", "no-online-update"),
+        ("plsh", "RAM", "distributed", "pause-to-update"),
+        ("pfo(this)", "hierarchical", "multi-threaded",
+         "parallel-index+smart-dispatch"),
+    ]
+    for r in rows:
+        _emit(f"table1/{r[0]}", 0.0, "|".join(r[1:]))
+    return rows
+
+
+# ======================================================================
+def fig5_tier_latency():
+    """Fig 5: read latency per memory tier vs store size.
+
+    The paper times each memory layer separately; here the three tiers
+    are (a) a host python-dict object store (the on-heap/GC domain),
+    (b) the hot hash-forest probe sub-pipeline (off-heap analogue) and
+    (c) the Bloom-gated sealed-segment probe (flash analogue) — (b)
+    and (c) timed as separate jitted sub-pipelines of the same index.
+    """
+    import functools
+    import jax
+    from repro.core.index import (_snap_cfg_lsh, compute_keys,
+                                  lsh_tree_config)
+    from repro.core.hash_tree import forest_query
+    from repro.core import snapshots as snap_mod
+
+    dim, k, q_n = 64, 10, 50
+    for n in (1000, 4000, 8000):
+        ids, vecs, vs = clustered_dataset(n, dim)
+        queries = vs.queries(0, q_n)
+
+        # (a) on-heap: python dict of vectors + per-bucket object scan
+        pydict = {int(i): vecs[j] for j, i in enumerate(ids)}
+
+        def onheap_query():
+            for qi in range(q_n):
+                sl = np.stack([pydict[i] for i in
+                               range(qi * 7 % n, min(qi * 7 % n + 64, n))])
+                (1 - sl @ queries[qi]).argmin()
+
+        t = timeit(lambda: onheap_query(), iters=3)
+        _emit(f"fig5/onheap/n={n}", t / q_n * 1e6, "python-object-tier")
+
+        cfg = bench_cfg(dim=dim, store_capacity=max(16384, 2 * n))
+        idx = PFOIndex(cfg, seed=0)
+        for s in range(0, n, 1000):
+            idx.insert(ids[s:s + 1000], vecs[s:s + 1000])
+        idx.state = seal_step(idx.state, cfg)   # sealed tier filled
+        # refill hot tier with the same data (both tiers populated)
+        for s in range(0, n, 1000):
+            idx.insert(ids[s:s + 1000] + n, vecs[s:s + 1000])
+        state, c = idx.state, cfg
+
+        @jax.jit
+        def hot_probe(state, q):
+            h, gtrees = compute_keys(state, q, c)
+            fid, _, _ = forest_query(state.lsh_forest, gtrees.reshape(-1),
+                                     h.reshape(-1), lsh_tree_config(c))
+            return fid
+
+        @jax.jit
+        def sealed_probe(state, q):
+            h, _ = compute_keys(state, q, c)
+            outs = []
+            for tl in range(c.L):
+                snaps_l = jax.tree.map(lambda a: a[tl], state.lsh_snaps)
+                cids, _ = snap_mod.probe(snaps_l, h[:, tl],
+                                         _snap_cfg_lsh(c))
+                outs.append(cids)
+            return jnp.concatenate(outs, axis=1)
+
+        qj = jnp.asarray(queries)
+        t = timeit(lambda: hot_probe(state, qj), iters=5)
+        _emit(f"fig5/offheap-hot/n={n}", t / q_n * 1e6, "forest-probe")
+        t = timeit(lambda: sealed_probe(state, qj), iters=5)
+        _emit(f"fig5/sealed-flash/n={n}", t / q_n * 1e6,
+              f"bloom+{int(state.lsh_snaps.n_snaps[0])}segments")
+        t = timeit(lambda: idx.query(qj, k), iters=3)
+        _emit(f"fig5/full-query/n={n}", t / q_n * 1e6,
+              "hash+both-tiers+fetch+rank")
+
+
+# ======================================================================
+def _critical_path(cfg, vecs, seed=0):
+    """Actor-model serialization depth: requests per tree == mailbox
+    occupancy; the longest mailbox is the parallel wall-clock unit.
+    (On this 1-core container vmap cannot show wall speedup, so the
+    paper's cores-scaling figure is reported exactly as work/depth.)"""
+    import jax.random as jr
+    from repro.core.lsh import hash_vectors, make_projections, region_ids
+    proj = make_projections(jr.PRNGKey(seed), cfg)
+    h = hash_vectors(jnp.asarray(vecs), proj["table_proj"], cfg.M)
+    region = np.asarray(region_ids(h, proj["part_proj"], cfg))
+    off = np.arange(cfg.L)[None] * cfg.n_trees
+    trees = (region + off).reshape(-1)
+    counts = np.bincount(trees, minlength=cfg.L * cfg.n_trees)
+    return int(counts.max()), int(counts.sum()), float(counts.mean())
+
+
+def fig6_index_scaling():
+    """Fig 6: parallel-friendliness of the index structures.
+
+    Wall time on 1 CPU core cannot exhibit multi-core scaling, so we
+    report the exact quantity the paper's cores-axis measures: total
+    work vs. the actor critical path (longest per-tree request chain).
+    speedup@P>=trees == work/depth; plus measured 1-core wall time for
+    the whole pipeline and the z-order (LSB-Tree-like) comparator whose
+    *write* path is an inherently global re-sort."""
+    dim, n = 64, 4000
+    ids, vecs, vs = clustered_dataset(n, dim)
+    queries = vs.queries(0, 256)
+
+    for C, m in ((0, 1), (1, 2), (2, 3), (3, 4)):
+        cfg = bench_cfg(dim=dim, C=C, m=m, store_capacity=16384)
+        depth, work, mean = _critical_path(cfg, vecs)
+        t = timeit(lambda: PFOIndex(cfg, seed=0).insert(ids, vecs),
+                   warmup=1, iters=2)
+        _emit(f"fig6/pfo-write/trees={1 << (C + m)}", t / n * 1e6,
+              f"ideal_speedup={work / depth:.1f};"
+              f"skew={depth / mean - 1:.2f}")
+        idx = PFOIndex(cfg, seed=0)
+        idx.insert(ids, vecs)
+        t = timeit(lambda: idx.query(queries, 10), iters=3)
+        _emit(f"fig6/pfo-read/trees={1 << (C + m)}",
+              t / len(queries) * 1e6,
+              "reads-contention-free(ideal_speedup=P)")
+
+    # LSB-Tree stand-in: sorted z-order array (write = global re-sort,
+    # depth == work: no partition-level parallelism available)
+    z = ZOrderIndex(bench_cfg(dim=dim), seed=0)
+    t = timeit(lambda: ZOrderIndex(bench_cfg(dim=dim), seed=0)
+               .insert(ids, vecs), warmup=0, iters=2)
+    _emit("fig6/zorder-write", t / n * 1e6, "ideal_speedup=1.0(re-sort)")
+    z.insert(ids, vecs)
+    t = timeit(lambda: z.query(queries, 10), iters=3)
+    _emit("fig6/zorder-read", t / len(queries) * 1e6,
+          f"{len(queries) / t:.0f} q/s")
+
+
+# ======================================================================
+def fig7_concurrency():
+    """Fig 7: concurrency management — PFO's per-tree dispatched apply
+    vs the 'random thread' global-order apply (SerializedPFO): same
+    index structure, identical data, LSH-forest insertion only.
+
+    derived: critical-path depth of each strategy (serialized == all
+    N*L requests in one chain; dispatched == longest mailbox), i.e.
+    the parallel wall-clock at >= trees cores."""
+    dim = 64
+    for n in (1000, 3000):
+        ids, vecs, _ = clustered_dataset(n, dim)
+        cfg = bench_cfg(dim=dim, store_capacity=16384)
+        depth, work, _ = _critical_path(cfg, vecs)
+
+        t = timeit(lambda: SerializedPFO(cfg, seed=0).insert(ids, vecs),
+                   warmup=1, iters=2)
+        per_op = t / work
+        _emit(f"fig7/serialized/n={n}", t / n * 1e6,
+              f"depth={work};parallel_time_est={work * per_op * 1e3:.1f}ms")
+        _emit(f"fig7/pfo-dispatched/n={n}", t / n * 1e6,
+              f"depth={depth};parallel_time_est={depth * per_op * 1e3:.1f}"
+              f"ms;speedup={work / depth:.1f}x")
+
+
+# ======================================================================
+def fig8_cm_sensitivity():
+    """Fig 8: throughput + accuracy vs the partitioning params C, m."""
+    dim, n, k = 64, 3000, 10
+    ids, vecs, vs = clustered_dataset(n, dim)
+    queries = vs.queries(0, 50)
+    _, od = oracle(queries, vecs, k)
+    for C, m in ((0, 1), (1, 1), (1, 2), (2, 2), (2, 4)):
+        cfg = bench_cfg(dim=dim, C=C, m=m, L=1, store_capacity=16384)
+        idx = PFOIndex(cfg, seed=0)
+        t_ins = timeit(lambda: PFOIndex(cfg, seed=0).insert(ids, vecs),
+                       warmup=0, iters=1)
+        idx.insert(ids, vecs)
+        gids, gd = idx.query(queries, k)
+        r = error_ratio(gd, od, k)
+        _emit(f"fig8/C={C},m={m}", t_ins / n * 1e6,
+              f"err_ratio={r:.3f}")
+
+
+# ======================================================================
+def fig9_lt_sensitivity():
+    """Fig 9: efficiency |A(q)|/k and accuracy vs tree shape l, t
+    (C, m fixed at 1, 2 as in the paper)."""
+    dim, n, k = 64, 3000, 10
+    ids, vecs, vs = clustered_dataset(n, dim)
+    queries = vs.queries(0, 50)
+    _, od = oracle(queries, vecs, k)
+    for l, t in ((16, 2), (16, 8), (32, 4), (64, 4), (64, 16)):
+        cfg = bench_cfg(dim=dim, C=1, m=2, L=1, l=l, t=t,
+                        max_candidates_per_probe=max(32, 2 * t),
+                        store_capacity=16384)
+        idx = PFOIndex(cfg, seed=0)
+        idx.insert(ids, vecs)
+        gids, gd = idx.query(queries, k)
+        e = float(np.mean((gids >= 0).sum(axis=1))) / k
+        r = error_ratio(gd, od, k)
+        _emit(f"fig9/l={l},t={t}", 0.0, f"e={e:.2f};err_ratio={r:.3f}")
+
+
+# ======================================================================
+def fig10_accuracy():
+    """Fig 10: error ratio vs number of LSH tables, PFO vs the
+    LSB-Tree stand-in (z-order sorted array) and multi-probe flat."""
+    dim, n, k = 64, 3000, 10
+    ids, vecs, vs = clustered_dataset(n, dim)
+    queries = vs.queries(0, 50)
+    _, od = oracle(queries, vecs, k)
+    for L in (1, 2, 4, 8, 10):
+        cfg = bench_cfg(dim=dim, L=L, store_capacity=16384)
+        idx = PFOIndex(cfg, seed=0)
+        idx.insert(ids, vecs)
+        gids, gd = idx.query(queries, k)
+        cand = float(np.mean(np.isfinite(gd).sum(axis=1)))
+        _emit(f"fig10/pfo/L={L}", 0.0,
+              f"err_ratio={error_ratio(gd, od, k):.3f};"
+              f"cand<= {cfg.max_candidates_total}")
+
+    # beyond-paper: sibling-slot multi-probe (EXPERIMENTS.md §Perf,
+    # PFO-core extension) — quality of ~one extra table for free
+    for L in (2, 4, 10):
+        cfg = bench_cfg(dim=dim, L=L, store_capacity=16384,
+                        sibling_probe=True)
+        idx = PFOIndex(cfg, seed=0)
+        idx.insert(ids, vecs)
+        _, gd = idx.query(queries, k)
+        _emit(f"fig10/pfo+siblings/L={L}", 0.0,
+              f"err_ratio={error_ratio(gd, od, k):.3f}")
+
+    # comparators examine far larger candidate sets per query — the
+    # paper's claim is quality *per candidate examined* (query cost)
+    z = ZOrderIndex(bench_cfg(dim=dim), seed=0)
+    z.insert(ids, vecs)
+    _, zd = z.query(queries, k)
+    _emit("fig10/zorder-lsbtree", 0.0,
+          f"err_ratio={error_ratio(np.asarray(zd), od, k):.3f};"
+          f"cand={2 * z.window}")
+
+    mp = MultiProbeFlat(bench_cfg(dim=dim, L=4), seed=0)
+    mp.insert(ids, vecs)
+    _, md = mp.query(queries, k)
+    avg_cand = np.mean([min(mp.bucket_fill[tl].sum(), 999999)
+                        for tl in range(4)]) * mp.n_probes / (1 << mp.bb)
+    _emit("fig10/multiprobe-flat", 0.0,
+          f"err_ratio={error_ratio(np.asarray(md), od, k):.3f};"
+          f"cand~{mp.n_probes * 4}buckets")
+
+
+ALL = [table1_features, fig5_tier_latency, fig6_index_scaling,
+       fig7_concurrency, fig8_cm_sensitivity, fig9_lt_sensitivity,
+       fig10_accuracy]

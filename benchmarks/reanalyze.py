@@ -1,0 +1,44 @@
+"""Re-run the HLO analyzer over saved .hlo.zst artifacts and rewrite
+the dry-run jsonl with refreshed flops/bytes/collective numbers —
+no recompilation needed when only the analyzer changes.
+
+  python -m benchmarks.reanalyze dryrun2.jsonl hlo/ -o dryrun3.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import zstandard
+
+from repro.analysis.hlo import analyze_hlo
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("jsonl")
+    ap.add_argument("hlo_dir")
+    ap.add_argument("-o", "--out", required=True)
+    args = ap.parse_args()
+
+    dctx = zstandard.ZstdDecompressor()
+    with open(args.out, "w") as sink:
+        for line in open(args.jsonl):
+            r = json.loads(line)
+            f = r.get("hlo_file")
+            path = os.path.join(args.hlo_dir, f) if f else None
+            if r.get("ok") and path and os.path.exists(path):
+                hlo = dctx.decompress(open(path, "rb").read()).decode()
+                st = analyze_hlo(hlo)
+                r.update(flops=st.flops,
+                         hlo_bytes_accessed=st.bytes_accessed,
+                         collective_bytes=dict(st.collective_bytes),
+                         collective_total=st.collective_total,
+                         while_trips=st.while_trips)
+            sink.write(json.dumps(r) + "\n")
+    print("wrote", args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Roofline table generator: dryrun.jsonl -> EXPERIMENTS.md §Roofline.
+
+Hardware model (TPU v5e-class, per assignment):
+    peak    = 197 TFLOP/s bf16 / chip
+    HBM bw  = 819 GB/s / chip
+    ICI     = ~50 GB/s / link
+
+Terms (all per chip — the analyzed HLO carries post-SPMD local shapes):
+    compute    = HLO_FLOPs / peak
+    memory     = HLO_bytes / HBM_bw
+    collective = collective_bytes / link_bw
+
+``python -m benchmarks.roofline dryrun.jsonl [--md]`` prints the table
+and flags the three hillclimb candidates (worst roofline fraction /
+most collective-bound / most paper-representative).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+PEAK = 197e12
+HBM = 819e9
+LINK = 50e9
+
+
+def load(path: str):
+    recs = {}
+    for line in open(path):
+        r = json.loads(line)
+        if r.get("ok"):
+            recs[(r["arch"], r["shape"], r["mesh"])] = r  # last wins
+    return recs
+
+
+def terms(r: dict) -> dict:
+    c = r["flops"] / PEAK
+    m = r["hlo_bytes_accessed"] / HBM
+    k = r["collective_total"] / LINK
+    dom = max(("compute", c), ("memory", m), ("collective", k),
+              key=lambda x: x[1])
+    step = max(c, m, k)
+    return {"compute_s": c, "memory_s": m, "collective_s": k,
+            "dominant": dom[0], "step_s": step,
+            "roofline_frac": c / step if step else 0.0}
+
+
+def table(recs, mesh="16x16", md=False):
+    from repro.analysis.model_flops import model_flops
+    rows = []
+    chips = 512 if mesh == "2x16x16" else 256
+    for (arch, shape, m), r in sorted(recs.items()):
+        if m != mesh or arch == "pfo_index":
+            continue
+        t = terms(r)
+        mf = model_flops(arch, shape) / chips
+        ratio = mf / r["flops"] if r["flops"] else 0.0
+        rows.append({
+            "arch": arch, "shape": shape, **t,
+            "model_flops_ratio": ratio,
+            "peak_gb": r["peak_bytes"] / 2**30,
+        })
+    hdr = ("arch", "shape", "compute_s", "memory_s", "collective_s",
+           "dominant", "roofline_frac", "model_flops_ratio", "peak_gb")
+    if md:
+        print("| " + " | ".join(hdr) + " |")
+        print("|" + "---|" * len(hdr))
+    else:
+        print(",".join(hdr))
+    for row in rows:
+        vals = [row["arch"], row["shape"],
+                f"{row['compute_s']:.4g}", f"{row['memory_s']:.4g}",
+                f"{row['collective_s']:.4g}", row["dominant"],
+                f"{row['roofline_frac']:.3f}",
+                f"{row['model_flops_ratio']:.3f}",
+                f"{row['peak_gb']:.2f}"]
+        print(("| " + " | ".join(vals) + " |") if md else ",".join(vals))
+    return rows
+
+
+def pick_hillclimb(rows):
+    """worst roofline fraction / most collective-bound / most
+    paper-representative (the biggest-train cell = technique carrier)."""
+    by_frac = min(rows, key=lambda r: r["roofline_frac"])
+    coll = max(rows, key=lambda r: (r["collective_s"] /
+                                    max(r["step_s"], 1e-12)))
+    train = [r for r in rows if r["shape"] == "train_4k"]
+    rep = max(train, key=lambda r: r["compute_s"]) if train else rows[0]
+    return by_frac, coll, rep
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("jsonl", nargs="?", default="dryrun.jsonl")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    recs = load(args.jsonl)
+    rows = table(recs, mesh=args.mesh, md=args.md)
+    a, b, c = pick_hillclimb(rows)
+    print(f"\n# hillclimb candidates:", file=sys.stderr)
+    print(f"#  worst-fraction : {a['arch']} {a['shape']} "
+          f"(frac={a['roofline_frac']:.3f}, dom={a['dominant']})",
+          file=sys.stderr)
+    print(f"#  collective-bound: {b['arch']} {b['shape']} "
+          f"(coll={b['collective_s']:.3g}s vs step={b['step_s']:.3g}s)",
+          file=sys.stderr)
+    print(f"#  representative : {c['arch']} {c['shape']} "
+          f"(compute={c['compute_s']:.3g}s)", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""kNN-LM serving: an LM decodes while a PFO datastore of
+(hidden-state -> next-token) memories is queried every step and
+updated online with each served request (DESIGN.md §3).
+
+    PYTHONPATH=src python examples/knnlm_serving.py [--arch qwen2_7b]
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.core import PFOConfig, PFOIndex
+from repro.models.registry import build_model
+from repro.serving import ServeConfig, ServingEngine
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="smollm_135m")
+ap.add_argument("--rounds", type=int, default=3)
+args = ap.parse_args()
+
+cfg = configs.get_config(args.arch, reduced=True)
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+pcfg = PFOConfig(dim=cfg.d_model, L=4, C=2, m=2, l=32, t=4,
+                 max_leaves_per_tree=512, main_max_leaves_per_tree=2048,
+                 store_capacity=16384, max_candidates_total=128)
+pfo = PFOIndex(pcfg, seed=0)
+engine = ServingEngine(model, params,
+                       ServeConfig(knn_lambda=0.3, knn_k=8),
+                       pfo_index=pfo,
+                       knn_vocab_map=np.zeros(16384, np.int32))
+
+rng = np.random.default_rng(0)
+for r in range(args.rounds):
+    batch = {"tokens": rng.integers(0, cfg.vocab_size, (4, 12))
+             .astype(np.int32)}
+    out, stats = engine.generate(batch, max_new=8, insert_online=True)
+    print(f"round {r}: tokens[0]={out[0].tolist()} "
+          f"datastore={stats['datastore_size']}")
+print("PFO:", pfo.stats())

@@ -1,0 +1,47 @@
+"""Quickstart: PFO as a standalone online ANN index.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import PFOConfig, PFOIndex
+
+rng = np.random.default_rng(0)
+
+cfg = PFOConfig(
+    dim=64,        # vector dimensionality
+    L=6,           # LSH tables (more => better recall)
+    C=2, m=2,      # 2^(C+m) = 16 parallel hash trees per table
+    l=32, t=4,     # directory width / bucket-spread threshold (§5.1)
+    store_capacity=32768,
+)
+index = PFOIndex(cfg, seed=0)
+
+# --- online inserts (batched; rounds == actor-mailbox dispatch) -------
+n = 5000
+vecs = rng.normal(size=(n, cfg.dim)).astype(np.float32)
+vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
+for s in range(0, n, 1000):
+    rounds = index.insert(np.arange(s, s + 1000, dtype=np.int32),
+                          vecs[s:s + 1000])
+    print(f"inserted [{s}, {s + 1000}) in {rounds} dispatch round(s)")
+print("stats:", index.stats())
+
+# --- queries -----------------------------------------------------------
+queries = vecs[:5] + rng.normal(size=(5, cfg.dim)).astype(np.float32) * .02
+ids, dists = index.query(queries, k=5)
+for i in range(5):
+    print(f"q{i}: ids={ids[i].tolist()} d0={dists[i, 0]:.4f}")
+assert (ids[:, 0] == np.arange(5)).all(), "nearest neighbor is itself"
+
+# --- online update (paper §5: new version written, old reclaimed) -----
+index.update(np.array([0], np.int32), -vecs[:1])
+ids2, d2 = index.query(-vecs[:1], k=3)
+print("after update, query(-v0):", ids2[0].tolist(), "d0=%.4f" % d2[0, 0])
+assert ids2[0, 0] == 0
+
+# --- delete ------------------------------------------------------------
+index.delete(np.array([1, 2], np.int32))
+ids3, _ = index.query(vecs[1:3], k=3)
+assert not np.isin([1, 2], ids3).any()
+print("deleted ids 1,2 -> no longer returned. done.")

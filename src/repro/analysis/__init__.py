@@ -1,0 +1,3 @@
+from .hlo import analyze_hlo, HloStats
+
+__all__ = ["analyze_hlo", "HloStats"]

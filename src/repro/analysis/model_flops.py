@@ -1,0 +1,57 @@
+"""Analytic MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE).
+
+N comes from the exact ParamSpec shapes; MoE activity discounts routed
+experts to top_k/n_experts (shared experts always active).  For
+serve cells the factor is 2 (forward only) and D is the tokens
+actually processed (prompt for prefill, 1 per sequence for decode).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES
+from repro.models.common import ParamSpec
+from repro.models.registry import build_model
+
+import jax
+
+
+def param_counts(arch: str) -> tuple[int, int]:
+    """(total_params, active_params)."""
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    total = 0
+    routed = 0
+    for path, spec in jax.tree.flatten_with_path(
+            model.param_specs,
+            is_leaf=lambda x: isinstance(x, ParamSpec))[0]:
+        n = int(np.prod(spec.shape))
+        total += n
+        keys = "/".join(str(getattr(k, "key", "")) for k in path)
+        # routed experts: the (E, d, f) stacks inside "moe" (shared_*
+        # excluded)
+        if "/moe/" in f"/{keys}/" and "shared" not in keys and \
+                spec.axes[-3:].count("experts") + \
+                (1 if "experts" in spec.axes else 0):
+            if "experts" in spec.axes:
+                routed += n
+    if cfg.n_experts:
+        active = total - routed + routed * cfg.top_k / cfg.n_experts
+    else:
+        active = total
+    return int(total), int(active)
+
+
+def model_flops(arch: str, shape: str) -> float:
+    """Global MODEL_FLOPS for one step of this cell."""
+    cell = SHAPES[shape]
+    _, n_active = param_counts(arch)
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * cell.global_batch

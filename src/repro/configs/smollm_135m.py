@@ -1,0 +1,20 @@
+"""smollm-135m [hf:HuggingFaceTB/SmolLM-135M; hf]
+
+30L d_model=576 9H (GQA kv=3) d_ff=1536 vocab=49152 — llama-arch
+small, tied embeddings.  This is also the end-to-end training example
+(examples/train_smollm.py): ~135M params fits a CPU smoke run.
+"""
+from repro.models.common import BlockDef, ModelConfig
+
+
+def config(reduced: bool = False) -> ModelConfig:
+    blk = BlockDef(kind="attn")
+    if reduced:
+        return ModelConfig(
+            name="smollm_135m", n_layers=2, d_model=64, n_heads=4,
+            n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=512,
+            groups=(((blk,), 2),), act="silu", tie_embeddings=True)
+    return ModelConfig(
+        name="smollm_135m", n_layers=30, d_model=576, n_heads=9,
+        n_kv_heads=3, head_dim=64, d_ff=1536, vocab_size=49152,
+        groups=(((blk,), 30),), act="silu", tie_embeddings=True)

@@ -1,0 +1,22 @@
+"""PFO core — the paper's contribution as a composable JAX module.
+
+Public API:
+  PFOConfig      — all paper parameters (L, C, m, l, t, M, capacities)
+  PFOIndex       — single-host online ANN index (insert/query/delete/update)
+  DistConfig, dist_init_state, make_dist_query, make_dist_insert
+                 — the shard_map-distributed variant (trees over `model`,
+                   requests over `data`/`pod`)
+  baselines      — BruteForce, ZOrderIndex (LSB-Tree stand-in),
+                   MultiProbeFlat, SerializedPFO comparators
+"""
+from .config import PFOConfig
+from .index import (PFOIndex, PFOState, init_state, insert_step, query_step,
+                    delete_step, seal_step, merge_step)
+from .distributed import (DistConfig, dist_init_state, make_dist_query,
+                          make_dist_insert)
+
+__all__ = [
+    "PFOConfig", "PFOIndex", "PFOState", "init_state", "insert_step",
+    "query_step", "delete_step", "seal_step", "merge_step",
+    "DistConfig", "dist_init_state", "make_dist_query", "make_dist_insert",
+]

@@ -1,0 +1,214 @@
+"""Comparator systems for the paper's evaluation (Table 1, Figs. 6/7/10).
+
+``BruteForce``     — exact kNN oracle (ground truth for Eq. 1's error
+                     ratio); rides the ``pair_dist`` Pallas kernel.
+``ZOrderIndex``    — the LSB-Tree stand-in (paper §7.3/§7.5): compound
+                     keys mapped to z-order values held in a *sorted
+                     array* (the B-Tree's read-optimized essence);
+                     queries binary-search and take the z-nearest
+                     window; **updates must re-sort** — exactly the
+                     read-friendly/write-hostile trade the paper
+                     criticizes (B-Tree node splits ~ global re-sort
+                     cost here, amortized batch-style).
+``MultiProbeFlat`` — Multi-Probe-LSH stand-in: one flat bucket table
+                     per LSH table, probing the query bucket plus its
+                     nearest sibling buckets by key Hamming distance
+                     (uses the ``hamming`` kernel).
+``SerializedPFO``  — PFO's forest but *all requests applied in one
+                     global sequential scan* (no per-tree dispatch):
+                     the "random thread + synchronization" comparator
+                     of Fig. 7 — identical index, concurrency
+                     management removed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import PFOConfig
+from .hash_tree import TreeState, init_forest, tree_insert
+from .index import lsh_tree_config
+from .lsh import hash_vectors, make_projections
+from repro.kernels import ops as kops
+
+
+# ======================================================================
+class BruteForce:
+    """Exact kNN over an append-only store."""
+
+    def __init__(self, cfg: PFOConfig):
+        self.cfg = cfg
+        self.vecs = np.zeros((0, cfg.dim), np.float32)
+        self.ids = np.zeros((0,), np.int32)
+
+    def insert(self, ids, vecs):
+        self.ids = np.concatenate([self.ids, np.asarray(ids, np.int32)])
+        self.vecs = np.concatenate([self.vecs,
+                                    np.asarray(vecs, np.float32)])
+
+    def query(self, q, k=10):
+        idx, d = kops.brute_force_topk(jnp.asarray(q, jnp.float32),
+                                       jnp.asarray(self.vecs), k,
+                                       self.cfg.metric)
+        return np.asarray(self.ids)[np.asarray(idx)], np.asarray(d)
+
+
+# ======================================================================
+def _zorder_interleave(h: jax.Array, bits_per_key: int, n_keys: int):
+    """Interleave the top ``bits_per_key`` bits of ``n_keys`` compound
+    keys into one z-order integer (the LSB-Tree's space-filling map)."""
+    out = jnp.zeros(h.shape[:-1], jnp.uint64)
+    for b in range(bits_per_key):
+        for j in range(n_keys):
+            bit = (h[..., j].astype(jnp.uint64) >> (31 - b)) & 1
+            out = (out << 1) | bit
+    return out
+
+
+class ZOrderIndex:
+    """Sorted z-order array — the read-optimized B-Tree analogue."""
+
+    def __init__(self, cfg: PFOConfig, seed: int = 0, zkeys: int = 4,
+                 zbits: int = 8, window: int = 64):
+        self.cfg = cfg
+        self.zkeys, self.zbits, self.window = zkeys, zbits, window
+        self.proj = make_projections(jax.random.PRNGKey(seed), cfg)
+        self.z = np.zeros((0,), np.uint64)
+        self.ids = np.zeros((0,), np.int32)
+        self.vecs = np.zeros((0, cfg.dim), np.float32)
+
+    def _zvals(self, vecs) -> np.ndarray:
+        h = hash_vectors(jnp.asarray(vecs, jnp.float32),
+                         self.proj["table_proj"], self.cfg.M)
+        return np.asarray(_zorder_interleave(h[:, :self.zkeys],
+                                             self.zbits, self.zkeys))
+
+    def insert(self, ids, vecs):
+        """The write path the paper faults: maintain global sorted order."""
+        z = self._zvals(vecs)
+        self.z = np.concatenate([self.z, z])
+        self.ids = np.concatenate([self.ids, np.asarray(ids, np.int32)])
+        self.vecs = np.concatenate([self.vecs, np.asarray(vecs, np.float32)])
+        order = np.argsort(self.z, kind="stable")   # the B-Tree reshape cost
+        self.z, self.ids, self.vecs = (self.z[order], self.ids[order],
+                                       self.vecs[order])
+
+    def query(self, q, k=10):
+        q = np.asarray(q, np.float32)
+        zq = self._zvals(q)
+        lo = np.searchsorted(self.z, zq)
+        w = self.window
+        n = self.z.shape[0]
+        cand = np.clip(lo[:, None] + np.arange(-w, w)[None, :], 0,
+                       max(n - 1, 0)).astype(np.int64)
+        cvecs = self.vecs[cand]                         # (Q, 2w, d)
+        valid = jnp.ones(cand.shape, bool) if n else jnp.zeros(cand.shape, bool)
+        d = kops.pairwise_rank(jnp.asarray(q), jnp.asarray(cvecs),
+                               valid, self.cfg.metric)
+        neg, idx = jax.lax.top_k(-d, k)
+        ids = np.take_along_axis(self.ids[cand], np.asarray(idx), axis=1)
+        return ids, -np.asarray(neg)
+
+
+# ======================================================================
+class MultiProbeFlat:
+    """Flat-bucket multi-probe LSH over the first table's key prefix."""
+
+    def __init__(self, cfg: PFOConfig, seed: int = 0, bucket_bits: int = 10,
+                 bucket_cap: int = 128, n_probes: int = 8):
+        self.cfg = cfg
+        self.bb, self.cap, self.n_probes = bucket_bits, bucket_cap, n_probes
+        self.proj = make_projections(jax.random.PRNGKey(seed), cfg)
+        nb = 1 << bucket_bits
+        self.bucket_ids = np.full((cfg.L, nb, bucket_cap), -1, np.int32)
+        self.bucket_fill = np.zeros((cfg.L, nb), np.int32)
+        self.vec_by_id: dict[int, np.ndarray] = {}
+
+    def _buckets(self, vecs) -> np.ndarray:
+        h = np.asarray(hash_vectors(jnp.asarray(vecs, jnp.float32),
+                                    self.proj["table_proj"], self.cfg.M))
+        return (h >> (32 - self.bb)).astype(np.int64), h
+
+    def insert(self, ids, vecs):
+        b, _ = self._buckets(vecs)
+        ids = np.asarray(ids, np.int32)
+        for row, vid in enumerate(ids):
+            self.vec_by_id[int(vid)] = np.asarray(vecs[row], np.float32)
+            for tl in range(self.cfg.L):
+                bk = b[row, tl]
+                f = self.bucket_fill[tl, bk]
+                if f < self.cap:
+                    self.bucket_ids[tl, bk, f] = vid
+                    self.bucket_fill[tl, bk] = f + 1
+
+    def query(self, q, k=10):
+        b, h = self._buckets(q)
+        qn = np.asarray(q, np.float32)
+        out_ids = np.full((qn.shape[0], k), -1, np.int32)
+        out_d = np.full((qn.shape[0], k), np.inf, np.float32)
+        for row in range(qn.shape[0]):
+            cand: set[int] = set()
+            for tl in range(self.cfg.L):
+                center = int(b[row, tl])
+                # probe center + hamming-1 neighbours of the prefix
+                probes = [center] + [center ^ (1 << i)
+                                     for i in range(self.n_probes - 1)]
+                for pb in probes:
+                    pb &= (1 << self.bb) - 1
+                    f = self.bucket_fill[tl, pb]
+                    cand.update(int(i) for i in self.bucket_ids[tl, pb, :f])
+            cand.discard(-1)
+            if not cand:
+                continue
+            cl = np.array(sorted(cand), np.int32)
+            cv = np.stack([self.vec_by_id[int(c)] for c in cl])
+            d = np.asarray(kops.pairwise_rank(
+                jnp.asarray(qn[row:row + 1]), jnp.asarray(cv[None]),
+                jnp.ones((1, cv.shape[0]), bool), self.cfg.metric))[0]
+            top = np.argsort(d)[:k]
+            out_ids[row, :top.size] = cl[top]
+            out_d[row, :top.size] = d[top]
+        return out_ids, out_d
+
+
+# ======================================================================
+@functools.partial(jax.jit, static_argnames=("tcfg",))
+def _serial_insert(forest: TreeState, tree_ids, hs, vids, tcfg):
+    """Global sequential application — the no-dispatch comparator."""
+    def step(forest, x):
+        tid, h, vid = x
+        st = jax.tree.map(lambda a: a[tid], forest)
+        st = tree_insert(st, h, vid, vid, tcfg)
+        forest = jax.tree.map(
+            lambda a, b: jax.lax.dynamic_update_index_in_dim(a, b, tid, 0),
+            forest, st)
+        return forest, ()
+
+    forest, _ = jax.lax.scan(step, forest, (tree_ids, hs, vids))
+    return forest
+
+
+class SerializedPFO:
+    """PFO's exact index, concurrency management removed (Fig. 7)."""
+
+    def __init__(self, cfg: PFOConfig, seed: int = 0):
+        self.cfg = cfg
+        self.proj = make_projections(jax.random.PRNGKey(seed), cfg)
+        self.tcfg = lsh_tree_config(cfg)
+        self.forest = init_forest(self.tcfg, cfg.L * cfg.n_trees)
+
+    def insert(self, ids, vecs):
+        from .index import PFOState  # noqa: F401 (API parity only)
+        from .lsh import region_ids
+        h = hash_vectors(jnp.asarray(vecs, jnp.float32),
+                         self.proj["table_proj"], self.cfg.M)
+        region = region_ids(h, self.proj["part_proj"], self.cfg)
+        off = jnp.arange(self.cfg.L, dtype=jnp.int32)[None] * self.cfg.n_trees
+        gtrees = (region + off).reshape(-1)
+        flat_h = h.reshape(-1)
+        flat_id = jnp.repeat(jnp.asarray(ids, jnp.int32), self.cfg.L)
+        self.forest = _serial_insert(self.forest, gtrees, flat_h, flat_id,
+                                     self.tcfg)

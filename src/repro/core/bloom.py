@@ -1,0 +1,65 @@
+"""Bloom filters over snapshot bucket prefixes (paper §3.2.2).
+
+Each sealed snapshot carries a bit-packed Bloom filter built from the
+indices of its non-empty buckets; queries probe every snapshot's filter
+vectorized before touching the (simulated-flash) segment arrays, so a
+negative costs one fused gather instead of a segment search.
+
+Build happens once per seal (cold path): scatter into a bool vector,
+then pack to uint32 words.  Probe (hot path) reads the packed words.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .lsh import murmur3_fmix32
+
+
+def _bit_positions(keys: jax.Array, n_hashes: int, bloom_bits: int) -> jax.Array:
+    """(...,) uint32 keys -> (..., n_hashes) int32 bit positions."""
+    seeds = jnp.arange(1, n_hashes + 1, dtype=jnp.uint32)
+    hashed = murmur3_fmix32(
+        keys[..., None].astype(jnp.uint32) + seeds * jnp.uint32(0x9E3779B9),
+        seed=7,
+    )
+    return (hashed % jnp.uint32(bloom_bits)).astype(jnp.int32)
+
+
+def build(keys: jax.Array, n_hashes: int, bloom_bits: int,
+          mask: jax.Array | None = None) -> jax.Array:
+    """Build a packed filter from (N,) uint32 keys; mask marks valid rows.
+
+    Returns (bloom_bits // 32,) uint32.
+    """
+    assert bloom_bits % 32 == 0
+    pos = _bit_positions(keys, n_hashes, bloom_bits).reshape(-1)
+    if mask is not None:
+        valid = jnp.broadcast_to(mask[..., None], (*mask.shape, n_hashes))
+        pos = jnp.where(valid.reshape(-1), pos, bloom_bits)  # park OOB
+    bits = jnp.zeros((bloom_bits + 1,), jnp.bool_).at[pos].set(True)[:-1]
+    words = bits.reshape(-1, 32).astype(jnp.uint32)
+    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(words * weights, axis=-1, dtype=jnp.uint32)
+
+
+def empty(bloom_bits: int) -> jax.Array:
+    return jnp.zeros((bloom_bits // 32,), jnp.uint32)
+
+
+def contains(bloom: jax.Array, keys: jax.Array, n_hashes: int) -> jax.Array:
+    """(...,) uint32 -> (...,) bool; vectorized membership probe."""
+    bloom_bits = bloom.shape[-1] * 32
+    pos = _bit_positions(keys, n_hashes, bloom_bits)          # (..., K)
+    word, bit = pos // 32, (pos % 32).astype(jnp.uint32)
+    got = (jnp.take(bloom, word, axis=-1) >> bit) & jnp.uint32(1)
+    return jnp.all(got == 1, axis=-1)
+
+
+def contains_multi(blooms: jax.Array, keys: jax.Array, n_hashes: int) -> jax.Array:
+    """Probe S stacked filters at once: (S, W) x (N,) -> (S, N) bool."""
+    bloom_bits = blooms.shape[-1] * 32
+    pos = _bit_positions(keys, n_hashes, bloom_bits)          # (N, K)
+    word, bit = pos // 32, (pos % 32).astype(jnp.uint32)
+    got = (blooms[:, word] >> bit[None]) & jnp.uint32(1)      # (S, N, K)
+    return jnp.all(got == 1, axis=-1)                         # (S, N)

@@ -1,0 +1,95 @@
+"""PFO configuration (paper §3-§5 notation, Table 2).
+
+Every field mirrors a symbol in the paper:
+  L  — number of LSH tables
+  C  — number of partition-level LSH functions (2^C partitions / table)
+  m  — bits of the compound key used to pick the hash tree (2^m trees
+       per partition)
+  l  — slots per non-leaf (directory) node; each tree level consumes
+       log2(l) bits of the key
+  t  — max leaves chained under one slot before a spread-to-next-level
+  M  — compound key length in bits (uint32 keys => M == 32)
+
+Capacity knobs size the pre-allocated off-heap arenas (the JAX analogue
+of the paper's off-heap segments) and the sealed-snapshot tier.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class PFOConfig:
+    dim: int = 64                 # vector dimensionality d
+    L: int = 10                   # LSH tables
+    C: int = 4                    # partition-level hash functions
+    m: int = 4                    # tree-selection bits
+    l: int = 128                  # directory-node slots (power of two)
+    t: int = 4                    # bucket spread threshold
+    M: int = 32                   # compound key bits (uint32)
+
+    # --- arena capacities (per tree) -------------------------------
+    max_nodes_per_tree: int = 128
+    max_leaves_per_tree: int = 1024
+
+    # --- MainTable -------------------------------------------------
+    main_m: int = 6               # murmur tree-selection bits for MainTable
+    main_max_nodes_per_tree: int = 256
+    main_max_leaves_per_tree: int = 4096
+    store_capacity: int = 65536   # vector store slots
+
+    # --- query shaping ----------------------------------------------
+    max_candidates_per_probe: int = 32   # leaves collected per tree probe
+    max_candidates_total: int = 512      # after union over L tables+snaps
+
+    # --- hierarchical memory (sealed snapshot tier) -----------------
+    seal_threshold: float = 0.85         # hot-tier fill fraction triggering seal
+    max_snapshots: int = 8
+    snapshot_capacity: int = 65536       # entries per sealed segment
+    snap_prefix_bits: int = 12           # bucket-prefix resolution of snapshot probes
+    snap_budget_per_probe: int = 32      # candidates gathered per snapshot probe
+    bloom_bits: int = 1 << 16
+    bloom_hashes: int = 4
+
+    # --- metric ------------------------------------------------------
+    metric: str = "angular"              # "angular" | "l2"
+    # beyond-paper: multi-probe the landing node's sibling slots
+    sibling_probe: bool = False
+
+    # ------------------------------------------------------------------
+    @property
+    def log2_l(self) -> int:
+        return int(math.log2(self.l))
+
+    @property
+    def n_partitions(self) -> int:
+        return 1 << self.C
+
+    @property
+    def trees_per_partition(self) -> int:
+        return 1 << self.m
+
+    @property
+    def n_trees(self) -> int:
+        """Total regions per LSH table: 2^(C+m) (paper §4.1)."""
+        return 1 << (self.C + self.m)
+
+    @property
+    def main_n_trees(self) -> int:
+        return 1 << self.main_m
+
+    @property
+    def max_depth(self) -> int:
+        """Tree levels available after the first m bits pick the tree."""
+        return (self.M - self.m) // self.log2_l
+
+    @property
+    def main_max_depth(self) -> int:
+        return (self.M - self.main_m) // self.log2_l
+
+    def __post_init__(self):
+        assert self.l & (self.l - 1) == 0, "l must be a power of two"
+        assert self.M == 32, "uint32 compound keys"
+        assert self.C + self.m <= 16
+        assert self.max_depth >= 1, "need at least one directory level"

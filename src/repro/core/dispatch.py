@@ -1,0 +1,103 @@
+"""Request dispatching (paper §4.2, Figure 3).
+
+The paper routes every query/update to the actor owning the target hash
+tree; at most one thread ever touches a tree, so no locks are needed.
+The SPMD embodiment: *dispatch* turns a flat request batch into a dense
+(T, K) per-tree mailbox (sorted by tree, ranked within tree), after
+which ``forest_insert_dispatched`` applies each mailbox sequentially
+(scan == the actor's serial inbox) with all trees in parallel (vmap) —
+identical semantics, zero synchronization.
+
+Requests beyond a mailbox's capacity K are flagged as *overflow* and
+re-submitted by the host in a follow-up round (the actor's unbounded
+inbox becomes bounded rounds; throughput benchmarks count total rounds).
+This is the same primitive MoE expert dispatch uses, and
+``repro.models.moe`` routes through the distributed variant below.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dispatch_to_trees(tree_ids: jax.Array, n_trees: int, capacity: int):
+    """Build per-tree mailboxes from a flat request batch.
+
+    tree_ids: (N,) int32 in [0, n_trees); -1 marks an inactive row.
+
+    Returns:
+      mailbox_src: (T, K) int32 — request index filling slot k of tree t,
+                   -1 for empty slots.
+      overflow:    (N,) bool   — requests that did not fit this round.
+    """
+    n = tree_ids.shape[0]
+    valid = tree_ids >= 0
+    sort_key = jnp.where(valid, tree_ids, n_trees)           # invalid last
+    order = jnp.argsort(sort_key, stable=True)               # (N,)
+    sorted_tid = sort_key[order]
+
+    # rank within the tree's group = position - first occurrence
+    first = jnp.searchsorted(sorted_tid, sorted_tid, side="left")
+    rank = jnp.arange(n, dtype=jnp.int32) - first.astype(jnp.int32)
+
+    fits = (sorted_tid < n_trees) & (rank < capacity)
+    dest_tree = jnp.where(fits, sorted_tid, n_trees).astype(jnp.int32)
+    dest_slot = jnp.where(fits, rank, 0)
+
+    mailbox = jnp.full((n_trees + 1, capacity), -1, jnp.int32)
+    mailbox = mailbox.at[dest_tree, dest_slot].set(
+        jnp.where(fits, order.astype(jnp.int32), -1))
+    mailbox_src = mailbox[:n_trees]
+
+    overflow = jnp.zeros((n,), jnp.bool_).at[order].set(
+        (~fits) & (sorted_tid < n_trees))
+    return mailbox_src, overflow
+
+
+def gather_mailbox(mailbox_src: jax.Array, *arrays: jax.Array):
+    """Materialize mailbox payloads: each (N, ...) array -> (T, K, ...).
+
+    Empty slots keep index 0's payload; callers must mask with the id
+    array (convention: id == -1 for padding)."""
+    safe = jnp.maximum(mailbox_src, 0)
+    out = []
+    for a in arrays:
+        g = a[safe.reshape(-1)].reshape(*mailbox_src.shape, *a.shape[1:])
+        out.append(g)
+    return tuple(out)
+
+
+def mailbox_ids(mailbox_src: jax.Array, ids: jax.Array) -> jax.Array:
+    """Gather ids with -1 preserved in empty slots (the padding marker)."""
+    safe = jnp.maximum(mailbox_src, 0)
+    g = ids[safe.reshape(-1)].reshape(mailbox_src.shape)
+    return jnp.where(mailbox_src >= 0, g, -1)
+
+
+# ----------------------------------------------------------------------
+# distributed routing: trees sharded over a mesh axis
+# ----------------------------------------------------------------------
+def owner_of_tree(tree_ids: jax.Array, n_trees: int, n_shards: int) -> jax.Array:
+    """Contiguous block ownership: shard s owns trees [s*T/S, (s+1)*T/S)."""
+    per = n_trees // n_shards
+    return jnp.where(tree_ids >= 0, tree_ids // per, -1)
+
+
+def all_to_all_route(payload: jax.Array, dest_shard: jax.Array,
+                     n_shards: int, capacity: int, axis_name: str):
+    """Route rows of ``payload`` to their destination shard (inside
+    shard_map).  Returns (received_payload (S*K, ...), received_valid).
+
+    Mirrors the actor message send: a (S, K, ...) send buffer is built
+    with :func:`dispatch_to_trees` semantics (shard == tree here), then
+    exchanged with one ``all_to_all``.  Overflow handling is the same
+    host-round protocol.
+    """
+    mailbox_src, overflow = dispatch_to_trees(dest_shard, n_shards, capacity)
+    (buf,) = gather_mailbox(mailbox_src, payload)           # (S, K, ...)
+    valid = mailbox_src >= 0                                 # (S, K)
+    recv = jax.lax.all_to_all(buf, axis_name, split_axis=0, concat_axis=0,
+                              tiled=True)                    # (S*K, ...)
+    recv_valid = jax.lax.all_to_all(valid, axis_name, split_axis=0,
+                                    concat_axis=0, tiled=True)
+    return recv, recv_valid, overflow

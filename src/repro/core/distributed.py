@@ -1,0 +1,367 @@
+"""Distributed PFO — the paper's parallel design on a TPU mesh.
+
+Placement (mesh axes ``(pod, data, model)`` or ``(data, model)``):
+
+* **hash trees** (all L tables) shard over ``model`` — contiguous
+  blocks of global tree ids per chip, the actor-pool-per-core of §4.2
+  scaled to chips;
+* the **MainTable** (id -> slot, vectors) shards over ``model`` by
+  murmur owner — every id has exactly one home chip (single-copy
+  invariant of §3.1);
+* **queries/updates** shard over ``(pod, data)`` — the online request
+  stream.
+
+Query protocol (collectives over ``model`` only):
+  1. every chip hashes its local queries (replicated projections);
+  2. ``all_gather`` the (h, tree) request set across ``model`` — each
+     chip sees the row's full requests but probes only trees it owns
+     (ownership mask == the actor single-writer guarantee);
+  3. chips probe local hot trees + local sealed snapshots; candidate
+     ids route by one ``all_to_all`` to their murmur owner, which
+     looks up the vector and exact-ranks against the gathered query;
+  4. (id, dist) partials route back and ``all_gather`` over ``model``;
+     each chip keeps the deduped global top-k for its query slice.
+
+Update protocol: one ``all_to_all`` routes (h, id) to tree-owner
+chips; one more routes (id, vec) to murmur owners.  Receive-side
+mailboxes are sized ``n_model * capacity`` so a routed request can
+never be dropped locally — overflow exists only at the send-side
+dispatch, where the host retries rounds exactly like the single-chip
+path.  Cross-chip synchronization is *structurally* absent: every tree
+and every id has one writer per round.
+
+The same routing substrate carries MoE expert dispatch in
+``repro.models.moe`` — see DESIGN.md §3.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import snapshots as snap_mod
+from .config import PFOConfig
+from .dispatch import dispatch_to_trees, gather_mailbox, mailbox_ids
+from .hash_tree import forest_insert_dispatched, forest_lookup, forest_query, init_forest
+from .index import PFOState, init_state, lsh_tree_config, main_tree_config
+from .lsh import main_table_keys, make_projections, region_ids
+from .store import dense_alloc, dense_init, dense_read
+from repro.kernels import ops as kops
+
+INT_MAX = jnp.int32(2**31 - 1)
+
+
+class DistConfig(NamedTuple):
+    pfo: PFOConfig
+    model_axis: str = "model"
+    batch_axes: tuple = ("data",)      # ("pod", "data") on multi-pod
+    n_model: int = 16
+
+    @property
+    def trees_per_shard(self) -> int:
+        total = self.pfo.L * self.pfo.n_trees
+        assert total % self.n_model == 0
+        return total // self.n_model
+
+    @property
+    def main_trees_per_shard(self) -> int:
+        assert self.pfo.main_n_trees % self.n_model == 0
+        return self.pfo.main_n_trees // self.n_model
+
+
+def shard_snap_cfg(dcfg: DistConfig) -> PFOConfig:
+    cap = dcfg.trees_per_shard * dcfg.pfo.max_leaves_per_tree
+    return PFOConfig(**{**dcfg.pfo.__dict__, "snapshot_capacity": cap})
+
+
+def shard_main_snap_cfg(dcfg: DistConfig) -> PFOConfig:
+    cap = dcfg.main_trees_per_shard * dcfg.pfo.main_max_leaves_per_tree
+    return PFOConfig(**{**dcfg.pfo.__dict__, "snapshot_capacity": cap})
+
+
+def _abstract_state(dcfg: DistConfig) -> PFOState:
+    """Shape skeleton of the distributed state (no allocation)."""
+    cfg = dcfg.pfo
+    snap_cfg = shard_snap_cfg(dcfg)
+    msnap_cfg = shard_main_snap_cfg(dcfg)
+    return jax.eval_shape(
+        lambda k: PFOState(
+            lsh_forest=init_forest(lsh_tree_config(cfg),
+                                   cfg.L * cfg.n_trees),
+            main_forest=init_forest(main_tree_config(cfg), cfg.main_n_trees),
+            store=jax.vmap(
+                lambda _: dense_init(cfg.store_capacity // dcfg.n_model,
+                                     cfg.dim))(jnp.arange(dcfg.n_model)),
+            lsh_snaps=jax.vmap(
+                lambda _: snap_mod.init_snapshots(snap_cfg))(
+                jnp.arange(dcfg.n_model)),
+            main_snaps=jax.vmap(
+                lambda _: snap_mod.init_snapshots(msnap_cfg))(
+                jnp.arange(dcfg.n_model)),
+            tombstones=jnp.full((1024,), -1, jnp.int32),
+            n_tombstones=jnp.int32(0),
+            stamp=jnp.int32(0),
+            proj=make_projections(k, cfg),
+        ), jax.random.PRNGKey(0))
+
+
+def state_pspecs(dcfg: DistConfig) -> PFOState:
+    mdl = dcfg.model_axis
+    ex = _abstract_state(dcfg)
+
+    def s0(_):
+        return P(mdl)
+
+    return PFOState(
+        lsh_forest=jax.tree.map(s0, ex.lsh_forest),
+        main_forest=jax.tree.map(s0, ex.main_forest),
+        store=jax.tree.map(s0, ex.store),
+        lsh_snaps=jax.tree.map(s0, ex.lsh_snaps),
+        main_snaps=jax.tree.map(s0, ex.main_snaps),
+        tombstones=P(), n_tombstones=P(), stamp=P(),
+        proj=jax.tree.map(lambda _: P(), ex.proj),
+    )
+
+
+def dist_init_state(dcfg: DistConfig, key: jax.Array, mesh: Mesh) -> PFOState:
+    """Materialize the distributed state with its NamedShardings."""
+    cfg = dcfg.pfo
+    snap_cfg = shard_snap_cfg(dcfg)
+    msnap_cfg = shard_main_snap_cfg(dcfg)
+    st = PFOState(
+        lsh_forest=init_forest(lsh_tree_config(cfg), cfg.L * cfg.n_trees),
+        main_forest=init_forest(main_tree_config(cfg), cfg.main_n_trees),
+        store=jax.vmap(
+            lambda _: dense_init(cfg.store_capacity // dcfg.n_model,
+                                 cfg.dim))(jnp.arange(dcfg.n_model)),
+        lsh_snaps=jax.vmap(lambda _: snap_mod.init_snapshots(snap_cfg))(
+            jnp.arange(dcfg.n_model)),
+        main_snaps=jax.vmap(lambda _: snap_mod.init_snapshots(msnap_cfg))(
+            jnp.arange(dcfg.n_model)),
+        tombstones=jnp.full((1024,), -1, jnp.int32),
+        n_tombstones=jnp.int32(0),
+        stamp=jnp.int32(0),
+        proj=make_projections(key, cfg),
+    )
+    specs = state_pspecs(dcfg)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), st, specs)
+
+
+def _batch_spec(dcfg: DistConfig) -> P:
+    axes = dcfg.batch_axes
+    return P(axes if len(axes) > 1 else axes[0])
+
+
+def _dedup_topk(pid: jax.Array, pd: jax.Array, k: int):
+    """Top-k by distance with id dedupe (flat (N,) id/dist arrays)."""
+    neg, idx = jax.lax.top_k(-pd, min(2 * k, pd.shape[0]))
+    ii = pid[idx]
+    same = ii[:, None] == ii[None, :]
+    dup = jnp.tril(same, -1).any(axis=1) & (ii >= 0)
+    dd = jnp.where(dup, jnp.inf, -neg)
+    neg2, idx2 = jax.lax.top_k(-dd, k)
+    out_ids = jnp.where(jnp.isfinite(-neg2), ii[idx2], -1)
+    return out_ids, -neg2
+
+
+# ======================================================================
+# query
+# ======================================================================
+def make_dist_query(dcfg: DistConfig, mesh: Mesh, k: int):
+    """Jitted distributed query: (Q_global, d) -> ids/dists (Q_global, k)."""
+    cfg = dcfg.pfo
+    mdl = dcfg.model_axis
+    tcfg = lsh_tree_config(cfg)
+    mcfg = main_tree_config(cfg)
+    tps = dcfg.trees_per_shard
+    mtps = dcfg.main_trees_per_shard
+    snap_cfg = shard_snap_cfg(dcfg)
+    msnap_cfg = shard_main_snap_cfg(dcfg)
+    S = dcfg.n_model
+
+    def local_fn(state: PFOState, qvecs: jax.Array):
+        me = jax.lax.axis_index(mdl)
+        ql = qvecs.shape[0]
+        h = kops.lsh_hash(qvecs, state.proj["table_proj"], cfg.M)   # (q, L)
+        region = region_ids(h, state.proj["part_proj"], cfg)
+        off = jnp.arange(cfg.L, dtype=jnp.int32)[None] * cfg.n_trees
+        gtree = region + off
+
+        h_all = jax.lax.all_gather(h, mdl, tiled=True)              # (Qr, L)
+        t_all = jax.lax.all_gather(gtree, mdl, tiled=True)
+        q_all = jax.lax.all_gather(qvecs, mdl, tiled=True)          # (Qr, d)
+        qr = h_all.shape[0]
+
+        # --- probe owned hot trees --------------------------------
+        flat_t = t_all.reshape(-1)
+        flat_h = h_all.reshape(-1)
+        mine = (flat_t >= me * tps) & (flat_t < (me + 1) * tps)
+        local_t = jnp.where(mine, flat_t - me * tps, 0)
+        ids, _, _ = forest_query(state.lsh_forest, local_t, flat_h, tcfg)
+        hot = jnp.where(mine[:, None], ids, -1).reshape(qr, -1)
+
+        # --- probe local sealed segments ---------------------------
+        snaps = jax.tree.map(lambda a: a[0], state.lsh_snaps)
+        scands = []
+        for tl in range(cfg.L):
+            s, _ = snap_mod.probe(snaps, h_all[:, tl], snap_cfg)
+            scands.append(s)
+        sealed = jnp.concatenate(scands, axis=1)
+        cand = jnp.concatenate([hot, sealed], axis=1)
+
+        # --- dedupe, truncate to per-shard budget -------------------
+        skey = jnp.where(cand >= 0, cand, INT_MAX)
+        skey = jnp.sort(skey, axis=1)
+        dup = jnp.concatenate([jnp.zeros((qr, 1), bool),
+                               skey[:, 1:] == skey[:, :-1]], axis=1)
+        uniq = jnp.sort(jnp.where(dup, INT_MAX, skey), axis=1)
+        budget = min(max(cfg.max_candidates_total // S, k), uniq.shape[1])
+        cids = jnp.where(uniq[:, :budget] == INT_MAX, -1, uniq[:, :budget])
+
+        # --- route candidates to murmur owners ----------------------
+        flat_c = cids.reshape(-1)
+        _, mtree = main_table_keys(flat_c, cfg)
+        owner = jnp.where(flat_c >= 0, mtree // mtps, -1)
+        qidx = jnp.repeat(jnp.arange(qr, dtype=jnp.int32), budget)
+        payload = jnp.stack([flat_c, qidx], axis=1)
+        K = flat_c.shape[0] // S + budget
+        mbox, _ = dispatch_to_trees(owner, S, K)
+        (buf,) = gather_mailbox(mbox, payload)                      # (S,K,2)
+        valid = mbox >= 0
+        recv = jax.lax.all_to_all(buf, mdl, split_axis=0, concat_axis=0,
+                                  tiled=True).reshape(-1, 2)
+        rvalid = jax.lax.all_to_all(valid, mdl, split_axis=0, concat_axis=0,
+                                    tiled=True).reshape(-1)
+        rid = jnp.where(rvalid, recv[:, 0], -1)
+        rq = jnp.clip(recv[:, 1], 0, qr - 1)
+
+        # --- owner-side lookup + rank --------------------------------
+        rh, rtree = main_table_keys(rid, cfg)
+        rlocal = jnp.clip(rtree - me * mtps, 0, mtps - 1)
+        slot, found = forest_lookup(state.main_forest, rlocal, rh, rid, mcfg)
+        msnaps = jax.tree.map(lambda a: a[0], state.main_snaps)
+        sval, sfound = jax.vmap(
+            lambda hh, ii: snap_mod.lookup_exact(msnaps, hh, ii,
+                                                 msnap_cfg))(rh, rid)
+        slot = jnp.where(found, slot, jnp.where(sfound, sval, -1))
+        ok = rvalid & (rid >= 0) & (slot >= 0)
+        store_l = jax.tree.map(lambda a: a[0], state.store)
+        vecs = dense_read(store_l, jnp.where(ok, slot, 0))
+        d = kops.pairwise_rank(q_all[rq], vecs[:, None, :], ok[:, None],
+                               cfg.metric)[:, 0]
+
+        # --- return partials, combine row-wide -----------------------
+        back = jnp.stack([rid.astype(jnp.float32),
+                          rq.astype(jnp.float32), d], axis=1)
+        part = jax.lax.all_to_all(back.reshape(S, -1, 3), mdl,
+                                  split_axis=0, concat_axis=0,
+                                  tiled=True).reshape(-1, 3)
+        allp = jax.lax.all_gather(part, mdl, tiled=True)
+        pid = allp[:, 0].astype(jnp.int32)
+        pq = allp[:, 1].astype(jnp.int32)
+        pd = jnp.where(jnp.isfinite(allp[:, 2]) & (pid >= 0),
+                       allp[:, 2], jnp.inf)
+
+        my_rows = me * ql + jnp.arange(ql)
+
+        def topk_for(row):
+            dd = jnp.where(pq == row, pd, jnp.inf)
+            return _dedup_topk(pid, dd, k)
+
+        return jax.vmap(topk_for)(my_rows)
+
+    fn = jax.shard_map(local_fn, mesh=mesh,
+                       in_specs=(state_pspecs(dcfg), _batch_spec(dcfg)),
+                       out_specs=(_batch_spec(dcfg), _batch_spec(dcfg)),
+                       check_vma=False)
+    return jax.jit(fn)
+
+
+# ======================================================================
+# insert
+# ======================================================================
+def make_dist_insert(dcfg: DistConfig, mesh: Mesh, capacity: int):
+    """Jitted distributed insert round: (state, ids, vecs, active) ->
+    (state, pending)."""
+    cfg = dcfg.pfo
+    mdl = dcfg.model_axis
+    tcfg = lsh_tree_config(cfg)
+    mcfg = main_tree_config(cfg)
+    tps = dcfg.trees_per_shard
+    mtps = dcfg.main_trees_per_shard
+    S = dcfg.n_model
+
+    def local_fn(state: PFOState, ids: jax.Array, vecs: jax.Array,
+                 active: jax.Array):
+        n = ids.shape[0]
+        h = kops.lsh_hash(vecs, state.proj["table_proj"], cfg.M)
+        region = region_ids(h, state.proj["part_proj"], cfg)
+        off = jnp.arange(cfg.L, dtype=jnp.int32)[None] * cfg.n_trees
+        gtree = region + off
+
+        # --- LSH entries -> tree owners ------------------------------
+        flat_t = jnp.where(jnp.repeat(active, cfg.L), gtree.reshape(-1), -1)
+        flat_h = h.reshape(-1)
+        flat_id = jnp.repeat(ids, cfg.L)
+        dest = jnp.where(flat_t >= 0, flat_t // tps, -1)
+        payload = jnp.stack([flat_h.astype(jnp.int32), flat_id,
+                             jnp.where(flat_t >= 0, flat_t % tps, -1)],
+                            axis=1)
+        mbox, ovf = dispatch_to_trees(dest, S, capacity)
+        (buf,) = gather_mailbox(mbox, payload)
+        valid = mbox >= 0
+        recv = jax.lax.all_to_all(buf, mdl, split_axis=0, concat_axis=0,
+                                  tiled=True).reshape(-1, 3)
+        rvalid = jax.lax.all_to_all(valid, mdl, split_axis=0,
+                                    concat_axis=0, tiled=True).reshape(-1)
+        rh = recv[:, 0].astype(jnp.uint32)
+        rid = jnp.where(rvalid, recv[:, 1], -1)
+        rtree = jnp.where(rvalid, recv[:, 2], -1)
+
+        # receive-side mailboxes sized so nothing routed can drop
+        lbox, _ = dispatch_to_trees(rtree, tps, S * capacity)
+        (lh_g,) = gather_mailbox(lbox, rh)
+        lid_g = mailbox_ids(lbox, rid)
+        lsh_forest = forest_insert_dispatched(state.lsh_forest, lh_g,
+                                              lid_g, lid_g, tcfg)
+
+        # --- MainTable rows -> murmur owners --------------------------
+        mh, mtree = main_table_keys(ids, cfg)
+        mdest = jnp.where(active, mtree // mtps, -1)
+        mpay = jnp.concatenate([ids[:, None].astype(jnp.float32), vecs],
+                               axis=1)
+        mbox2, movf = dispatch_to_trees(mdest, S, capacity)
+        (mbuf,) = gather_mailbox(mbox2, mpay)
+        mvalid = mbox2 >= 0
+        mrecv = jax.lax.all_to_all(mbuf, mdl, split_axis=0, concat_axis=0,
+                                   tiled=True).reshape(-1, 1 + cfg.dim)
+        mrv = jax.lax.all_to_all(mvalid, mdl, split_axis=0, concat_axis=0,
+                                 tiled=True).reshape(-1)
+        rids = jnp.where(mrv, mrecv[:, 0].astype(jnp.int32), -1)
+        rvecs = mrecv[:, 1:]
+        store_l = jax.tree.map(lambda a: a[0], state.store)
+        store_l, slots, _ = dense_alloc(store_l, rvecs, rids >= 0)
+        store = jax.tree.map(lambda a: a[None, ...], store_l)
+        rh2, rtree2 = main_table_keys(rids, cfg)
+        rlocal2 = jnp.where(rids >= 0, rtree2 % mtps, -1)
+        mbox3, _ = dispatch_to_trees(rlocal2, mtps, S * capacity)
+        (mh_g,) = gather_mailbox(mbox3, rh2)
+        mid_g = mailbox_ids(mbox3, rids)
+        (mval_g,) = gather_mailbox(mbox3, slots)
+        main_forest = forest_insert_dispatched(state.main_forest, mh_g,
+                                               mid_g, mval_g, mcfg)
+
+        state = state._replace(lsh_forest=lsh_forest,
+                               main_forest=main_forest, store=store)
+        pending = active & (jnp.any(ovf.reshape(n, cfg.L), axis=1) | movf)
+        return state, pending
+
+    fn = jax.shard_map(local_fn, mesh=mesh,
+                       in_specs=(state_pspecs(dcfg), _batch_spec(dcfg),
+                                 _batch_spec(dcfg), _batch_spec(dcfg)),
+                       out_specs=(state_pspecs(dcfg), _batch_spec(dcfg)),
+                       check_vma=False)
+    return jax.jit(fn)

@@ -1,0 +1,391 @@
+"""Adaptive hash tree (paper §5.1), array-encoded for SPMD execution.
+
+The paper's tree is a pointer structure in manually-managed off-heap
+memory: non-leaf (directory) nodes are integer arrays of length ``l``
+whose slots hold offsets of either a leaf chain or a child node; leaves
+are (KEY, VALUE, NEXT) records.  Inserts consume ``log2(l)`` key bits
+per level, chain into a slot, and when more than ``t`` leaves share a
+slot they are *spread* one level down — a strictly local rewrite, never
+a B-Tree-style upward rebalance (reconstruction-free, §5).
+
+TPU adaptation: the off-heap segments become pre-allocated int32/uint32
+arrays (structure-of-arrays) and offsets become indices; traversal is a
+``lax.while_loop`` over gathers, and the single-writer actor discipline
+becomes *sequential application within a tree* (``lax.scan``) combined
+with *parallelism across trees* (``vmap`` / ``shard_map``) — see
+``dispatch.py``.
+
+Slot encoding (int32):
+    0   -> empty
+    v>0 -> head of leaf chain at leaf index v-1
+    v<0 -> child directory node at node index -v-1
+
+Leaf ``next`` uses the same "v>0 == leaf v-1, 0 == end" encoding, and
+doubles as the free-list link for reclaimed leaves (paper §3.2.1's
+RECLAIMED_LIST, single size class here — the size-classed variant lives
+in ``store.py`` where records really are variable-sized).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .lsh import key_bits
+
+
+class TreeConfig(NamedTuple):
+    """Static traversal parameters (hashable; safe as a jit static arg)."""
+    skip_bits: int      # bits consumed before the tree (m for LSHTables)
+    log2_l: int         # bits per level
+    l: int              # slots per directory node
+    t: int              # spread threshold
+    max_depth: int      # directory levels available
+    max_nodes: int
+    max_leaves: int
+    max_candidates: int  # leaves returned per probe
+    # beyond-paper (EXPERIMENTS.md §Paper-figures): when the landing
+    # bucket holds fewer than max_candidates leaves, also harvest the
+    # landing node's sibling slots in Gray-adjacent order — a
+    # multi-probe pass confined to one directory node.
+    sibling_probe: bool = False
+
+
+class TreeState(NamedTuple):
+    """One hash tree's arena. vmap a leading axis for a forest."""
+    slots: jax.Array      # i32 (max_nodes, l)
+    leaf_key: jax.Array   # u32 (max_leaves,)
+    leaf_id: jax.Array    # i32 (max_leaves,)  vector id; -1 == invalid
+    leaf_val: jax.Array   # i32 (max_leaves,)  payload (store slot / id)
+    leaf_next: jax.Array  # i32 (max_leaves,)
+    node_cnt: jax.Array   # i32 () allocated directory nodes (>=1: root)
+    leaf_cnt: jax.Array   # i32 () bump cursor
+    free_head: jax.Array  # i32 () leaf free-list head (slot encoding)
+    n_items: jax.Array    # i32 () live leaves
+    overflow: jax.Array   # i32 () arena-exhaustion events (observability)
+
+
+def init_tree(cfg: TreeConfig) -> TreeState:
+    return TreeState(
+        slots=jnp.zeros((cfg.max_nodes, cfg.l), jnp.int32),
+        leaf_key=jnp.zeros((cfg.max_leaves,), jnp.uint32),
+        leaf_id=jnp.full((cfg.max_leaves,), -1, jnp.int32),
+        leaf_val=jnp.zeros((cfg.max_leaves,), jnp.int32),
+        leaf_next=jnp.zeros((cfg.max_leaves,), jnp.int32),
+        node_cnt=jnp.int32(1),
+        leaf_cnt=jnp.int32(0),
+        free_head=jnp.int32(0),
+        n_items=jnp.int32(0),
+        overflow=jnp.int32(0),
+    )
+
+
+def init_forest(cfg: TreeConfig, n_trees: int) -> TreeState:
+    """Stacked arenas: every field gains a leading (n_trees,) axis."""
+    one = init_tree(cfg)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_trees, *x.shape)).copy(), one)
+
+
+# ----------------------------------------------------------------------
+# traversal
+# ----------------------------------------------------------------------
+def _descend(st: TreeState, h: jax.Array, cfg: TreeConfig):
+    """Walk directory nodes until the slot holds a leaf chain or is empty.
+
+    Returns (node, depth, slot_idx, slot_val).
+    """
+    def cond(c):
+        _, _, _, v = c
+        return v < 0
+
+    def body(c):
+        node, depth, _, v = c
+        node = -v - 1
+        depth = depth + 1
+        sl = key_bits(h, cfg.skip_bits + depth * cfg.log2_l, cfg.log2_l)
+        return node, depth, sl, st.slots[node, sl]
+
+    sl0 = key_bits(h, cfg.skip_bits, cfg.log2_l)
+    init = (jnp.int32(0), jnp.int32(0), sl0, st.slots[0, sl0])
+    return jax.lax.while_loop(cond, body, init)
+
+
+def _chain_len(st: TreeState, head: jax.Array, cap: jax.Array) -> jax.Array:
+    """Length of a leaf chain, counting at most ``cap`` (enough for >t test)."""
+    def cond(c):
+        cur, n = c
+        return (cur > 0) & (n < cap)
+
+    def body(c):
+        cur, n = c
+        return st.leaf_next[cur - 1], n + 1
+
+    _, n = jax.lax.while_loop(cond, body, (head, jnp.int32(0)))
+    return n
+
+
+def _alloc_leaf(st: TreeState):
+    """Pop the free list, else bump the cursor. Returns (state, idx, ok)."""
+    use_free = st.free_head > 0
+    free_idx = st.free_head - 1
+    bump_ok = st.leaf_cnt < st.leaf_key.shape[0]
+    idx = jnp.where(use_free, free_idx, st.leaf_cnt)
+    ok = use_free | bump_ok
+    new_free = jnp.where(use_free, st.leaf_next[free_idx], st.free_head)
+    new_cnt = jnp.where(use_free | ~bump_ok, st.leaf_cnt, st.leaf_cnt + 1)
+    st = st._replace(free_head=jnp.where(ok, new_free, st.free_head),
+                     leaf_cnt=new_cnt)
+    return st, jnp.where(ok, idx, 0), ok
+
+
+# ----------------------------------------------------------------------
+# insert (paper §5.1 steps 1-4)
+# ----------------------------------------------------------------------
+def tree_insert(st: TreeState, h: jax.Array, vid: jax.Array,
+                val: jax.Array, cfg: TreeConfig) -> TreeState:
+    """Insert one (key, id, value) record; spreads the bucket if > t."""
+    node, depth, sl, v = _descend(st, h, cfg)
+
+    st, new_leaf, ok = _alloc_leaf(st)
+
+    # Step 2/3: prepend to the chain (v >= 0 here: empty or chain head).
+    st2 = st._replace(
+        leaf_key=st.leaf_key.at[new_leaf].set(h.astype(jnp.uint32)),
+        leaf_id=st.leaf_id.at[new_leaf].set(vid),
+        leaf_val=st.leaf_val.at[new_leaf].set(val),
+        leaf_next=st.leaf_next.at[new_leaf].set(v),
+        n_items=st.n_items + 1,
+    )
+    st2 = st2._replace(slots=st2.slots.at[node, sl].set(new_leaf + 1))
+
+    # Step 4: spread the bucket to the next level when it exceeds t and
+    # unconsumed key bits remain and a directory node can be allocated.
+    head = new_leaf + 1
+    clen = _chain_len(st2, head, jnp.int32(cfg.t + 1))
+    can_deepen = depth + 1 < cfg.max_depth
+    can_alloc = st2.node_cnt < cfg.max_nodes
+    do_split = (clen > cfg.t) & can_deepen & can_alloc
+
+    def split(s: TreeState) -> TreeState:
+        nn = s.node_cnt                       # new directory node index
+        s = s._replace(node_cnt=s.node_cnt + 1)
+
+        def body(c):
+            s, cur = c
+            leaf = cur - 1
+            nxt = s.leaf_next[leaf]
+            child_sl = key_bits(s.leaf_key[leaf],
+                                cfg.skip_bits + (depth + 1) * cfg.log2_l,
+                                cfg.log2_l)
+            s = s._replace(
+                leaf_next=s.leaf_next.at[leaf].set(s.slots[nn, child_sl]),
+                slots=s.slots.at[nn, child_sl].set(cur),
+            )
+            return s, nxt
+
+        s, _ = jax.lax.while_loop(lambda c: c[1] > 0, body, (s, head))
+        return s._replace(slots=s.slots.at[node, sl].set(-(nn + 1)))
+
+    st2 = jax.lax.cond(do_split, split, lambda s: s, st2)
+
+    # Arena exhaustion: drop the record, count the overflow (the host
+    # seals the partition into a snapshot and retries — see index.py).
+    out = jax.tree.map(lambda a, b: jnp.where(ok, a, b), st2,
+                       st._replace(overflow=st.overflow + 1,
+                                   n_items=st.n_items))
+    return out
+
+
+# ----------------------------------------------------------------------
+# query (paper: same walk; returns the resident leaf chain as A(q))
+# ----------------------------------------------------------------------
+def tree_query(st: TreeState, h: jax.Array, cfg: TreeConfig):
+    """Probe with key ``h``: (ids, vals, count) — padded with -1.
+
+    Lands on the bucket addressed by successive log2(l)-bit digits of
+    ``h`` and returns its leaf chain (the paper's A(q) contribution from
+    this tree).
+    """
+    node, _, sl, v = _descend(st, h, cfg)
+
+    ids = jnp.full((cfg.max_candidates,), -1, jnp.int32)
+    vals = jnp.full((cfg.max_candidates,), -1, jnp.int32)
+
+    def chain_body(c):
+        ids, vals, cur, n = c
+        leaf = cur - 1
+        ids = ids.at[n].set(st.leaf_id[leaf])
+        vals = vals.at[n].set(st.leaf_val[leaf])
+        return ids, vals, st.leaf_next[leaf], n + 1
+
+    def chain_cond(c):
+        _, _, cur, n = c
+        return (cur > 0) & (n < cfg.max_candidates)
+
+    ids, vals, _, n = jax.lax.while_loop(
+        chain_cond, chain_body, (ids, vals, jnp.where(v > 0, v, 0),
+                                 jnp.int32(0)))
+
+    if cfg.sibling_probe:
+        # sibling slots of the landing node, nearest key-distance
+        # first (xor-ordered), leaf chains only (children skipped)
+        def sib_body(j, c):
+            ids, vals, n = c
+            sl2 = sl ^ jnp.int32(j)
+            v2 = st.slots[node, sl2]
+
+            def walk(c2):
+                ids, vals, cur, n = c2
+                leaf = cur - 1
+                ids = ids.at[n].set(st.leaf_id[leaf])
+                vals = vals.at[n].set(st.leaf_val[leaf])
+                return ids, vals, st.leaf_next[leaf], n + 1
+
+            ids, vals, _, n = jax.lax.while_loop(
+                chain_cond, walk,
+                (ids, vals, jnp.where(v2 > 0, v2, 0), n))
+            return ids, vals, n
+
+        ids, vals, n = jax.lax.fori_loop(1, cfg.l, sib_body,
+                                         (ids, vals, n))
+    return ids, vals, n
+
+
+def tree_lookup(st: TreeState, h: jax.Array, vid: jax.Array, cfg: TreeConfig):
+    """Exact-id lookup within the bucket chain (MainTable read path).
+
+    Returns (val, found) for the *newest* record with leaf_id == vid.
+    Newest wins because inserts prepend (paper §3.2.1 update semantics:
+    a new version is written and the index repointed).
+    """
+    _, _, _, v = _descend(st, h, cfg)
+
+    def body(c):
+        cur, val, found = c
+        leaf = cur - 1
+        hit = (~found) & (st.leaf_id[leaf] == vid)
+        val = jnp.where(hit, st.leaf_val[leaf], val)
+        return st.leaf_next[leaf], val, found | hit
+
+    def cond(c):
+        cur, _, found = c
+        return (cur > 0) & (~found)
+
+    _, val, found = jax.lax.while_loop(
+        cond, body, (jnp.where(v > 0, v, 0), jnp.int32(-1), jnp.bool_(False)))
+    return val, found
+
+
+# ----------------------------------------------------------------------
+# delete / unlink (reclaims the leaf onto the free list)
+# ----------------------------------------------------------------------
+def tree_delete(st: TreeState, h: jax.Array, vid: jax.Array,
+                cfg: TreeConfig) -> tuple[TreeState, jax.Array]:
+    """Unlink the newest record with id ``vid`` under key ``h``.
+
+    Returns (state, found).  The freed leaf is pushed on the free list;
+    directory nodes are never reclaimed (matching the paper: spreads are
+    one-way; the structure is reconstruction-free, and node arenas reset
+    wholesale when a partition seals into a snapshot).
+    """
+    node, depth, sl, v = _descend(st, h, cfg)
+
+    # Find the leaf and its predecessor in the chain.
+    def body(c):
+        cur, prev, target, tprev, found = c
+        leaf = cur - 1
+        hit = (~found) & (st.leaf_id[leaf] == vid)
+        target = jnp.where(hit, cur, target)
+        tprev = jnp.where(hit, prev, tprev)
+        return st.leaf_next[leaf], cur, target, tprev, found | hit
+
+    def cond(c):
+        cur, _, _, _, found = c
+        return (cur > 0) & (~found)
+
+    head = jnp.where(v > 0, v, 0)
+    _, _, target, tprev, found = jax.lax.while_loop(
+        cond, body, (head, jnp.int32(0), jnp.int32(0), jnp.int32(0),
+                     jnp.bool_(False)))
+
+    def unlink(s: TreeState) -> TreeState:
+        leaf = target - 1
+        nxt = s.leaf_next[leaf]
+        # head removal repoints the slot; mid removal repoints predecessor
+        s = jax.lax.cond(
+            tprev == 0,
+            lambda s: s._replace(slots=s.slots.at[node, sl].set(nxt)),
+            lambda s: s._replace(leaf_next=s.leaf_next.at[tprev - 1].set(nxt)),
+            s)
+        return s._replace(
+            leaf_id=s.leaf_id.at[leaf].set(-1),
+            leaf_next=s.leaf_next.at[leaf].set(s.free_head),
+            free_head=target,
+            n_items=s.n_items - 1,
+        )
+
+    st = jax.lax.cond(found, unlink, lambda s: s, st)
+    return st, found
+
+
+# ----------------------------------------------------------------------
+# batched / forest-level wrappers
+# ----------------------------------------------------------------------
+def forest_insert_dispatched(forest: TreeState, per_tree_h: jax.Array,
+                             per_tree_id: jax.Array, per_tree_val: jax.Array,
+                             cfg: TreeConfig) -> TreeState:
+    """Apply pre-dispatched requests: (T, K) arrays, -1 id == padding.
+
+    Each tree consumes its K-slot segment sequentially (the actor's
+    single-writer mailbox, as a scan); trees run in parallel (vmap).
+    """
+    def per_tree(st, hs, vids, vals):
+        def step(st, x):
+            h, vid, val = x
+            st = jax.lax.cond(
+                vid >= 0,
+                lambda s: tree_insert(s, h, vid, val, cfg),
+                lambda s: s, st)
+            return st, ()
+        st, _ = jax.lax.scan(step, st, (hs, vids, vals))
+        return st
+
+    return jax.vmap(per_tree)(forest, per_tree_h, per_tree_id, per_tree_val)
+
+
+def forest_query(forest: TreeState, tree_ids: jax.Array, hs: jax.Array,
+                 cfg: TreeConfig):
+    """Fully-parallel probes: tree_ids/hs (N,) -> ids/vals (N, max_cand)."""
+    def one(tid, h):
+        st = jax.tree.map(lambda a: a[tid], forest)
+        return tree_query(st, h, cfg)
+
+    return jax.vmap(one)(tree_ids, hs)
+
+
+def forest_lookup(forest: TreeState, tree_ids: jax.Array, hs: jax.Array,
+                  vids: jax.Array, cfg: TreeConfig):
+    def one(tid, h, vid):
+        st = jax.tree.map(lambda a: a[tid], forest)
+        return tree_lookup(st, h, vid, cfg)
+
+    return jax.vmap(one)(tree_ids, hs, vids)
+
+
+def forest_delete_dispatched(forest: TreeState, per_tree_h: jax.Array,
+                             per_tree_id: jax.Array,
+                             cfg: TreeConfig) -> TreeState:
+    def per_tree(st, hs, vids):
+        def step(st, x):
+            h, vid = x
+            st = jax.lax.cond(
+                vid >= 0,
+                lambda s: tree_delete(s, h, vid, cfg)[0],
+                lambda s: s, st)
+            return st, ()
+        st, _ = jax.lax.scan(step, st, (hs, vids))
+        return st
+
+    return jax.vmap(per_tree)(forest, per_tree_h, per_tree_id)

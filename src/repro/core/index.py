@@ -1,0 +1,430 @@
+"""PFOIndex — the public API assembling the paper's full system.
+
+Layout (paper §3, Fig. 1): one MainTable (id -> vector, murmur-hashed)
+plus ``L`` LSHTables (compound key -> id).  Every table is a Partitioned
+Hash Forest (§4.1) living in pre-allocated device arrays (the off-heap
+tier); overflowing tables *seal* into read-only snapshot segments with
+Bloom summaries (§3.2.2, the flash tier); queries union hot + sealed
+candidates from all L tables, dedupe, fetch vectors from the MainTable
+store, and exact-rank (§3.1).
+
+Concurrency (§4.2): request batches are dispatched into per-tree
+mailboxes (``dispatch.py``) and applied with tree-level parallelism —
+the actor model's single-writer guarantee, SPMD-style.  The host loop
+re-submits mailbox overflow in rounds and handles seal/merge epochs
+(the paper's maintenance routines).  Arena exhaustion is prevented by
+construction: a round adds at most ``capacity`` leaves and nodes per
+tree, and the host seals whenever the headroom falls below that bound
+(the in-tree overflow counter stays zero; it is asserted in tests).
+
+All L LSH tables are stacked into one forest with global tree ids
+``table * 2^(C+m) + region`` so a single dispatch covers every table.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import snapshots as snap_mod
+from .config import PFOConfig
+from .dispatch import dispatch_to_trees, gather_mailbox, mailbox_ids
+from .hash_tree import (TreeConfig, TreeState, forest_delete_dispatched,
+                        forest_insert_dispatched, forest_lookup, forest_query,
+                        init_forest)
+from .lsh import main_table_keys, make_projections, region_ids
+from .store import (DenseStore, dense_alloc, dense_free, dense_init,
+                    dense_read)
+
+INT_MAX = jnp.int32(2**31 - 1)
+MAX_TOMBSTONES = 1024
+
+
+def lsh_tree_config(cfg: PFOConfig) -> TreeConfig:
+    return TreeConfig(
+        skip_bits=cfg.m, log2_l=cfg.log2_l, l=cfg.l, t=cfg.t,
+        max_depth=cfg.max_depth, max_nodes=cfg.max_nodes_per_tree,
+        max_leaves=cfg.max_leaves_per_tree,
+        max_candidates=cfg.max_candidates_per_probe,
+        sibling_probe=cfg.sibling_probe)
+
+
+def main_tree_config(cfg: PFOConfig) -> TreeConfig:
+    return TreeConfig(
+        skip_bits=cfg.main_m, log2_l=cfg.log2_l, l=cfg.l, t=cfg.t,
+        max_depth=cfg.main_max_depth, max_nodes=cfg.main_max_nodes_per_tree,
+        max_leaves=cfg.main_max_leaves_per_tree,
+        max_candidates=cfg.max_candidates_per_probe)
+
+
+class PFOState(NamedTuple):
+    lsh_forest: TreeState        # leading axis L * 2^(C+m)
+    main_forest: TreeState       # leading axis 2^main_m
+    store: DenseStore
+    lsh_snaps: snap_mod.SnapshotSet   # leading axis L
+    main_snaps: snap_mod.SnapshotSet
+    tombstones: jax.Array        # i32 (MAX_TOMBSTONES,) -1 pad
+    n_tombstones: jax.Array      # i32 ()
+    stamp: jax.Array             # i32 () seal epoch counter
+    proj: dict                   # LSH projection params
+
+
+def _snap_cfg_lsh(cfg: PFOConfig) -> PFOConfig:
+    cap = cfg.n_trees * cfg.max_leaves_per_tree
+    return PFOConfig(**{**cfg.__dict__, "snapshot_capacity": cap})
+
+
+def _snap_cfg_main(cfg: PFOConfig) -> PFOConfig:
+    cap = cfg.main_n_trees * cfg.main_max_leaves_per_tree
+    return PFOConfig(**{**cfg.__dict__, "snapshot_capacity": cap})
+
+
+def init_state(cfg: PFOConfig, key: jax.Array) -> PFOState:
+    lsh_cfg, main_cfg = lsh_tree_config(cfg), main_tree_config(cfg)
+    lsh_snaps = jax.vmap(lambda _: snap_mod.init_snapshots(_snap_cfg_lsh(cfg)))(
+        jnp.arange(cfg.L))
+    return PFOState(
+        lsh_forest=init_forest(lsh_cfg, cfg.L * cfg.n_trees),
+        main_forest=init_forest(main_cfg, cfg.main_n_trees),
+        store=dense_init(cfg.store_capacity, cfg.dim),
+        lsh_snaps=lsh_snaps,
+        main_snaps=snap_mod.init_snapshots(_snap_cfg_main(cfg)),
+        tombstones=jnp.full((MAX_TOMBSTONES,), -1, jnp.int32),
+        n_tombstones=jnp.int32(0),
+        stamp=jnp.int32(0),
+        proj=make_projections(key, cfg),
+    )
+
+
+# ======================================================================
+# jitted pipelines
+# ======================================================================
+def compute_keys(state: PFOState, vecs: jax.Array, cfg: PFOConfig):
+    """(N,d) -> compound keys (N,L) and global tree ids (N,L)."""
+    from repro.kernels import ops as kops
+    h = kops.lsh_hash(vecs, state.proj["table_proj"], cfg.M)     # (N, L)
+    region = region_ids(h, state.proj["part_proj"], cfg)         # (N, L)
+    table_off = jnp.arange(cfg.L, dtype=jnp.int32)[None] * cfg.n_trees
+    return h, region + table_off
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "main_capacity", "lsh_capacity"))
+def insert_step(state: PFOState, ids: jax.Array, vecs: jax.Array,
+                slots_in: jax.Array, main_active: jax.Array,
+                lsh_active: jax.Array, cfg: PFOConfig, main_capacity: int,
+                lsh_capacity: int):
+    """One dispatch round of batched insert.
+
+    ids/vecs: (N,), (N,d).  ``slots_in``: -2 == store slot not yet
+    allocated.  ``main_active`` (N,) / ``lsh_active`` (N*L,) mark
+    requests still pending — tracked per *request* so a retry round
+    never double-inserts entries that already landed.
+    Returns (state, slots, main_pending, lsh_pending).
+    """
+    # --- store allocation (at most once per row) ---------------------
+    need_alloc = (slots_in == -2) & main_active
+    store, new_slots, alloc_ok = dense_alloc(state.store, vecs, need_alloc)
+    slots = jnp.where(need_alloc & alloc_ok, new_slots, slots_in)
+    state = state._replace(store=store)
+    have_slot = slots >= 0
+
+    # re-inserting a previously-deleted id revokes its tombstone (the
+    # fresh hot MainTable entry shadows any stale sealed copies)
+    revived = jnp.isin(state.tombstones, jnp.where(main_active, ids, -1))
+    state = state._replace(
+        tombstones=jnp.where(revived, -1, state.tombstones))
+
+    # --- MainTable insert --------------------------------------------
+    mh, mtree = main_table_keys(ids, cfg)
+    m_req = jnp.where(main_active & have_slot, mtree, -1)
+    mbox, m_ovf = dispatch_to_trees(m_req, cfg.main_n_trees,
+                                    main_capacity)
+    (mh_g,) = gather_mailbox(mbox, mh)
+    mid_g = mailbox_ids(mbox, ids)
+    (mval_g,) = gather_mailbox(mbox, slots)
+    main_forest = forest_insert_dispatched(
+        state.main_forest, mh_g, mid_g, mval_g, main_tree_config(cfg))
+
+    # --- LSHTables insert ---------------------------------------------
+    h, gtrees = compute_keys(state, vecs, cfg)                   # (N, L)
+    flat_h = h.reshape(-1)
+    flat_id = jnp.repeat(ids, cfg.L)
+    l_req = jnp.where(lsh_active & jnp.repeat(have_slot, cfg.L),
+                      gtrees.reshape(-1), -1)
+    lbox, l_ovf = dispatch_to_trees(l_req, cfg.L * cfg.n_trees,
+                                    lsh_capacity)
+    (lh_g,) = gather_mailbox(lbox, flat_h)
+    lid_g = mailbox_ids(lbox, flat_id)
+    lsh_forest = forest_insert_dispatched(
+        state.lsh_forest, lh_g, lid_g, lid_g, lsh_tree_config(cfg))
+
+    state = state._replace(main_forest=main_forest, lsh_forest=lsh_forest)
+
+    main_pending = main_active & (m_ovf | ~have_slot)
+    lsh_pending = lsh_active & (l_ovf | ~jnp.repeat(have_slot, cfg.L))
+    return state, slots, main_pending, lsh_pending
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def seal_step(state: PFOState, cfg: PFOConfig) -> PFOState:
+    """Seal every LSH table + the MainTable into snapshot segments and
+    reset the hot forests (paper §3.2.2)."""
+    stamp = state.stamp + 1
+
+    lf = state.lsh_forest
+    L, T, ML = cfg.L, cfg.n_trees, cfg.max_leaves_per_tree
+    keys = lf.leaf_key.reshape(L, T * ML)
+    ids = lf.leaf_id.reshape(L, T * ML)
+    vals = lf.leaf_val.reshape(L, T * ML)
+    lsh_snaps = jax.vmap(
+        lambda s, k, i, v: snap_mod.seal(s, k, i, v, i >= 0, stamp,
+                                         _snap_cfg_lsh(cfg)))(
+        state.lsh_snaps, keys, ids, vals)
+
+    mf = state.main_forest
+    main_snaps = snap_mod.seal(state.main_snaps, mf.leaf_key.reshape(-1),
+                               mf.leaf_id.reshape(-1),
+                               mf.leaf_val.reshape(-1),
+                               mf.leaf_id.reshape(-1) >= 0, stamp,
+                               _snap_cfg_main(cfg))
+
+    return state._replace(
+        lsh_forest=init_forest(lsh_tree_config(cfg), L * T),
+        main_forest=init_forest(main_tree_config(cfg), cfg.main_n_trees),
+        lsh_snaps=lsh_snaps, main_snaps=main_snaps, stamp=stamp)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def merge_step(state: PFOState, cfg: PFOConfig) -> PFOState:
+    tombs = state.tombstones
+    lsh_snaps = jax.vmap(
+        lambda s: snap_mod.merge(s, _snap_cfg_lsh(cfg), tombs))(
+        state.lsh_snaps)
+    main_snaps = snap_mod.merge(state.main_snaps, _snap_cfg_main(cfg), tombs)
+    return state._replace(
+        lsh_snaps=lsh_snaps, main_snaps=main_snaps,
+        tombstones=jnp.full_like(state.tombstones, -1),
+        n_tombstones=jnp.int32(0))
+
+
+def _main_lookup(state: PFOState, ids: jax.Array, cfg: PFOConfig):
+    """(N,) id -> (slot, found), searching hot forest then sealed tier."""
+    mh, mtree = main_table_keys(ids, cfg)
+    val, found = forest_lookup(state.main_forest, mtree, mh, ids,
+                               main_tree_config(cfg))
+    sval, sfound = jax.vmap(
+        lambda h, i: snap_mod.lookup_exact(state.main_snaps, h, i,
+                                           _snap_cfg_main(cfg)))(mh, ids)
+    slot = jnp.where(found, val, jnp.where(sfound, sval, -1))
+    return slot, found | sfound
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "k"))
+def query_step(state: PFOState, qvecs: jax.Array, cfg: PFOConfig, k: int):
+    """Batched kNN query: (Q,d) -> (ids (Q,k), dists (Q,k)).
+
+    Paper §3.1 read path: hash into every LSHTable, union A(q) from hot
+    trees + sealed segments, dedupe ids, gather vectors via MainTable,
+    exact-rank, top-k.
+    """
+    from repro.kernels import ops as kops
+    q = qvecs.shape[0]
+    h, gtrees = compute_keys(state, qvecs, cfg)                  # (Q, L)
+
+    # hot-tier probes: fully parallel reads
+    flat_ids, _, _ = forest_query(state.lsh_forest, gtrees.reshape(-1),
+                                  h.reshape(-1), lsh_tree_config(cfg))
+    hot = flat_ids.reshape(q, -1)                                # (Q, L*mc)
+
+    # sealed-tier probes, vectorized Bloom-first (newest segments first)
+    def per_table(snaps_l, h_l):
+        cids, _ = snap_mod.probe(snaps_l, h_l, _snap_cfg_lsh(cfg))
+        return cids                                              # (Q, S*B)
+
+    sealed = jax.vmap(per_table, in_axes=(0, 1), out_axes=1)(
+        state.lsh_snaps, h)                                      # (Q, L, S*B)
+    cand = jnp.concatenate([hot, sealed.reshape(q, -1)], axis=1)
+
+    # tombstone filter + dedupe + truncate to the ranking budget
+    dead = jnp.isin(cand, state.tombstones) & (cand >= 0)
+    skey = jnp.where((cand >= 0) & ~dead, cand, INT_MAX)
+    skey = jnp.sort(skey, axis=1)
+    dup = jnp.concatenate(
+        [jnp.zeros((q, 1), bool), skey[:, 1:] == skey[:, :-1]], axis=1)
+    uniq = jnp.sort(jnp.where(dup, INT_MAX, skey), axis=1)
+    uniq = uniq[:, :cfg.max_candidates_total]                    # (Q, Ct)
+    cids = jnp.where(uniq == INT_MAX, -1, uniq)
+
+    # MainTable fetch
+    slot, found = jax.vmap(lambda r: _main_lookup(state, r, cfg))(cids)
+    valid = (cids >= 0) & found & (slot >= 0)
+    vecs = dense_read(state.store, jnp.where(valid, slot, 0))    # (Q,Ct,d)
+
+    # exact re-rank (Pallas kernel path)
+    dists = kops.pairwise_rank(qvecs, vecs, valid, cfg.metric)   # (Q, Ct)
+    neg, idx = jax.lax.top_k(-dists, k)
+    top_ids = jnp.take_along_axis(cids, idx, axis=1)
+    top_d = -neg
+    top_ids = jnp.where(jnp.isfinite(top_d), top_ids, -1)
+    return top_ids, top_d
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "main_capacity", "lsh_capacity"))
+def delete_step(state: PFOState, ids: jax.Array, active: jax.Array,
+                cfg: PFOConfig, main_capacity: int, lsh_capacity: int):
+    """Batched delete: unlink hot entries, free store slots, tombstone
+    sealed copies.  Idempotent per round, so per-row retry is safe.
+    Returns (state, pending)."""
+    slot, found = _main_lookup(state, ids, cfg)
+    ok = active & found & (slot >= 0)
+
+    # re-derive LSH keys from the stored vector
+    vecs = dense_read(state.store, jnp.where(ok, slot, 0))
+    h, gtrees = compute_keys(state, vecs, cfg)
+    flat_tree = jnp.where(jnp.repeat(ok, cfg.L), gtrees.reshape(-1), -1)
+    flat_id = jnp.repeat(ids, cfg.L)
+    lbox, l_ovf = dispatch_to_trees(flat_tree, cfg.L * cfg.n_trees,
+                                    lsh_capacity)
+    (lh_g,) = gather_mailbox(lbox, h.reshape(-1))
+    lid_g = mailbox_ids(lbox, flat_id)
+    lsh_forest = forest_delete_dispatched(state.lsh_forest, lh_g, lid_g,
+                                          lsh_tree_config(cfg))
+
+    mh, mtree = main_table_keys(ids, cfg)
+    mbox, m_ovf = dispatch_to_trees(jnp.where(ok, mtree, -1),
+                                    cfg.main_n_trees, main_capacity)
+    (mh_g,) = gather_mailbox(mbox, mh)
+    mid_g = mailbox_ids(mbox, ids)
+    main_forest = forest_delete_dispatched(state.main_forest, mh_g, mid_g,
+                                           main_tree_config(cfg))
+
+    store = dense_free(state.store, slot, ok)
+
+    # tombstones cover sealed copies
+    want = ok.astype(jnp.int32)
+    rank = jnp.cumsum(want) - want
+    pos = state.n_tombstones + rank
+    fits = ok & (pos < MAX_TOMBSTONES)
+    safe = jnp.where(fits, pos, MAX_TOMBSTONES - 1)
+    tombs = state.tombstones.at[safe].set(
+        jnp.where(fits, ids, state.tombstones[safe]))
+    n_t = jnp.minimum(state.n_tombstones + jnp.sum(want), MAX_TOMBSTONES)
+
+    state = state._replace(lsh_forest=lsh_forest, main_forest=main_forest,
+                           store=store, tombstones=tombs, n_tombstones=n_t)
+    l_row = jnp.any(l_ovf.reshape(-1, cfg.L), axis=1)
+    pending = ok & (l_row | m_ovf)
+    return state, pending
+
+
+# ======================================================================
+# host orchestrator
+# ======================================================================
+class PFOIndex:
+    """Host-side driver: owns the device state, runs dispatch rounds and
+    seal/merge epochs (the paper's maintenance routines)."""
+
+    MAX_ROUNDS = 64
+
+    def __init__(self, cfg: PFOConfig, seed: int = 0):
+        self.cfg = cfg
+        self.state = init_state(cfg, jax.random.PRNGKey(seed))
+        self.n_inserted = 0
+        self.rounds_log: list[int] = []
+
+    # -- capacity heuristics -------------------------------------------
+    def _lsh_capacity(self, n: int) -> int:
+        total = self.cfg.L * self.cfg.n_trees
+        per = (n * self.cfg.L + total - 1) // total
+        return int(max(8, 2 * per))
+
+    def _main_capacity(self, n: int) -> int:
+        per = (n + self.cfg.main_n_trees - 1) // self.cfg.main_n_trees
+        return int(max(8, 2 * per))
+
+    def _maybe_maintain(self, lsh_cap: int, main_cap: int):
+        """Seal before a round could exhaust any arena (see module doc)."""
+        st = self.state
+        leaf_head = int(np.asarray(st.lsh_forest.leaf_cnt).max())
+        node_head = int(np.asarray(st.lsh_forest.node_cnt).max())
+        mleaf = int(np.asarray(st.main_forest.leaf_cnt).max())
+        mnode = int(np.asarray(st.main_forest.node_cnt).max())
+        need_seal = (
+            leaf_head + lsh_cap > self.cfg.max_leaves_per_tree
+            or node_head + lsh_cap > self.cfg.max_nodes_per_tree
+            or mleaf + main_cap > self.cfg.main_max_leaves_per_tree
+            or mnode + main_cap > self.cfg.main_max_nodes_per_tree
+            or leaf_head >= self.cfg.seal_threshold * self.cfg.max_leaves_per_tree
+        )
+        if need_seal:
+            if int(self.state.lsh_snaps.n_snaps[0]) >= self.cfg.max_snapshots - 1:
+                self.state = merge_step(self.state, self.cfg)
+            self.state = seal_step(self.state, self.cfg)
+        if int(self.state.n_tombstones) >= MAX_TOMBSTONES - 64:
+            self.state = merge_step(self.state, self.cfg)
+
+    # -- public API ----------------------------------------------------
+    def insert(self, ids, vecs) -> int:
+        """Insert a batch; returns the number of dispatch rounds used."""
+        ids = jnp.asarray(ids, jnp.int32)
+        vecs = jnp.asarray(vecs, jnp.float32)
+        n = int(ids.shape[0])
+        slots = jnp.full((n,), -2, jnp.int32)
+        main_active = jnp.ones((n,), bool)
+        lsh_active = jnp.ones((n * self.cfg.L,), bool)
+        lcap, mcap = self._lsh_capacity(n), self._main_capacity(n)
+        rounds = 0
+        for _ in range(self.MAX_ROUNDS):
+            self._maybe_maintain(lcap, mcap)
+            self.state, slots, main_active, lsh_active = insert_step(
+                self.state, ids, vecs, slots, main_active, lsh_active,
+                self.cfg, mcap, lcap)
+            rounds += 1
+            if not (bool(jnp.any(main_active)) or bool(jnp.any(lsh_active))):
+                break
+        self.n_inserted += n
+        self.rounds_log.append(rounds)
+        return rounds
+
+    def query(self, qvecs, k: int = 10):
+        qvecs = jnp.asarray(qvecs, jnp.float32)
+        ids, dists = query_step(self.state, qvecs, self.cfg, k)
+        return np.asarray(ids), np.asarray(dists)
+
+    def delete(self, ids) -> int:
+        ids = jnp.asarray(ids, jnp.int32)
+        active = jnp.ones(ids.shape, bool)
+        n = int(ids.shape[0])
+        lcap, mcap = self._lsh_capacity(n), self._main_capacity(n)
+        rounds = 0
+        for _ in range(self.MAX_ROUNDS):
+            self._maybe_maintain(lcap, mcap)
+            self.state, pending = delete_step(self.state, ids, active,
+                                              self.cfg, mcap, lcap)
+            rounds += 1
+            if not bool(jnp.any(pending)):
+                break
+            active = pending
+        return rounds
+
+    def update(self, ids, vecs) -> None:
+        """Online update (paper §5): new version written, old reclaimed."""
+        self.delete(ids)
+        self.insert(ids, vecs)
+
+    def stats(self) -> dict:
+        st = self.state
+        return {
+            "items_hot": int(np.asarray(st.main_forest.n_items).sum()),
+            "lsh_leaves": int(np.asarray(st.lsh_forest.n_items).sum()),
+            "snapshots": int(st.main_snaps.n_snaps),
+            "tombstones": int(st.n_tombstones),
+            "store_free": int(st.store.free_top),
+            "overflow_events": int(np.asarray(st.lsh_forest.overflow).sum()),
+            "stamp": int(st.stamp),
+        }

@@ -1,0 +1,160 @@
+"""Locality-sensitive hashing primitives (paper §2.1, §4.1).
+
+Sign-random-projection (SRP) LSH for angular distance: a compound key of
+``M`` bits is ``sign(a_i . x)`` packed MSB-first into a uint32, one key
+per LSH table.  The *partition level* of PHF re-hashes the compound key
+itself with ``C`` further SRP functions over the key's +-1 bit vector —
+"applying the LSH functions for two times" (paper §4.1, after Layered
+LSH) — so only similar keys share a partition.
+
+MurmurHash3's 32-bit finalizer provides the conflict-minimizing exact
+hash for the MainTable (paper §3.1).
+
+All functions are pure jnp and jit/vmap-safe; the Pallas kernel in
+``repro.kernels.lsh_hash`` implements the (N,d)x(d,L*M) hot path and is
+validated against :func:`hash_vectors` (see kernels/ref.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import PFOConfig
+
+UINT32 = jnp.uint32
+_GOLDEN = jnp.uint32(0x9E3779B9)
+
+
+# ----------------------------------------------------------------------
+# bit helpers — keys are read MSB-first so LLCP (Def. 2) is a prefix.
+# ----------------------------------------------------------------------
+def key_bits(h: jax.Array, start: int | jax.Array, width: int) -> jax.Array:
+    """Extract ``width`` bits of ``h`` starting ``start`` bits from the MSB."""
+    h = h.astype(UINT32)
+    shift = jnp.uint32(32) - jnp.uint32(start) - jnp.uint32(width)
+    mask = jnp.uint32((1 << width) - 1)
+    return ((h >> shift) & mask).astype(jnp.int32)
+
+
+def llcp(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Longest length of common prefix of two uint32 compound keys (Def. 2)."""
+    x = a.astype(UINT32) ^ b.astype(UINT32)
+    # count leading zeros of x; llcp = clz(x); x == 0 -> 32
+    n = jnp.where(x == 0, jnp.int32(32), 31 - jnp.floor(jnp.log2(
+        jnp.maximum(x, 1).astype(jnp.float64 if jax.config.jax_enable_x64
+                                 else jnp.float32))).astype(jnp.int32))
+    return n
+
+
+def llcp_int(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Integer-only leading-zero count (exact; preferred over llcp)."""
+    x = (a.astype(UINT32) ^ b.astype(UINT32))
+    clz = jnp.zeros(x.shape, jnp.int32)
+    done = x == 0
+    clz = jnp.where(done, 32, clz)
+    for sh, w in ((16, 0xFFFF0000), (8, 0xFF000000), (4, 0xF0000000),
+                  (2, 0xC0000000), (1, 0x80000000)):
+        hi = (x & jnp.uint32(w)) == 0
+        add = jnp.where(~done & hi, sh, 0).astype(jnp.int32)
+        clz = clz + add
+        x = jnp.where(~done & hi, x << sh, x)
+    return clz
+
+
+# ----------------------------------------------------------------------
+# murmur3 finalizer (fmix32) — MainTable exact hash (paper §3.1).
+# ----------------------------------------------------------------------
+def murmur3_fmix32(x: jax.Array, seed: int | jax.Array = 0) -> jax.Array:
+    h = x.astype(UINT32) ^ (jnp.uint32(seed) * _GOLDEN)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+# ----------------------------------------------------------------------
+# SRP projection parameters
+# ----------------------------------------------------------------------
+def make_projections(key: jax.Array, cfg: PFOConfig) -> dict:
+    """Random parameters for all L tables + the C partition-level functions.
+
+    Returns a pytree:
+      table_proj : (d, L*M) f32   — compound-key projections, table-major
+      part_proj  : (L, M, C) f32  — partition-level SRP over key bits
+    """
+    k1, k2 = jax.random.split(key)
+    table_proj = jax.random.normal(k1, (cfg.dim, cfg.L * cfg.M), jnp.float32)
+    part_proj = jax.random.normal(k2, (cfg.L, cfg.M, cfg.C), jnp.float32)
+    return {"table_proj": table_proj, "part_proj": part_proj}
+
+
+def pack_bits_msb(bits: jax.Array) -> jax.Array:
+    """Pack (..., 32) {0,1} int32 into uint32, bit 0 -> MSB."""
+    weights = (jnp.uint32(1) << jnp.arange(31, -1, -1, dtype=jnp.uint32))
+    return jnp.sum(bits.astype(UINT32) * weights, axis=-1, dtype=UINT32)
+
+
+def unpack_bits_msb(h: jax.Array, width: int = 32) -> jax.Array:
+    """uint32 -> (..., width) {0,1} int32, MSB first."""
+    shifts = jnp.arange(width - 1, -1, -1, dtype=jnp.uint32)
+    return ((h[..., None].astype(UINT32) >> shifts) & jnp.uint32(1)).astype(jnp.int32)
+
+
+def hash_vectors(x: jax.Array, table_proj: jax.Array, M: int) -> jax.Array:
+    """Compound keys for all tables: (N, d) -> (N, L) uint32.
+
+    Reference path (pure jnp); the Pallas kernel computes the same thing.
+    """
+    n = x.shape[0]
+    proj = x.astype(jnp.float32) @ table_proj            # (N, L*M)
+    bits = (proj >= 0).astype(jnp.int32)
+    bits = bits.reshape(n, -1, M)                        # (N, L, M)
+    return pack_bits_msb(bits)                           # (N, L)
+
+
+def partition_ids(h: jax.Array, part_proj: jax.Array, cfg: PFOConfig) -> jax.Array:
+    """Partition-level re-hash (paper §4.1): C SRP bits over the key bits.
+
+    h: (N, L) uint32 -> (N, L) int32 partition ids in [0, 2^C).
+    """
+    if cfg.C == 0:
+        return jnp.zeros(h.shape, jnp.int32)
+    bits = unpack_bits_msb(h, cfg.M).astype(jnp.float32) * 2.0 - 1.0  # (N,L,M) ±1
+    proj = jnp.einsum("nlm,lmc->nlc", bits, part_proj)                # (N,L,C)
+    pbits = (proj >= 0).astype(jnp.int32)
+    weights = (1 << jnp.arange(cfg.C - 1, -1, -1)).astype(jnp.int32)
+    return jnp.sum(pbits * weights, axis=-1)                          # (N,L)
+
+
+def region_ids(h: jax.Array, part_proj: jax.Array, cfg: PFOConfig) -> jax.Array:
+    """Global region (== hash tree) id in [0, 2^(C+m)): partition<<m | tree.
+
+    The tree-within-partition id is the first m bits of the key (§4.1).
+    """
+    pid = partition_ids(h, part_proj, cfg)
+    tid = key_bits(h, 0, cfg.m)
+    return (pid << cfg.m) | tid
+
+
+def main_table_keys(ids: jax.Array, cfg: PFOConfig) -> tuple[jax.Array, jax.Array]:
+    """MainTable: murmur key + tree id from its first main_m bits (§4.1)."""
+    h = murmur3_fmix32(ids.astype(jnp.uint32))
+    tid = key_bits(h, 0, cfg.main_m)
+    return h, tid
+
+
+def angular_distance(q: jax.Array, x: jax.Array) -> jax.Array:
+    """1 - cosine similarity; matches the sign-SRP family (paper §2.1)."""
+    qn = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
+    xn = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-9)
+    return 1.0 - jnp.sum(qn * xn, axis=-1)
+
+
+def l2_distance(q: jax.Array, x: jax.Array) -> jax.Array:
+    return jnp.sqrt(jnp.maximum(jnp.sum((q - x) ** 2, axis=-1), 0.0))
+
+
+def distance(q: jax.Array, x: jax.Array, metric: str) -> jax.Array:
+    return angular_distance(q, x) if metric == "angular" else l2_distance(q, x)

@@ -1,0 +1,184 @@
+"""Sealed snapshot tier (paper §3.2.2) — the "flash memory" level.
+
+When a hot (HBM-resident) partition fills past its threshold, its live
+entries are *sealed* into an immutable snapshot segment: entries are
+sorted by compound key (a bucket-major, read-friendly layout — the
+paper's Index+Data files), a Bloom filter over the occupied
+``snap_prefix_bits``-bit bucket prefixes is attached, and the hot arena
+resets.  Queries walk snapshots newest-first, probing all Bloom filters
+in one vectorized shot and binary-searching only segments whose filter
+matched.  Updates never touch a sealed segment (write-once ==
+sequential flash writes); staleness is resolved by (a) newest-first
+precedence and (b) periodic *merge compaction* that folds segments
+together dropping superseded/deleted ids.
+
+The snapshot set is a fixed-capacity stacked pytree so the probe path
+is a single jitted program over (S, cap) arrays.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import bloom as bloom_mod
+from .config import PFOConfig
+
+
+class SnapshotSet(NamedTuple):
+    keys: jax.Array     # u32 (S, cap) sorted per segment; pad = 0xFFFFFFFF
+    ids: jax.Array      # i32 (S, cap) vector ids; -1 pad
+    vals: jax.Array     # i32 (S, cap) payloads
+    counts: jax.Array   # i32 (S,) live entries per segment
+    blooms: jax.Array   # u32 (S, W) packed filters
+    n_snaps: jax.Array  # i32 () segments in use (newest == n_snaps-1)
+    stamps: jax.Array   # i32 (S,) seal sequence number S_ij's j
+
+
+_PAD_KEY = jnp.uint32(0xFFFFFFFF)
+
+
+def init_snapshots(cfg: PFOConfig) -> SnapshotSet:
+    S, cap = cfg.max_snapshots, cfg.snapshot_capacity
+    return SnapshotSet(
+        keys=jnp.full((S, cap), _PAD_KEY, jnp.uint32),
+        ids=jnp.full((S, cap), -1, jnp.int32),
+        vals=jnp.zeros((S, cap), jnp.int32),
+        counts=jnp.zeros((S,), jnp.int32),
+        blooms=jnp.zeros((S, cfg.bloom_bits // 32), jnp.uint32),
+        n_snaps=jnp.int32(0),
+        stamps=jnp.zeros((S,), jnp.int32),
+    )
+
+
+def _prefix(keys: jax.Array, bits: int) -> jax.Array:
+    return keys.astype(jnp.uint32) >> jnp.uint32(32 - bits)
+
+
+def seal(snaps: SnapshotSet, keys: jax.Array, ids: jax.Array,
+         vals: jax.Array, mask: jax.Array, stamp: jax.Array,
+         cfg: PFOConfig) -> SnapshotSet:
+    """Seal live hot-tier entries into the next segment.
+
+    keys/ids/vals: flat (N,) arrays with ``mask`` marking live rows;
+    N must be <= snapshot_capacity.  Sorting by key produces the
+    bucket-major read-friendly layout; the Bloom filter is built on the
+    occupied bucket prefixes (paper: "the indices of all non-empty
+    buckets as the keys of Bloom Filters").
+    """
+    cap = cfg.snapshot_capacity
+    n = keys.shape[0]
+    assert n <= cap, f"seal batch {n} exceeds snapshot capacity {cap}"
+    sort_key = jnp.where(mask, keys.astype(jnp.uint32), _PAD_KEY)
+    order = jnp.argsort(sort_key)
+    skeys = sort_key[order]
+    sids = jnp.where(mask[order], ids[order], -1)
+    svals = vals[order]
+    count = jnp.sum(mask.astype(jnp.int32))
+
+    pad = cap - n
+    skeys = jnp.concatenate([skeys, jnp.full((pad,), _PAD_KEY, jnp.uint32)])
+    sids = jnp.concatenate([sids, jnp.full((pad,), -1, jnp.int32)])
+    svals = jnp.concatenate([svals, jnp.zeros((pad,), jnp.int32)])
+
+    filt = bloom_mod.build(_prefix(skeys, cfg.snap_prefix_bits),
+                           cfg.bloom_hashes, cfg.bloom_bits,
+                           mask=sids >= 0)
+
+    s = snaps.n_snaps
+    return snaps._replace(
+        keys=snaps.keys.at[s].set(skeys),
+        ids=snaps.ids.at[s].set(sids),
+        vals=snaps.vals.at[s].set(svals),
+        counts=snaps.counts.at[s].set(count),
+        blooms=snaps.blooms.at[s].set(filt),
+        stamps=snaps.stamps.at[s].set(stamp),
+        n_snaps=s + 1,
+    )
+
+
+def probe(snaps: SnapshotSet, hs: jax.Array, cfg: PFOConfig):
+    """Search every segment for bucket-prefix matches of query keys.
+
+    hs: (N,) uint32 query compound keys.
+    Returns (ids, vals): (N, S * budget) candidate ids (-1 pad), ordered
+    newest-segment-first per query (paper: reversed time order).
+    """
+    S, cap = snaps.keys.shape
+    budget = cfg.snap_budget_per_probe
+    pfx = _prefix(hs, cfg.snap_prefix_bits)                      # (N,)
+
+    # One vectorized Bloom pass across all segments (paper's batching).
+    hit = bloom_mod.contains_multi(snaps.blooms, pfx, cfg.bloom_hashes)  # (S,N)
+    active = (jnp.arange(S)[:, None] < snaps.n_snaps) & hit
+
+    lo_key = (pfx << jnp.uint32(32 - cfg.snap_prefix_bits))
+    hi_key = lo_key + (jnp.uint32(1) << jnp.uint32(32 - cfg.snap_prefix_bits))
+
+    def per_segment(keys_s, ids_s, vals_s, act_s):
+        lo = jnp.searchsorted(keys_s, lo_key)                    # (N,)
+        hi = jnp.searchsorted(keys_s, hi_key)
+        span = jnp.arange(budget)
+        pos = lo[:, None] + span[None, :]                        # (N, B)
+        ok = (pos < hi[:, None]) & act_s[:, None] & (pos < cap)
+        safe = jnp.where(ok, pos, 0)
+        cids = jnp.where(ok, ids_s[safe], -1)
+        cvals = jnp.where(ok, vals_s[safe], -1)
+        return cids, cvals
+
+    cids, cvals = jax.vmap(per_segment)(snaps.keys, snaps.ids, snaps.vals,
+                                        active)                  # (S, N, B)
+    # newest-first ordering along the segment axis
+    rev = jnp.arange(S - 1, -1, -1)
+    cids = jnp.transpose(cids[rev], (1, 0, 2)).reshape(hs.shape[0], -1)
+    cvals = jnp.transpose(cvals[rev], (1, 0, 2)).reshape(hs.shape[0], -1)
+    return cids, cvals
+
+
+def lookup_exact(snaps: SnapshotSet, h: jax.Array, vid: jax.Array,
+                 cfg: PFOConfig):
+    """Exact (key, id) lookup, newest segment first (MainTable path)."""
+    cids, cvals = probe(snaps, h[None], cfg)
+    match = (cids[0] >= 0) & (cids[0] == vid)
+    idx = jnp.argmax(match)                 # first (newest) hit
+    found = jnp.any(match)
+    return jnp.where(found, cvals[0, idx], -1), found
+
+
+def merge(snaps: SnapshotSet, cfg: PFOConfig,
+          deleted_ids: jax.Array | None = None) -> SnapshotSet:
+    """Merge compaction (paper's periodic maintenance): fold all segments
+    into one, newest version of each (key_prefix, id) wins, deleted ids
+    dropped.  Returns a fresh set with a single segment.
+    """
+    S, cap = snaps.keys.shape
+    seg_rank = jnp.broadcast_to(snaps.stamps[:, None], (S, cap))
+    keys = snaps.keys.reshape(-1)
+    ids = snaps.ids.reshape(-1)
+    vals = snaps.vals.reshape(-1)
+    rank = seg_rank.reshape(-1)
+    live = ids >= 0
+    if deleted_ids is not None and deleted_ids.shape[0] > 0:
+        dead = jnp.isin(ids, deleted_ids)
+        live = live & ~dead
+
+    # newest (highest stamp) version of an id wins
+    order = jnp.lexsort((-rank, jnp.where(live, ids, jnp.int32(2**31 - 1))))
+    sids = jnp.where(live[order], ids[order], -1)
+    first_of_id = jnp.concatenate(
+        [jnp.array([True]), sids[1:] != sids[:-1]]) & (sids >= 0)
+
+    keep_keys = jnp.where(first_of_id, keys[order], _PAD_KEY)
+    keep_ids = jnp.where(first_of_id, sids, -1)
+    keep_vals = jnp.where(first_of_id, vals[order], 0)
+
+    merged = init_snapshots(cfg)
+    take = min(cap, keep_keys.shape[0])
+    # Keep at most one segment's worth (overflow counted for observability).
+    korder = jnp.argsort(jnp.where(keep_ids >= 0, jnp.uint32(0), jnp.uint32(1)))
+    keep_keys, keep_ids, keep_vals = (keep_keys[korder][:take],
+                                      keep_ids[korder][:take],
+                                      keep_vals[korder][:take])
+    return seal(merged, keep_keys, keep_ids, keep_vals, keep_ids >= 0,
+                jnp.max(snaps.stamps), cfg)

@@ -1,0 +1,213 @@
+"""Vector stores — the MainTable's Data segment (paper §3.2.1, Fig. 2).
+
+Two faithful embodiments of the paper's off-heap Data segment:
+
+``DenseStore``
+    Fixed-width rows (the LM-embedding fast path): a pre-allocated
+    (capacity, d) array plus a free-list stack.  Allocation pops the
+    stack, reclamation pushes it — O(1) both ways, mirroring the
+    paper's RECLAIMED_LIST discipline with a single size class.
+
+``SparseStore``
+    The paper's compressed sparse record: (size, non-zero indices,
+    non-zero values) with **size-classed free lists** — reclaimed
+    blocks of nnz budget `b` go to class ceil(b / granule) and are
+    reused by future records of compatible size, exactly the
+    RECLAIMED_LIST + (s-16)/2 scheme with the 16-byte granule replaced
+    by an nnz granule.  Oversize records chain blocks (paper: "we chain
+    the memory blocks ... to support the vector whose size is longer
+    than the maximum memory block size").
+
+Both are functional pytrees updated with ``.at[]``; "invalidate +
+reclaim" is an index repoint plus a free-list push, never a compaction
+(compaction happens at snapshot-merge time, §3.2.2).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ======================================================================
+# Dense store
+# ======================================================================
+class DenseStore(NamedTuple):
+    data: jax.Array        # f32 (capacity, d)
+    free_stack: jax.Array  # i32 (capacity,) indices; top grows downward
+    free_top: jax.Array    # i32 () number of free slots on the stack
+    live: jax.Array        # bool (capacity,)
+
+
+def dense_init(capacity: int, dim: int, dtype=jnp.float32) -> DenseStore:
+    return DenseStore(
+        data=jnp.zeros((capacity, dim), dtype),
+        free_stack=jnp.arange(capacity - 1, -1, -1, dtype=jnp.int32),
+        free_top=jnp.int32(capacity),
+        live=jnp.zeros((capacity,), jnp.bool_),
+    )
+
+
+def dense_alloc(st: DenseStore, vecs: jax.Array, mask: jax.Array):
+    """Allocate a slot per masked row and write. Returns (st, slots, ok).
+
+    slots: (N,) int32, -1 where not allocated (masked out or full).
+    """
+    cap = st.data.shape[0]
+    want = mask.astype(jnp.int32)
+    rank = jnp.cumsum(want) - want                    # 0-based alloc rank
+    ok = mask & (rank < st.free_top)
+    pos = st.free_top - 1 - rank                      # stack position
+    slots = jnp.where(ok, st.free_stack[jnp.maximum(pos, 0)], -1)
+    # masked rows park out of bounds: XLA drops OOB scatter updates, so
+    # they can never clobber a live slot (scatter-duplicate hazard).
+    safe = jnp.where(ok, slots, cap)
+    data = st.data.at[safe].set(vecs.astype(st.data.dtype),
+                                mode="drop")
+    live = st.live.at[safe].set(True, mode="drop")
+    taken = jnp.sum(ok.astype(jnp.int32))
+    return st._replace(data=data, live=live,
+                       free_top=st.free_top - taken), slots, ok
+
+
+def dense_free(st: DenseStore, slots: jax.Array, mask: jax.Array) -> DenseStore:
+    """Reclaim slots (push back on the free stack)."""
+    cap = st.data.shape[0]
+    ok = mask & (slots >= 0) & st.live[jnp.maximum(slots, 0)]
+    want = ok.astype(jnp.int32)
+    rank = jnp.cumsum(want) - want
+    pos = jnp.where(ok, st.free_top + rank, cap)      # OOB park (dropped)
+    stack = st.free_stack.at[pos].set(slots, mode="drop")
+    live = st.live.at[jnp.where(ok, slots, cap)].set(False, mode="drop")
+    freed = jnp.sum(want)
+    return st._replace(free_stack=stack, live=live,
+                       free_top=st.free_top + freed)
+
+
+def dense_read(st: DenseStore, slots: jax.Array) -> jax.Array:
+    """Gather rows; slot -1 reads row 0 (callers mask by validity)."""
+    return st.data[jnp.maximum(slots, 0)]
+
+
+# ======================================================================
+# Sparse size-classed store
+# ======================================================================
+class SparseStore(NamedTuple):
+    """Blocks of fixed nnz granule; records chain blocks as needed."""
+    idx: jax.Array         # i32 (n_blocks, granule) feature indices, -1 pad
+    val: jax.Array         # f32 (n_blocks, granule)
+    next_blk: jax.Array    # i32 (n_blocks,) chain: v>0 -> block v-1; 0 end
+    free_head: jax.Array   # i32 () head of block free list (v>0 enc)
+    n_free: jax.Array      # i32 ()
+
+
+def sparse_init(n_blocks: int, granule: int) -> SparseStore:
+    nxt = jnp.arange(2, n_blocks + 2, dtype=jnp.int32)
+    nxt = nxt.at[-1].set(0)                  # last block ends the free list
+    return SparseStore(
+        idx=jnp.full((n_blocks, granule), -1, jnp.int32),
+        val=jnp.zeros((n_blocks, granule), jnp.float32),
+        next_blk=nxt,
+        free_head=jnp.int32(1),
+        n_free=jnp.int32(n_blocks),
+    )
+
+
+def sparse_write(st: SparseStore, indices: jax.Array, values: jax.Array):
+    """Write one sparse record (padded (max_nnz,) arrays, -1 index pads).
+
+    Chains ceil(nnz/granule) blocks from the free list.  Returns
+    (st, head_slot, ok).  head_slot uses the v>0 encoding.
+    """
+    granule = st.idx.shape[1]
+    max_nnz = indices.shape[0]
+    n_chunks = max_nnz // granule
+    assert max_nnz % granule == 0, "pad max_nnz to a granule multiple"
+    nnz = jnp.sum((indices >= 0).astype(jnp.int32))
+    need = jnp.maximum((nnz + granule - 1) // granule, 1)
+
+    def body(c, i):
+        st, prev, head, ok = c
+        use = i < need
+        blk = st.free_head - 1
+        can = use & (st.free_head > 0)
+        chunk_idx = jax.lax.dynamic_slice(indices, (i * granule,), (granule,))
+        chunk_val = jax.lax.dynamic_slice(values, (i * granule,), (granule,))
+        new_free = jnp.where(can, st.next_blk[jnp.maximum(blk, 0)],
+                             st.free_head)
+        st = st._replace(
+            idx=st.idx.at[jnp.maximum(blk, 0)].set(
+                jnp.where(can, chunk_idx, st.idx[jnp.maximum(blk, 0)])),
+            val=st.val.at[jnp.maximum(blk, 0)].set(
+                jnp.where(can, chunk_val, st.val[jnp.maximum(blk, 0)])),
+            free_head=new_free,
+            n_free=st.n_free - can.astype(jnp.int32),
+        )
+        # link prev -> this
+        st = st._replace(next_blk=st.next_blk.at[jnp.maximum(prev - 1, 0)].set(
+            jnp.where(can & (prev > 0), blk + 1,
+                      st.next_blk[jnp.maximum(prev - 1, 0)])))
+        # terminate this block's chain for now
+        st = st._replace(next_blk=st.next_blk.at[jnp.maximum(blk, 0)].set(
+            jnp.where(can, 0, st.next_blk[jnp.maximum(blk, 0)])))
+        head = jnp.where(can & (head == 0), blk + 1, head)
+        prev = jnp.where(can, blk + 1, prev)
+        ok = ok & (can | ~use)
+        return (st, prev, head, ok), ()
+
+    (st, _, head, ok), _ = jax.lax.scan(
+        body, (st, jnp.int32(0), jnp.int32(0), jnp.bool_(True)),
+        jnp.arange(n_chunks))
+    return st, head, ok
+
+
+def sparse_read(st: SparseStore, head: jax.Array, max_nnz: int):
+    """Read a chained record back into padded (max_nnz,) arrays."""
+    granule = st.idx.shape[1]
+    n_chunks = max_nnz // granule
+
+    def body(c, i):
+        cur, idx, val = c
+        blk = cur - 1
+        have = cur > 0
+        chunk_i = jnp.where(have, st.idx[jnp.maximum(blk, 0)], -1)
+        chunk_v = jnp.where(have, st.val[jnp.maximum(blk, 0)], 0.0)
+        idx = jax.lax.dynamic_update_slice(idx, chunk_i, (i * granule,))
+        val = jax.lax.dynamic_update_slice(val, chunk_v, (i * granule,))
+        cur = jnp.where(have, st.next_blk[jnp.maximum(blk, 0)], 0)
+        return (cur, idx, val), ()
+
+    init = (head, jnp.full((max_nnz,), -1, jnp.int32),
+            jnp.zeros((max_nnz,), jnp.float32))
+    (_, idx, val), _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
+    return idx, val
+
+
+def sparse_free(st: SparseStore, head: jax.Array, max_chain: int) -> SparseStore:
+    """Reclaim a record's whole block chain onto the free list."""
+    def body(c, _):
+        st, cur = c
+        blk = cur - 1
+        have = cur > 0
+        nxt = st.next_blk[jnp.maximum(blk, 0)]
+        st = st._replace(
+            next_blk=st.next_blk.at[jnp.maximum(blk, 0)].set(
+                jnp.where(have, st.free_head, nxt)),
+            idx=st.idx.at[jnp.maximum(blk, 0)].set(
+                jnp.where(have, jnp.full_like(st.idx[0], -1),
+                          st.idx[jnp.maximum(blk, 0)])),
+            free_head=jnp.where(have, cur, st.free_head),
+            n_free=st.n_free + have.astype(jnp.int32),
+        )
+        return (st, jnp.where(have, nxt, 0)), ()
+
+    (st, _), _ = jax.lax.scan(body, (st, head), jnp.arange(max_chain))
+    return st
+
+
+def sparse_to_dense(idx: jax.Array, val: jax.Array, dim: int) -> jax.Array:
+    """Decompress one padded sparse record to a dense (dim,) vector."""
+    safe = jnp.where(idx >= 0, idx, dim)
+    out = jnp.zeros((dim + 1,), val.dtype).at[safe].add(val)
+    return out[:dim]

@@ -1,0 +1,3 @@
+from .pipeline import SyntheticLM, VectorStream, make_batch_specs
+
+__all__ = ["SyntheticLM", "VectorStream", "make_batch_specs"]

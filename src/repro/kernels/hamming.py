@@ -1,0 +1,53 @@
+"""Pallas TPU kernel: Hamming distance between packed compound keys.
+
+Def. 2 ranks buckets by key similarity; the multi-probe baseline and
+PHF diagnostics rank stored compound keys against a query key by bit
+difference.  XOR + popcount over uint32 words is pure VPU integer work
+— the kernel exists to keep the (Q, N) sweep in VMEM tiles instead of
+materializing the (Q, N, W) xor tensor XLA would build.
+
+Grid: (Q/bq, N/bn); W (words per key) is small (== L) and kept whole.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _popcount(x: jax.Array) -> jax.Array:
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def _kernel(a_ref, b_ref, out_ref):
+    a = a_ref[...]                    # (bq, W)
+    b = b_ref[...]                    # (bn, W)
+    x = a[:, None, :] ^ b[None, :, :]             # (bq, bn, W)
+    out_ref[...] = jnp.sum(_popcount(x), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bn", "interpret"))
+def hamming_pallas(a: jax.Array, b: jax.Array, *, bq: int = 128,
+                   bn: int = 128, interpret: bool = False) -> jax.Array:
+    """(Q, W) u32 x (N, W) u32 -> (Q, N) i32 bit differences."""
+    nq, w = a.shape
+    n, w2 = b.shape
+    assert w == w2
+    assert nq % bq == 0 and n % bn == 0
+
+    return pl.pallas_call(
+        _kernel,
+        grid=(nq // bq, n // bn),
+        in_specs=[
+            pl.BlockSpec((bq, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, w), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nq, n), jnp.int32),
+        interpret=interpret,
+    )(a.astype(jnp.uint32), b.astype(jnp.uint32))

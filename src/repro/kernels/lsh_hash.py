@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: fused LSH compound-key computation (paper §2.1).
+
+Computes ``pack_bits(sign(X @ A))`` — the hot path of every PFO insert
+and query (both PHF levels re-hash through it).  The matmul rides the
+MXU; sign+bitpack fuse into the epilogue so the (N, P) f32 projection
+matrix never round-trips to HBM — only the packed (N, P/32) uint32 keys
+leave VMEM.  That epilogue fusion is the TPU counterpart of the paper's
+"compute hash values in the computing threads before dispatch" (§4.2):
+hashing is bandwidth-lean, dispatch-ready output.
+
+Grid: (N/bn, P/bp, d/bk), k innermost; an f32 VMEM scratch accumulates
+the (bn, bp) tile across k steps; the final k step signs, packs 32
+columns per uint32 word (MSB-first, matching Def. 2's prefix order) and
+stores the (bn, bp/32) output tile.
+
+Alignment contract: bn % 8 == 0, bp % 128 == 0 (lane width), bk % 128
+== 0; callers pad (see ops.py).  Validated on CPU with interpret=True.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, a_ref, out_ref, acc_ref, *, n_k: int, bp: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], a_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        bits = (acc_ref[...] >= 0.0).astype(jnp.uint32)      # (bn, bp)
+        bn = bits.shape[0]
+        words = bits.reshape(bn, bp // 32, 32)
+        lane = jax.lax.broadcasted_iota(jnp.uint32, (bn, bp // 32, 32), 2)
+        weights = jnp.uint32(1) << (jnp.uint32(31) - lane)
+        out_ref[...] = jnp.sum(words * weights, axis=-1, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bn", "bp", "bk", "interpret"))
+def lsh_hash_pallas(x: jax.Array, a: jax.Array, *, bn: int = 128,
+                    bp: int = 128, bk: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """(N, d) f32 x (d, P) f32 -> (N, P//32) uint32 packed sign keys.
+
+    Requires N % bn == 0, P % bp == 0, d % bk == 0 (ops.py pads).
+    """
+    n, d = x.shape
+    d2, p = a.shape
+    assert d == d2 and p % 32 == 0
+    assert n % bn == 0 and p % bp == 0 and d % bk == 0 and bp % 128 == 0
+    n_k = d // bk
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k, bp=bp),
+        grid=(n // bn, p // bp, n_k),
+        in_specs=[
+            pl.BlockSpec((bn, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bp), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bn, bp // 32), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, p // 32), jnp.uint32),
+        scratch_shapes=[pltpu.VMEM((bn, bp), jnp.float32)],
+        interpret=interpret,
+    )(x, a)

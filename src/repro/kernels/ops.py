@@ -1,0 +1,136 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Responsibilities: shape padding to kernel alignment, interpret-mode
+selection (CPU validates the kernel bodies in Python; TPU compiles
+them), and small epilogues (distance finalize, masking) that don't
+belong in the kernels.  ``REPRO_PALLAS=off`` falls back to the ref.py
+oracles end-to-end, which is also the path the 512-device dry-run uses
+(Pallas does not lower on the host platform).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .hamming import hamming_pallas
+from .lsh_hash import lsh_hash_pallas
+from .pair_dist import pair_dist_pallas
+from .rank_candidates import rank_dots_pallas
+
+
+def _use_pallas() -> bool:
+    return os.environ.get("REPRO_PALLAS", "on") != "off"
+
+
+def _interpret() -> bool:
+    if os.environ.get("REPRO_PALLAS_INTERPRET"):
+        return os.environ["REPRO_PALLAS_INTERPRET"] == "1"
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# ----------------------------------------------------------------------
+def lsh_hash(x: jax.Array, table_proj: jax.Array, M: int = 32) -> jax.Array:
+    """(N, d) -> (N, L) uint32 compound keys (L = P // M columns)."""
+    n, d = x.shape
+    p = table_proj.shape[1]
+    assert p % M == 0 and M == 32
+    if not _use_pallas():
+        return ref.ref_lsh_hash(x, table_proj)
+    bn, bp, bk = 128, 128, 256
+    xp = _pad_to(_pad_to(x, 0, bn), 1, bk)
+    ap = _pad_to(_pad_to(table_proj, 0, bk), 1, bp)
+    out = lsh_hash_pallas(xp, ap, bn=bn, bp=bp, bk=bk,
+                          interpret=_interpret())
+    return out[:n, :p // 32]
+
+
+def rank_dots(q: jax.Array, x: jax.Array) -> jax.Array:
+    """(Q, d) x (Q, C, d) -> (Q, C) inner products."""
+    nq, d = q.shape
+    c = x.shape[1]
+    if not _use_pallas():
+        return ref.ref_rank_dots(q, x)
+    bq, bc, bk = 8, 128, 128
+    qp = _pad_to(_pad_to(q, 0, bq), 1, bk)
+    xp = _pad_to(_pad_to(_pad_to(x, 0, bq), 1, bc), 2, bk)
+    out = rank_dots_pallas(qp, xp, bq=bq, bc=bc, bk=bk,
+                           interpret=_interpret())
+    return out[:nq, :c]
+
+
+def pair_dist_sq(q: jax.Array, x: jax.Array) -> jax.Array:
+    """(Q, d) x (N, d) -> (Q, N) squared L2 distances."""
+    nq, n = q.shape[0], x.shape[0]
+    if not _use_pallas():
+        return ref.ref_pair_dist(q, x)
+    bq, bn, bk = 128, 128, 256
+    qp = _pad_to(_pad_to(q, 0, bq), 1, bk)
+    xp = _pad_to(_pad_to(x, 0, bn), 1, bk)
+    out = pair_dist_pallas(qp, xp, bq=bq, bn=bn, bk=bk,
+                           interpret=_interpret())
+    return out[:nq, :n]
+
+
+def hamming(a: jax.Array, b: jax.Array) -> jax.Array:
+    """(Q, W) u32 x (N, W) u32 -> (Q, N) i32 bit differences."""
+    nq, n = a.shape[0], b.shape[0]
+    if not _use_pallas():
+        return ref.ref_hamming(a, b)
+    bq, bn = 128, 128
+    ap = _pad_to(a, 0, bq)
+    bp = _pad_to(b, 0, bn)
+    out = hamming_pallas(ap, bp, bq=bq, bn=bn, interpret=_interpret())
+    return out[:nq, :n]
+
+
+# ----------------------------------------------------------------------
+# epilogues used by core.index
+# ----------------------------------------------------------------------
+def pairwise_rank(q: jax.Array, cand: jax.Array, valid: jax.Array,
+                  metric: str) -> jax.Array:
+    """Exact re-rank distances: (Q,d), (Q,C,d), (Q,C) -> (Q,C) f32.
+
+    Invalid candidates get +inf so downstream top-k drops them.
+    """
+    if metric == "angular":
+        qn = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
+        xn = cand / jnp.maximum(
+            jnp.linalg.norm(cand, axis=-1, keepdims=True), 1e-9)
+        dots = rank_dots(qn, xn)
+        d = 1.0 - dots
+    else:
+        dots = rank_dots(q, cand)
+        qs = jnp.sum(q * q, axis=-1)[:, None]
+        xs = jnp.sum(cand * cand, axis=-1)
+        d = jnp.maximum(qs + xs - 2.0 * dots, 0.0)
+    return jnp.where(valid, d, jnp.inf)
+
+
+def brute_force_topk(q: jax.Array, x: jax.Array, k: int, metric: str,
+                     valid: jax.Array | None = None):
+    """Oracle kNN over the whole store: (Q,d),(N,d) -> ids,d (Q,k)."""
+    if metric == "angular":
+        qn = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
+        xn = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-9)
+        # for unit vectors |q-x|^2 = 2 - 2 cos => angular = |q-x|^2 / 2
+        d = 0.5 * pair_dist_sq(qn, xn)
+    else:
+        d = pair_dist_sq(q, x)
+    if valid is not None:
+        d = jnp.where(valid[None, :], d, jnp.inf)
+    neg, idx = jax.lax.top_k(-d, k)
+    return idx, -neg

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: all-pairs squared-L2 distance matrix.
+
+The brute-force oracle and the LSB-Tree-style baselines (see
+``core.baselines``) rank *every* stored vector against every query —
+the workload PFO's index exists to avoid (paper §1: "paired comparison
+of similarity in a large dataset is costly").  We still need it fast:
+it defines ground truth for the error-ratio metric (Eq. 1) and the
+speedup denominators in the benchmarks.
+
+dist²(q, x) = |q|² + |x|² − 2 q·x: the q·x term accumulates on the MXU
+across k steps; the final step fuses the norm finalize.  Norms arrive
+precomputed (one fused multiply-add per row, done once outside).
+
+Grid: (Q/bq, N/bn, d/bk), k innermost, f32 VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(q_ref, x_ref, qs_ref, xs_ref, out_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(q_ref[...], x_ref[...].T,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        qs = qs_ref[...]              # (bq, 1)
+        xs = xs_ref[...]              # (1, bn)
+        out_ref[...] = jnp.maximum(qs + xs - 2.0 * acc_ref[...], 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bn", "bk", "interpret"))
+def pair_dist_pallas(q: jax.Array, x: jax.Array, *, bq: int = 128,
+                     bn: int = 128, bk: int = 256,
+                     interpret: bool = False) -> jax.Array:
+    """(Q, d) f32 x (N, d) f32 -> (Q, N) f32 squared L2 distances."""
+    nq, d = q.shape
+    n, d2 = x.shape
+    assert d == d2
+    assert nq % bq == 0 and n % bn == 0 and d % bk == 0
+    n_k = d // bk
+    qs = jnp.sum(q.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    xs = jnp.sum(x.astype(jnp.float32) ** 2, axis=-1)[None, :]
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=(nq // bq, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bq, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bq, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bq, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nq, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bq, bn), jnp.float32)],
+        interpret=interpret,
+    )(q, x, qs, xs)

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: candidate re-ranking dot products (paper §3.1).
+
+After the LSH tables yield A(q), PFO gathers the candidate vectors and
+exact-ranks them against the query.  This kernel computes the (Q, C)
+inner products between each query and *its own* gathered candidate
+block (Q, C, d) — the FLOP-dense heart of the re-rank; ops.py turns
+dots into angular/L2 distances and applies validity masks.
+
+Grid: (Q/bq, C/bc, d/bk), k innermost, f32 VMEM scratch accumulator.
+Per-query batching keeps the MXU fed: the (bq, bc, bk) candidate block
+is contracted against the (bq, bk) query block with a batched dot.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(q_ref, x_ref, out_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...]                    # (bq, bk)
+    x = x_ref[...]                    # (bq, bc, bk)
+    acc_ref[...] += jax.lax.dot_general(
+        x, q, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)      # (bq, bc)
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bc", "bk", "interpret"))
+def rank_dots_pallas(q: jax.Array, x: jax.Array, *, bq: int = 8,
+                     bc: int = 128, bk: int = 128,
+                     interpret: bool = False) -> jax.Array:
+    """(Q, d) f32 x (Q, C, d) f32 -> (Q, C) f32 inner products."""
+    nq, d = q.shape
+    nq2, c, d2 = x.shape
+    assert nq == nq2 and d == d2
+    assert nq % bq == 0 and c % bc == 0 and d % bk == 0
+    n_k = d // bk
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=(nq // bq, c // bc, n_k),
+        in_specs=[
+            pl.BlockSpec((bq, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bq, bc, bk), lambda i, j, k: (i, j, k)),
+        ],
+        out_specs=pl.BlockSpec((bq, bc), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nq, c), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bq, bc), jnp.float32)],
+        interpret=interpret,
+    )(q, x)

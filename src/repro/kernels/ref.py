@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``ref_*`` is the semantic ground truth; kernel tests sweep shapes
+and dtypes asserting ``assert_allclose(kernel(x), ref(x))`` (exact for
+the integer kernels).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_lsh_hash(x: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """(N, d) f32 x (d, P) f32 -> (N, P//32) uint32, sign bits packed
+    MSB-first (column p*32+0 is the MSB of word p)."""
+    n = x.shape[0]
+    proj = x.astype(jnp.float32) @ a.astype(jnp.float32)         # (N, P)
+    bits = (proj >= 0).astype(jnp.uint32)
+    bits = bits.reshape(n, -1, 32)
+    weights = jnp.uint32(1) << jnp.arange(31, -1, -1, dtype=jnp.uint32)
+    return jnp.sum(bits * weights, axis=-1, dtype=jnp.uint32)
+
+
+def ref_rank_dots(q: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """(Q, d) x (Q, C, d) -> (Q, C) f32 inner products."""
+    return jnp.einsum("qd,qcd->qc", q.astype(jnp.float32),
+                      x.astype(jnp.float32))
+
+
+def ref_pair_dist(q: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """(Q, d) x (N, d) -> (Q, N) squared L2 distances."""
+    q = q.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    qs = jnp.sum(q * q, axis=-1)[:, None]
+    xs = jnp.sum(x * x, axis=-1)[None, :]
+    return jnp.maximum(qs + xs - 2.0 * (q @ x.T), 0.0)
+
+
+def ref_hamming(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(Q, W) u32 x (N, W) u32 -> (Q, N) i32 total bit differences."""
+    x = a[:, None, :].astype(jnp.uint32) ^ b[None, :, :].astype(jnp.uint32)
+    # popcount via bit tricks
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    x = (x * jnp.uint32(0x01010101)) >> 24
+    return jnp.sum(x, axis=-1).astype(jnp.int32)

@@ -1,0 +1,299 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first
+# init, and the production meshes below need 512 host placeholders.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each runnable cell (see repro.configs.shapes.runnable_cells):
+  * build the jitted step (train_step / prefill_step / decode_step)
+    with the arch's ShardingPolicy on the target mesh;
+  * ``.lower()`` against ShapeDtypeStruct inputs (zero allocation);
+  * ``.compile()`` — success proves the sharding config is coherent;
+  * record ``memory_analysis()`` (bytes/device), ``cost_analysis()``
+    (FLOPs/bytes) and the collective schedule (bytes per collective
+    op, parsed from the optimized HLO) for §Dry-run / §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm_135m --shape train_4k
+  python -m repro.launch.dryrun --all --mesh single --out dryrun.jsonl
+  python -m repro.launch.dryrun --pfo            # PFO dist steps
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs.shapes import SHAPES, cache_len, input_specs, runnable_cells
+from repro.launch.mesh import make_production_mesh
+from repro.models.registry import build_model
+from repro.optim import AdamWConfig, adamw_init
+from repro.sharding.policy import cache_pspecs, make_policy
+from repro.train.loop import make_train_step
+from repro.serving.engine import make_decode_step, make_prefill_step
+from repro.analysis.hlo import analyze_hlo
+
+# Pallas does not lower on the host platform; the kernels' ref path is
+# numerically identical (kernels/ops.py) and costs the same HLO flops.
+os.environ.setdefault("REPRO_PALLAS", "off")
+
+
+# ----------------------------------------------------------------------
+# collective-byte accounting (for §Roofline): parse optimized HLO
+# ----------------------------------------------------------------------
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)",
+    re.M)
+_SHAPE_RE = re.compile(r"(bf16|f32|f16|f64|s32|u32|s8|u8|pred|s64|u64)"
+                       r"\[([\d,]*)\]")
+_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s32": 4, "u32": 4,
+          "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output bytes of every collective op, by kind."""
+    out: dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        total = 0
+        for sm in _SHAPE_RE.finditer(shape_str):
+            dt, dims = sm.group(1), sm.group(2)
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _BYTES[dt]
+        out[kind] = out.get(kind, 0) + total
+    return out
+
+
+def _first_num(d, *keys, default=0.0):
+    for k in keys:
+        if k in d and d[k]:
+            return float(d[k])
+    return default
+
+
+# ----------------------------------------------------------------------
+def build_cell(arch: str, shape: str, mesh, *, reduced: bool = False,
+               overrides: dict | None = None):
+    """Returns (jitted_fn, example_args_as_SDS) for one cell."""
+    import dataclasses
+    cfg = configs.get_config(arch, reduced=reduced)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    model = build_model(cfg)
+    cell = SHAPES[shape]
+    small_batch = cell.global_batch < int(np.prod(
+        [mesh.devices.shape[mesh.axis_names.index(a)]
+         for a in ("pod", "data") if a in mesh.axis_names]))
+    mode = "train" if cell.kind == "train" else "serve"
+    policy = make_policy(mesh, cfg, mode, param_specs=model.param_specs,
+                         small_batch=small_batch)
+
+    params_sds = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        model.abstract(jnp.bfloat16 if not reduced else jnp.float32),
+        policy.param_shardings(model.param_specs))
+    batch_sds = input_specs(cfg, shape, reduced=reduced)
+    bsh = policy.batch_sharding()
+    batch_sds = {k: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=bsh)
+                 for k, v in batch_sds.items()}
+
+    if cell.kind == "train":
+        opt_cfg = AdamWConfig(
+            use_master=(arch != "deepseek_v2_236b"),
+            grad_dtype=os.environ.get("REPRO_GRAD_DTYPE", "f32"))
+        step = make_train_step(model, policy, opt_cfg, loss_chunk=512)
+        opt_sds = jax.eval_shape(lambda p: adamw_init(opt_cfg, p),
+                                 params_sds)
+        opt_sds = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), opt_sds)
+        return step, (params_sds, opt_sds, batch_sds)
+
+    # serve cells need a cache skeleton with shardings
+    clen = cache_len(shape, reduced)
+    b = batch_sds["tokens"].shape[0]
+    cache_shape = jax.eval_shape(
+        lambda: model.init_cache(b, clen, jnp.bfloat16))
+    cpspecs = cache_pspecs(policy, cfg, cache_shape)
+    from jax.sharding import NamedSharding
+    cache_sds = jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+        cache_shape, cpspecs)
+
+    if cell.kind == "prefill":
+        step = make_prefill_step(model, policy)
+        return step, (params_sds, batch_sds, cache_sds)
+
+    step = make_decode_step(model, policy)
+    tok = jax.ShapeDtypeStruct((b, 1), jnp.int32, sharding=bsh)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return step, (params_sds, tok, cache_sds, pos)
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, *,
+             reduced: bool = False, hlo_dir: str | None = None,
+             overrides: dict | None = None) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec = {"arch": arch, "shape": shape,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if overrides:
+        rec["overrides"] = overrides
+    t0 = time.time()
+    with jax.sharding.set_mesh(mesh):
+        step, args = build_cell(arch, shape, mesh, reduced=reduced,
+                                overrides=overrides)
+        lowered = step.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+    if hlo_dir:
+        import zstandard
+        os.makedirs(hlo_dir, exist_ok=True)
+        fn = f"{arch}_{shape}_{rec['mesh']}.hlo.zst"
+        with open(os.path.join(hlo_dir, fn), "wb") as f:
+            f.write(zstandard.ZstdCompressor(level=3).compress(
+                hlo.encode()))
+        rec["hlo_file"] = fn
+    st = analyze_hlo(hlo)   # trip-count-corrected per-chip stats
+    rec.update({
+        "ok": True,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops": st.flops,
+        "hlo_bytes_accessed": st.bytes_accessed,
+        "xla_flops_uncorrected": _first_num(cost, "flops"),
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0),
+        "collective_bytes": dict(st.collective_bytes),
+        "collective_total": st.collective_total,
+        "while_trips": st.while_trips,
+    })
+    return rec
+
+
+def run_pfo(multi_pod: bool) -> dict:
+    """Dry-run the distributed PFO query/update steps on the mesh."""
+    from repro.core import DistConfig, PFOConfig
+    from repro.core.distributed import (make_dist_insert, make_dist_query,
+                                        state_pspecs, _abstract_state)
+    from jax.sharding import NamedSharding
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = PFOConfig(dim=512, L=8, C=5, m=4, l=64, t=4,
+                    max_nodes_per_tree=512, max_leaves_per_tree=4096,
+                    main_m=8, main_max_nodes_per_tree=512,
+                    main_max_leaves_per_tree=16384,
+                    store_capacity=1 << 22,
+                    max_candidates_total=512)
+    dcfg = DistConfig(pfo=cfg,
+                      batch_axes=(("pod", "data") if multi_pod
+                                  else ("data",)),
+                      n_model=16)
+    rec = {"arch": "pfo_index", "shape": "q4096_u4096",
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    with jax.sharding.set_mesh(mesh):
+        st = jax.tree.map(
+            lambda s, sp: jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+            _abstract_state(dcfg), state_pspecs(dcfg))
+        bsh = NamedSharding(mesh, jax.sharding.PartitionSpec(
+            ("pod", "data") if multi_pod else "data"))
+        n = 4096
+        q = jax.ShapeDtypeStruct((n, cfg.dim), jnp.float32, sharding=bsh)
+        ids = jax.ShapeDtypeStruct((n,), jnp.int32, sharding=bsh)
+        act = jax.ShapeDtypeStruct((n,), jnp.bool_, sharding=bsh)
+
+        qfn = make_dist_query(dcfg, mesh, k=10)
+        lq = qfn.lower(st, q)
+        cq = lq.compile()
+        ifn = make_dist_insert(dcfg, mesh, capacity=n // 16 * 2)
+        li = ifn.lower(st, ids, q, act)
+        ci = li.compile()
+    costq = cq.cost_analysis() or {}
+    costi = ci.cost_analysis() or {}
+    rec.update({
+        "ok": True,
+        "query_flops": _first_num(costq, "flops"),
+        "insert_flops": _first_num(costi, "flops"),
+        "query_collectives": collective_bytes(cq.as_text()),
+        "insert_collectives": collective_bytes(ci.as_text()),
+        "query_peak_bytes": getattr(cq.memory_analysis(),
+                                    "peak_memory_in_bytes", 0),
+    })
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--pfo", action="store_true")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--hlo-dir", default=None)
+    ap.add_argument("--moe-impl", default=None)
+    args = ap.parse_args()
+    overrides = {"moe_impl": args.moe_impl} if args.moe_impl else None
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    cells = []
+    if args.all:
+        cells = runnable_cells()
+    elif args.arch and args.shape:
+        cells = [(args.arch, args.shape)]
+    elif args.arch:
+        cells = [(args.arch, s) for a, s in runnable_cells()
+                 if a == configs.ALIASES.get(args.arch, args.arch)]
+
+    sink = open(args.out, "a") if args.out else None
+    ok = fail = 0
+    for mp in meshes:
+        if args.pfo:
+            rec = run_pfo(mp)
+            print(json.dumps(rec))
+            if sink:
+                sink.write(json.dumps(rec) + "\n")
+                sink.flush()
+        for arch, shape in cells:
+            try:
+                rec = run_cell(arch, shape, mp, reduced=args.reduced,
+                               hlo_dir=args.hlo_dir, overrides=overrides)
+                ok += 1
+            except Exception as e:  # noqa: BLE001 — record and continue
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "ok": False, "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-2000:]}
+                fail += 1
+            print(json.dumps({k: v for k, v in rec.items()
+                              if k != "trace"}))
+            if sink:
+                sink.write(json.dumps(rec) + "\n")
+                sink.flush()
+    if sink:
+        sink.close()
+    print(f"# dry-run complete: {ok} ok, {fail} failed", file=sys.stderr)
+    sys.exit(1 if fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Training entrypoint.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm_135m \
+      --steps 200 --seq 256 --batch 8 [--reduced] [--ckpt DIR]
+
+On the CPU container this trains reduced (or small real) configs; on a
+TPU fleet the same driver runs with ``--mesh single|multi`` production
+meshes (the dry-run proves those lower+compile).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.data import SyntheticLM
+from repro.models.registry import build_model
+from repro.optim import AdamWConfig
+from repro.train import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm_135m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--no-resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = configs.get_config(args.arch, reduced=args.reduced)
+    model = build_model(cfg)
+    data = SyntheticLM(cfg.vocab_size, args.seq, args.batch)
+    tcfg = TrainConfig(
+        steps=args.steps, ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt,
+        loss_chunk=min(512, args.seq),
+        opt=AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                        total_steps=args.steps))
+    out = Trainer(model, data, tcfg).run(resume=not args.no_resume)
+    print(f"final loss {out['losses'][-1]:.4f} "
+          f"(first {out['losses'][0]:.4f}); slow steps: "
+          f"{out['slow_steps']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Model zoo: the 10 assigned architectures as one composable pure-JAX
+family (no flax — params are pytrees built from declarative ParamSpecs,
+so the same definition materializes real arrays for smoke tests,
+ShapeDtypeStructs for the dry-run, and PartitionSpecs for sharding)."""
+from .common import ModelConfig, BlockDef
+from .registry import build_model, Model
+
+__all__ = ["ModelConfig", "BlockDef", "build_model", "Model"]

@@ -1,0 +1,331 @@
+"""Attention family: GQA (opt. bias), MLA, local/chunked variants.
+
+Memory discipline: full-sequence attention is computed *blockwise*
+(online-softmax over KV chunks, lax.scan) so a 32k-token prefill never
+materializes a (T, T) score tensor — the pure-JAX flash-attention
+pattern.  Local attention masks to a sliding window; chunked attention
+(llama4 iRoPE) masks to the aligned chunk.  MLA rides the same path as
+latent-space MQA: q_eff = [q_nope·W_kb, q_rope], k_eff = [c_kv, k_rope],
+v = c_kv — so the compressed cache is also the attention operand
+(weight-absorbed form; the up-projection W_vb applies after).
+
+Caches:
+  GQA : (k, v) each (B, S, n_kv, head_dim)
+  MLA : (c_kv (B, S, kv_lora), k_rope (B, S, qk_rope)) — low-rank.
+Decode appends at ``length`` and attends with a validity mask.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import (BlockDef, ModelConfig, ParamSpec, apply_rope, dense,
+                     rmsnorm, rope_freqs)
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------------
+# parameter declarations
+# ----------------------------------------------------------------------
+def gqa_param_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    sp = {
+        "wq": ParamSpec((d, cfg.q_features), ("embed", "q_features")),
+        "wk": ParamSpec((d, cfg.kv_features), ("embed", "kv_features")),
+        "wv": ParamSpec((d, cfg.kv_features), ("embed", "kv_features")),
+        "wo": ParamSpec((cfg.q_features, d), ("q_features", "embed")),
+    }
+    if cfg.qkv_bias:
+        sp["bq"] = ParamSpec((cfg.q_features,), ("q_features",), "zeros")
+        sp["bk"] = ParamSpec((cfg.kv_features,), ("kv_features",), "zeros")
+        sp["bv"] = ParamSpec((cfg.kv_features,), ("kv_features",), "zeros")
+    return sp
+
+
+def mla_param_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    sp = {
+        "wkv_a": ParamSpec((d, cfg.kv_lora_rank + cfg.qk_rope_dim),
+                           ("embed", "kv_lora")),
+        "kv_norm": ParamSpec((cfg.kv_lora_rank,), ("kv_lora",), "ones"),
+        "wk_b": ParamSpec((cfg.kv_lora_rank,
+                           cfg.n_heads * cfg.qk_nope_dim),
+                          ("kv_lora", "q_features")),
+        "wv_b": ParamSpec((cfg.kv_lora_rank,
+                           cfg.n_heads * cfg.v_head_dim),
+                          ("kv_lora", "q_features")),
+        "wo": ParamSpec((cfg.n_heads * cfg.v_head_dim, d),
+                        ("q_features", "embed")),
+    }
+    if cfg.q_lora_rank:
+        sp["wq_a"] = ParamSpec((d, cfg.q_lora_rank), ("embed", "kv_lora"))
+        sp["q_norm"] = ParamSpec((cfg.q_lora_rank,), ("kv_lora",), "ones")
+        sp["wq_b"] = ParamSpec((cfg.q_lora_rank, cfg.n_heads * qk),
+                               ("kv_lora", "q_features"))
+    else:
+        sp["wq"] = ParamSpec((d, cfg.n_heads * qk), ("embed", "q_features"))
+    return sp
+
+
+def cross_param_specs(cfg: ModelConfig) -> dict:
+    return gqa_param_specs(dataclasses.replace(cfg, qkv_bias=False))
+
+
+# ----------------------------------------------------------------------
+# blockwise softmax attention (flash-style)
+# ----------------------------------------------------------------------
+def blockwise_attention(q, k, v, *, causal: bool, q_offset=0,
+                        kv_chunk: int = 1024, window: int = 0,
+                        chunk_align: int = 0, kv_len_valid=None,
+                        scale: float | None = None) -> jax.Array:
+    """Online-softmax attention over KV chunks.
+
+    q (B,Tq,H,Dk); k (B,S,KV,Dk); v (B,S,KV,Dv) — Dv may differ (MLA).
+    ``q_offset``: absolute position of q[0].  ``window``: sliding local
+    window; ``chunk_align``: llama4 aligned-chunk locality.
+    ``kv_len_valid`` masks ragged cache fill.  Peak score memory is
+    (B,Tq,H,kv_chunk).
+    """
+    b, tq, h, dk = q.shape
+    s_total, kv_heads = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    groups = h // kv_heads
+    scale = scale if scale is not None else 1.0 / (dk ** 0.5)
+    n_chunks = max(s_total // kv_chunk, 1)
+    kc = s_total // n_chunks
+    assert kc * n_chunks == s_total, "kv length must split into chunks"
+    kr = jnp.moveaxis(k.reshape(b, n_chunks, kc, kv_heads, dk), 1, 0)
+    vr = jnp.moveaxis(v.reshape(b, n_chunks, kc, kv_heads, dv), 1, 0)
+
+    q_pos = q_offset + jnp.arange(tq)
+    qg = q.reshape(b, tq, kv_heads, groups, dk)
+
+    def body(carry, xs):
+        o, m, l = carry
+        kci, vci, cidx = xs
+        kv_pos = cidx * kc + jnp.arange(kc)
+        mask = jnp.ones((tq, kc), bool)
+        if causal:
+            mask &= q_pos[:, None] >= kv_pos[None, :]
+        if window:
+            mask &= q_pos[:, None] - kv_pos[None, :] < window
+        if chunk_align:
+            mask &= kv_pos[None, :] >= (q_pos[:, None] // chunk_align) \
+                * chunk_align
+        if kv_len_valid is not None:
+            mask &= kv_pos[None, :] < kv_len_valid
+
+        s = jnp.einsum("btkgd,bskd->btkgs", qg.astype(jnp.float32),
+                       kci.astype(jnp.float32)) * scale
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        mc = jnp.max(s, axis=-1)
+        p = jnp.exp(s - mc[..., None])
+        lc = jnp.sum(p, axis=-1)
+        oc = jnp.einsum("btkgs,bskd->btkgd", p, vci.astype(jnp.float32))
+
+        m_new = jnp.maximum(m, mc)
+        a1 = jnp.exp(m - m_new)
+        a2 = jnp.exp(mc - m_new)
+        o = o * a1[..., None] + oc * a2[..., None]
+        l = l * a1 + lc * a2
+        return (o, m_new, l), ()
+
+    o0 = jnp.zeros((b, tq, kv_heads, groups, dv), jnp.float32)
+    m0 = jnp.full((b, tq, kv_heads, groups), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, tq, kv_heads, groups), jnp.float32)
+    (o, _, l), _ = jax.lax.scan(body, (o0, m0, l0),
+                                (kr, vr, jnp.arange(n_chunks)))
+    out = o / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, tq, h, dv).astype(q.dtype)
+
+
+def dense_decode_attention(q, k, v, *, q_pos, window: int = 0,
+                           chunk_align: int = 0, kv_len_valid=None,
+                           scale: float | None = None) -> jax.Array:
+    """Single-token decode attention WITHOUT chunk reshaping.
+
+    The blockwise path reshapes the sequence axis into (chunks, kc),
+    which forces GSPMD to all-gather a sequence-sharded KV cache every
+    layer (measured: 2x1.07GB x layers per decode step on
+    deepseek-coder decode_32k).  A flat einsum keeps the score/value
+    contractions partitioned over the sharded sequence; the softmax
+    reduces over that axis with scalar-sized collectives.  See
+    EXPERIMENTS.md §Perf (hillclimb 1).
+    """
+    b, tq, h, dk = q.shape
+    assert tq == 1
+    s, kv_heads = k.shape[1], k.shape[2]
+    groups = h // kv_heads
+    dv = v.shape[-1]
+    scale = scale if scale is not None else 1.0 / (dk ** 0.5)
+    qg = q.reshape(b, kv_heads, groups, dk)
+
+    sc = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                    k.astype(jnp.float32)) * scale        # (B,KV,G,S)
+    kv_pos = jnp.arange(s)
+    mask = kv_pos <= q_pos
+    if window:
+        mask &= q_pos - kv_pos < window
+    if chunk_align:
+        mask &= kv_pos >= (q_pos // chunk_align) * chunk_align
+    if kv_len_valid is not None:
+        mask &= kv_pos < kv_len_valid
+    sc = jnp.where(mask[None, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, 1, h, dv).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# GQA block (train/prefill + decode)
+# ----------------------------------------------------------------------
+class KVCache(NamedTuple):
+    k: jax.Array      # (B, S, KV, D)
+    v: jax.Array
+    length: jax.Array  # () int32 — filled prefix
+
+
+def _impl_kwargs(blk: BlockDef) -> dict:
+    if blk.attn_impl == "local":
+        return {"window": blk.window}
+    if blk.attn_impl == "chunked":
+        return {"chunk_align": blk.window}
+    return {}
+
+
+def gqa_apply(p: dict, cfg: ModelConfig, blk: BlockDef, x: jax.Array,
+              positions: jax.Array, cache: KVCache | None = None,
+              cross_kv=None, causal: bool = True,
+              constrain=lambda t, a: t):
+    """x (B,T,D).  Returns (out, new_cache)."""
+    b, t, _ = x.shape
+    q = dense(x, p["wq"], p.get("bq")).reshape(b, t, cfg.n_heads,
+                                               cfg.head_dim)
+    # explicit head layout: TP over heads when divisible, replicated
+    # otherwise — prevents GSPMD from leaving the head_dim contraction
+    # split across chips (measured: per-kv-chunk 1.34GB score
+    # all-reduces on llama4 train_4k; see §Perf hillclimb 3)
+    q = constrain(q, ("batch", "seq", "heads", "head_dim"))
+    if cross_kv is None:
+        k = dense(x, p["wk"], p.get("bk")).reshape(b, t, cfg.n_kv_heads,
+                                                   cfg.head_dim)
+        v = dense(x, p["wv"], p.get("bv")).reshape(b, t, cfg.n_kv_heads,
+                                                   cfg.head_dim)
+        k = constrain(k, ("batch", "seq", "kv_heads", "head_dim"))
+        v = constrain(v, ("batch", "seq", "kv_heads", "head_dim"))
+        if blk.rope == "rope":
+            cos, sin = rope_freqs(cfg.head_dim, cfg.rope_theta, positions)
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+    else:
+        k, v = cross_kv
+
+    new_cache = None
+    if cache is not None and cross_kv is None:
+        kc = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (0, cache.length, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (0, cache.length, 0, 0))
+        new_cache = KVCache(kc, vc, cache.length + t)
+        if t == 1:
+            o = dense_decode_attention(
+                q, kc, vc, q_pos=cache.length,
+                kv_len_valid=cache.length + 1, **_impl_kwargs(blk))
+        else:
+            o = blockwise_attention(
+                q, kc, vc, causal=True, q_offset=cache.length,
+                kv_chunk=min(1024, kc.shape[1]),
+                kv_len_valid=cache.length + t, **_impl_kwargs(blk))
+    else:
+        o = blockwise_attention(
+            q, k, v, causal=(cross_kv is None and causal), q_offset=0,
+            kv_chunk=min(1024, max(k.shape[1], 1)), **_impl_kwargs(blk))
+    out = dense(o.reshape(b, t, cfg.q_features), p["wo"])
+    return out, new_cache
+
+
+def gqa_init_cache(cfg: ModelConfig, blk: BlockDef, batch: int,
+                   max_len: int, dtype) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        v=jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        length=jnp.int32(0))
+
+
+# ----------------------------------------------------------------------
+# MLA block (deepseek-v2) — latent-space MQA through the same flash path
+# ----------------------------------------------------------------------
+class MLACache(NamedTuple):
+    c_kv: jax.Array    # (B, S, kv_lora)
+    k_rope: jax.Array  # (B, S, qk_rope)
+    length: jax.Array
+
+
+def mla_apply(p: dict, cfg: ModelConfig, blk: BlockDef, x: jax.Array,
+              positions: jax.Array, cache: MLACache | None = None):
+    b, t, _ = x.shape
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        cq = rmsnorm(dense(x, p["wq_a"]), p["q_norm"], cfg.norm_eps)
+        q = dense(cq, p["wq_b"]).reshape(b, t, cfg.n_heads, qk)
+    else:
+        q = dense(x, p["wq"]).reshape(b, t, cfg.n_heads, qk)
+    q_nope, q_rope = q[..., :cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    cos, sin = rope_freqs(cfg.qk_rope_dim, cfg.rope_theta, positions)
+    q_rope = apply_rope(q_rope, cos, sin)
+
+    ckv = dense(x, p["wkv_a"])
+    c_kv = rmsnorm(ckv[..., :cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = ckv[..., cfg.kv_lora_rank:][..., None, :]
+    k_rope = apply_rope(k_rope, cos, sin)[..., 0, :]
+
+    if cache is not None:
+        ckv_c = jax.lax.dynamic_update_slice(
+            cache.c_kv, c_kv.astype(cache.c_kv.dtype), (0, cache.length, 0))
+        kr_c = jax.lax.dynamic_update_slice(
+            cache.k_rope, k_rope.astype(cache.k_rope.dtype),
+            (0, cache.length, 0))
+        new_cache = MLACache(ckv_c, kr_c, cache.length + t)
+        c_all, r_all = ckv_c, kr_c
+        kv_valid, q_off = cache.length + t, cache.length
+    else:
+        new_cache = None
+        c_all, r_all = c_kv, k_rope
+        kv_valid, q_off = None, 0
+
+    # absorbed: q_eff = [q_nope W_kb, q_rope]; k_eff = [c_kv, k_rope]
+    wkb = p["wk_b"].reshape(cfg.kv_lora_rank, cfg.n_heads, cfg.qk_nope_dim)
+    q_abs = jnp.einsum("bthd,rhd->bthr", q_nope.astype(jnp.float32),
+                       wkb.astype(jnp.float32)).astype(x.dtype)
+    q_eff = jnp.concatenate([q_abs, q_rope], axis=-1)     # (B,T,H,r+rope)
+    k_eff = jnp.concatenate([c_all, r_all], axis=-1)[:, :, None, :]
+    v_eff = c_all[:, :, None, :]                          # (B,S,1,r)
+
+    if t == 1 and cache is not None:
+        lat = dense_decode_attention(
+            q_eff, k_eff, v_eff, q_pos=q_off, kv_len_valid=kv_valid,
+            scale=1.0 / (qk ** 0.5))                      # (B,1,H,r)
+    else:
+        lat = blockwise_attention(
+            q_eff, k_eff, v_eff, causal=True, q_offset=q_off,
+            kv_chunk=min(1024, k_eff.shape[1]), kv_len_valid=kv_valid,
+            scale=1.0 / (qk ** 0.5))                      # (B,T,H,r)
+
+    wvb = p["wv_b"].reshape(cfg.kv_lora_rank, cfg.n_heads, cfg.v_head_dim)
+    o = jnp.einsum("bthr,rhd->bthd", lat.astype(jnp.float32),
+                   wvb.astype(jnp.float32)).astype(x.dtype)
+    out = dense(o.reshape(b, t, cfg.n_heads * cfg.v_head_dim), p["wo"])
+    return out, new_cache
+
+
+def mla_init_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype) -> MLACache:
+    return MLACache(
+        c_kv=jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+        length=jnp.int32(0))

@@ -1,0 +1,189 @@
+"""Shared model machinery: config IR, declarative params, norms, rope.
+
+A model is a list of *block groups*: ``(pattern, repeat)`` where the
+pattern is a short tuple of BlockDefs (e.g. RecurrentGemma's
+``(rec, rec, attn)``, llama4's ``(local, local, local, global)``).
+Each group's params are stacked over ``repeat`` and applied with
+``jax.lax.scan`` + per-layer remat, so tracing/compile cost is O(#
+distinct block kinds), not O(layers) — essential for 60-layer dry-runs.
+
+Params are *declared* (shape + logical axes + initializer) and then
+materialized three ways:
+  init_params     -> real arrays      (training, smoke tests)
+  abstract_params -> ShapeDtypeStruct (dry-run: no allocation)
+  params_pspecs   -> PartitionSpec    (via repro.sharding rules)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+# ----------------------------------------------------------------------
+# block/config IR
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class BlockDef:
+    kind: str = "attn"        # "attn" | "mla" | "rwkv" | "rglru"
+    attn_impl: str = "full"   # "full" | "local" | "chunked"
+    rope: str = "rope"        # "rope" | "nope"
+    window: int = 0           # local window / chunk size
+    moe: bool = False
+    cross_attn: bool = False  # enc-dec decoder blocks
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "decoder"        # "decoder" | "encdec"
+    n_layers: int = 2              # informational; groups are canonical
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 32
+    d_ff: int = 512
+    vocab_size: int = 1024
+    groups: tuple = ()             # ((BlockDef,...), repeat) tuples
+    enc_groups: tuple = ()         # encoder stack for enc-dec
+    act: str = "silu"              # "silu" | "gelu" | "relu2" | "geglu"
+    norm: str = "rmsnorm"
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 10000.0
+    # MoE
+    n_experts: int = 0
+    top_k: int = 1
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+    moe_impl: str = "gspmd"        # "gspmd" | "shardmap" (see §Perf)
+    # MLA (deepseek-v2)
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    # RG-LRU
+    lru_width: int = 0
+    conv_width: int = 4
+    # frontend stub
+    frontend: str | None = None    # None | "patch" | "audio"
+    frontend_len: int = 0          # stub sequence length
+    enc_len: int = 0               # encoder length for enc-dec
+    # numerics
+    dtype: Any = jnp.bfloat16      # compute/weight dtype
+    norm_eps: float = 1e-6
+
+    @property
+    def q_features(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_features(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def layer_count(self) -> int:
+        n = sum(len(p) * r for p, r in self.groups)
+        n += sum(len(p) * r for p, r in self.enc_groups)
+        return n
+
+
+# ----------------------------------------------------------------------
+# declarative params
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple                    # logical axis names (len == ndim)
+    init: str = "normal"           # "normal" | "zeros" | "ones"
+    scale: float = 1.0             # stddev multiplier for "normal"
+
+
+def _fan_in(shape: tuple, axes: tuple) -> int:
+    # contraction dim heuristics: last-but-one for matrices
+    if len(shape) >= 2:
+        return shape[-2]
+    return max(shape[0], 1)
+
+
+def init_params(spec_tree, key: jax.Array, dtype) -> Any:
+    leaves, treedef = jax.tree.flatten(
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, s in zip(keys, leaves):
+        if s.init == "zeros":
+            out.append(jnp.zeros(s.shape, dtype))
+        elif s.init == "ones":
+            out.append(jnp.ones(s.shape, dtype))
+        else:
+            std = s.scale / (_fan_in(s.shape, s.axes) ** 0.5)
+            out.append((jax.random.normal(k, s.shape, jnp.float32)
+                        * std).astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(spec_tree, dtype) -> Any:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), spec_tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def map_specs(spec_tree, fn: Callable[[ParamSpec], Any]) -> Any:
+    return jax.tree.map(fn, spec_tree,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# ----------------------------------------------------------------------
+# numerics
+# ----------------------------------------------------------------------
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layernorm(x: jax.Array, w: jax.Array, b: jax.Array,
+              eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return (((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w + b)
+
+
+def activation(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def rope_freqs(head_dim: int, theta: float, positions: jax.Array):
+    """positions (...,) -> cos/sin (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., T, H, D); cos/sin (..., T, D//2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * c - xf2 * s, xf2 * c + xf1 * s], axis=-1).astype(x.dtype)
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array | None = None):
+    y = jnp.einsum("...d,df->...f", x, w)
+    if b is not None:
+        y = y + b
+    return y

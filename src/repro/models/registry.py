@@ -1,0 +1,64 @@
+"""Model registry: config -> Model bundle (init/forward/loss/serve fns).
+
+``build_model(cfg)`` wires the generic assembly for any ModelConfig;
+``registry.get(name)`` resolves the 10 assigned architectures from
+``repro.configs``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer as tfm
+from .common import ModelConfig, abstract_params, init_params
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    param_specs: dict
+
+    def init(self, key: jax.Array, dtype=None):
+        return init_params(self.param_specs, key,
+                           dtype or self.cfg.dtype)
+
+    def abstract(self, dtype=None):
+        return abstract_params(self.param_specs, dtype or self.cfg.dtype)
+
+    def init_cache(self, batch: int, max_len: int, dtype=None):
+        return tfm.init_cache(self.cfg, batch, max_len,
+                              dtype or self.cfg.dtype)
+
+    def loss(self, params, batch, constrain=tfm._ident, remat=True,
+             loss_chunk: int = 512):
+        return tfm.lm_loss(params, self.cfg, batch, constrain=constrain,
+                           remat=remat, loss_chunk=loss_chunk)
+
+    def forward(self, params, batch, **kw):
+        return tfm.forward(params, self.cfg, batch, **kw)
+
+    def logits(self, params, hidden, constrain=tfm._ident):
+        return tfm.logits_fn(params, self.cfg, hidden, constrain)
+
+    def prefill(self, params, batch, cache, constrain=tfm._ident):
+        return tfm.prefill(params, self.cfg, batch, cache,
+                           constrain=constrain)
+
+    def decode_step(self, params, token, cache, pos,
+                    constrain=tfm._ident):
+        return tfm.decode_step(params, self.cfg, token, cache, pos=pos,
+                               constrain=constrain)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg=cfg, param_specs=tfm.model_param_specs(cfg))
+
+
+@functools.lru_cache(maxsize=None)
+def get(name: str, reduced: bool = False) -> Model:
+    """Resolve an assigned architecture by id (see repro.configs)."""
+    from repro import configs
+    cfg = configs.get_config(name, reduced=reduced)
+    return build_model(cfg)

@@ -1,0 +1,92 @@
+"""RecurrentGemma blocks (arXiv:2402.19427): RG-LRU recurrence with a
+width-4 temporal conv, alternating with local (windowed) attention in a
+(rec, rec, attn) pattern — the Griffin hybrid.
+
+RG-LRU (per channel):
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    a_t = a^(c * r_t)    with a = sigmoid(Lambda),  c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The recurrent block: x -> [W1 -> conv1d(4) -> RG-LRU] * gelu(W2 gate)
+-> Wo.  Training scans over T; decode carries (h, conv window).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamSpec, dense
+
+C_CONST = 8.0
+
+
+def rglru_param_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    return {
+        "w_in": ParamSpec((d, w), ("embed", "ffn")),
+        "w_gate": ParamSpec((d, w), ("embed", "ffn")),
+        "conv_w": ParamSpec((cfg.conv_width, w), ("conv", "ffn"), "zeros",
+                            0.1),
+        "conv_b": ParamSpec((w,), ("ffn",), "zeros"),
+        "lam": ParamSpec((w,), ("ffn",), "zeros"),       # Lambda
+        "wa": ParamSpec((w, w), ("ffn", "ffn2")),
+        "ba": ParamSpec((w,), ("ffn",), "zeros"),
+        "wx": ParamSpec((w, w), ("ffn", "ffn2")),
+        "bx": ParamSpec((w,), ("ffn",), "zeros"),
+        "w_out": ParamSpec((w, d), ("ffn", "embed")),
+    }
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array        # (B, W) recurrent state
+    conv: jax.Array     # (B, conv_width-1, W) trailing inputs
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int, dtype) -> RGLRUState:
+    w = cfg.lru_width or cfg.d_model
+    return RGLRUState(
+        h=jnp.zeros((batch, w), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, w), dtype))
+
+
+def _conv1d(p, cfg, u: jax.Array, state: RGLRUState):
+    """Causal temporal conv width-4 over (B, T, W)."""
+    hist = jnp.concatenate([state.conv.astype(u.dtype), u], axis=1)
+    cw = cfg.conv_width
+    out = sum(hist[:, i:i + u.shape[1]] * p["conv_w"][cw - 1 - i]
+              for i in range(cw)) + p["conv_b"]
+    new_conv = hist[:, -(cw - 1):] if cw > 1 else state.conv
+    return out, new_conv
+
+
+def rglru_apply(p: dict, cfg: ModelConfig, x: jax.Array,
+                state: RGLRUState):
+    """x (B, T, D) -> (out, state')."""
+    b, t, d = x.shape
+    u = dense(x, p["w_in"])                                 # (B,T,W)
+    gate = jax.nn.gelu(dense(x, p["w_gate"]))
+    u, new_conv = _conv1d(p, cfg, u, state)
+
+    r = jax.nn.sigmoid(dense(u, p["wa"]) + p["ba"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(dense(u, p["wx"]) + p["bx"]).astype(jnp.float32)
+    log_a = -C_CONST * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)                                      # (B,T,W)
+    gated = i * u.astype(jnp.float32)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12))
+
+    def step(h, ins):
+        a_t, g_t, m_t = ins
+        h = a_t * h + m_t * g_t
+        return h, h
+
+    h, hs = jax.lax.scan(
+        step, state.h,
+        (jnp.moveaxis(a, 1, 0), jnp.moveaxis(gated, 1, 0),
+         jnp.moveaxis(mult, 1, 0)))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype) * gate
+    out = dense(y, p["w_out"])
+    return out, RGLRUState(h=h, conv=new_conv)

@@ -1,0 +1,137 @@
+"""RWKV-6 "Finch" blocks (arXiv:2404.05892): attention-free time mix
+with data-dependent decay, plus channel mix.
+
+Time mix per head (size n = head_dim):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (state (n, n))
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with w_t = exp(-exp(w_base + lora(x~_t))) per channel, and token-shift
+interpolation x~ = lerp(x_{t-1}, x_t, mu_*) with data-dependent mu
+(the Finch ddlerp, implemented with one shared lora).
+
+Training evaluates the recurrence with ``lax.scan`` over time (the
+faithful O(T) form); decode carries (last_token, state) and costs O(1)
+per token — which is what makes rwkv6 the long_500k architecture.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamSpec, dense, rmsnorm
+
+
+LORA_R = 32
+
+
+def rwkv_param_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads if cfg.n_heads else d // 64
+    n = d // h
+    return {
+        # time mix
+        "mu_x": ParamSpec((5, d), ("five", "embed"), "zeros"),
+        "ddlerp_a": ParamSpec((d, LORA_R * 5), ("embed", "lora"), "zeros"),
+        "ddlerp_b": ParamSpec((LORA_R * 5, 5 * d), ("lora", "embed"),
+                              "zeros"),
+        "w_base": ParamSpec((d,), ("embed",), "zeros"),
+        "w_lora_a": ParamSpec((d, LORA_R), ("embed", "lora"), "zeros"),
+        "w_lora_b": ParamSpec((LORA_R, d), ("lora", "embed"), "zeros"),
+        "u": ParamSpec((h, n), ("heads", "head_dim"), "zeros"),
+        "wr": ParamSpec((d, d), ("embed", "q_features")),
+        "wk": ParamSpec((d, d), ("embed", "q_features")),
+        "wv": ParamSpec((d, d), ("embed", "q_features")),
+        "wg": ParamSpec((d, d), ("embed", "q_features")),
+        "wo": ParamSpec((d, d), ("q_features", "embed")),
+        "ln_x": ParamSpec((d,), ("embed",), "ones"),
+        # channel mix
+        "cm_mu_k": ParamSpec((d,), ("embed",), "zeros"),
+        "cm_mu_r": ParamSpec((d,), ("embed",), "zeros"),
+        "cm_wk": ParamSpec((d, cfg.d_ff), ("embed", "ffn")),
+        "cm_wv": ParamSpec((cfg.d_ff, d), ("ffn", "embed")),
+        "cm_wr": ParamSpec((d, d), ("embed", "q_features")),
+    }
+
+
+class RWKVState(NamedTuple):
+    tm_last: jax.Array   # (B, D)    last token (time-mix shift)
+    cm_last: jax.Array   # (B, D)    last token (channel-mix shift)
+    S: jax.Array         # (B, H, N, N) wkv state
+
+
+def rwkv_init_state(cfg: ModelConfig, batch: int, dtype) -> RWKVState:
+    d = cfg.d_model
+    h = cfg.n_heads if cfg.n_heads else d // 64
+    n = d // h
+    return RWKVState(
+        tm_last=jnp.zeros((batch, d), dtype),
+        cm_last=jnp.zeros((batch, d), dtype),
+        S=jnp.zeros((batch, h, n, n), jnp.float32))
+
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent token-shift: five mixed variants (r,k,v,w,g)."""
+    d = x.shape[-1]
+    base = x_prev + (x - x_prev) * 0.5
+    lo = jnp.tanh(dense(base, p["ddlerp_a"]))               # (..., 5R)
+    mu_dd = dense(lo, p["ddlerp_b"]).reshape(*x.shape[:-1], 5, d)
+    mu = p["mu_x"][None, :, :] if x.ndim == 2 else p["mu_x"]
+    mix = mu + mu_dd                                        # (..., 5, D)
+    return x_prev[..., None, :] + (x - x_prev)[..., None, :] * \
+        jax.nn.sigmoid(mix)
+
+
+def _decay(p, xw):
+    w = p["w_base"] + dense(jnp.tanh(dense(xw, p["w_lora_a"])),
+                            p["w_lora_b"])
+    return jnp.exp(-jnp.exp(w.astype(jnp.float32)))         # (…, D) in (0,1)
+
+
+def time_mix(p: dict, cfg: ModelConfig, x: jax.Array,
+             state: RWKVState):
+    """x (B, T, D) -> (out, state'); scan over T."""
+    b, t, d = x.shape
+    h = cfg.n_heads if cfg.n_heads else d // 64
+    n = d // h
+
+    x_prev = jnp.concatenate(
+        [state.tm_last[:, None, :].astype(x.dtype), x[:, :-1]], axis=1)
+    mixed = _ddlerp(p, x, x_prev)                           # (B,T,5,D)
+    xr, xk, xv, xw, xg = [mixed[:, :, i] for i in range(5)]
+    r = dense(xr, p["wr"]).reshape(b, t, h, n)
+    k = dense(xk, p["wk"]).reshape(b, t, h, n)
+    v = dense(xv, p["wv"]).reshape(b, t, h, n)
+    g = jax.nn.silu(dense(xg, p["wg"]))
+    w = _decay(p, xw).reshape(b, t, h, n)                   # (B,T,H,N)
+    u = p["u"].astype(jnp.float32)
+
+    def step(S, ins):
+        rt, kt, vt, wt = ins                                # (B,H,N) each
+        kv = kt[..., :, None].astype(jnp.float32) * \
+            vt[..., None, :].astype(jnp.float32)            # (B,H,N,N)
+        out = jnp.einsum("bhn,bhnm->bhm", rt.astype(jnp.float32),
+                         S + u[None, :, :, None] * kv)
+        S = wt[..., :, None].astype(jnp.float32) * S + kv
+        return S, out
+
+    S, outs = jax.lax.scan(
+        step, state.S,
+        (jnp.moveaxis(r, 1, 0), jnp.moveaxis(k, 1, 0),
+         jnp.moveaxis(v, 1, 0), jnp.moveaxis(w, 1, 0)))
+    o = jnp.moveaxis(outs, 0, 1).reshape(b, t, d).astype(x.dtype)
+    o = rmsnorm(o, p["ln_x"], cfg.norm_eps) * g
+    out = dense(o, p["wo"])
+    state = state._replace(tm_last=x[:, -1], S=S)
+    return out, state
+
+
+def channel_mix(p: dict, cfg: ModelConfig, x: jax.Array,
+                state: RWKVState):
+    x_prev = jnp.concatenate(
+        [state.cm_last[:, None, :].astype(x.dtype), x[:, :-1]], axis=1)
+    xk = x_prev + (x - x_prev) * jax.nn.sigmoid(p["cm_mu_k"])
+    xr = x_prev + (x - x_prev) * jax.nn.sigmoid(p["cm_mu_r"])
+    kk = jnp.square(jax.nn.relu(dense(xk, p["cm_wk"])))
+    out = jax.nn.sigmoid(dense(xr, p["cm_wr"])) * dense(kk, p["cm_wv"])
+    return out, state._replace(cm_last=x[:, -1])

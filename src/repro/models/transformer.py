@@ -1,0 +1,391 @@
+"""Unified model assembly: block groups -> scanned stacks -> LM.
+
+One definition serves all 10 architectures: a model is embed ->
+[block groups] -> final norm -> (tied or separate) LM head, where each
+group is a (pattern, repeat) pair scanned with stacked params and
+per-layer remat.  Enc-dec (whisper) runs an encoder stack first and
+threads ``enc_out`` into decoder cross-attention.  Frontends are stubs
+per the assignment: precomputed patch/frame embeddings arrive as
+inputs.
+
+The ``constrain(tensor, logical_axes)`` callback threads sharding
+annotations from ``repro.sharding`` through every activation that
+matters; it defaults to identity so unit tests never touch a mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import rwkv6 as rwkv_mod
+from .common import (BlockDef, ModelConfig, ParamSpec, activation,
+                     abstract_params, dense, init_params, layernorm, rmsnorm)
+
+Constrain = Callable[[jax.Array, tuple], jax.Array]
+
+
+def _ident(x, axes):
+    return x
+
+
+# ======================================================================
+# parameter declaration
+# ======================================================================
+def _norm_specs(cfg: ModelConfig, name: str) -> dict:
+    d = cfg.d_model
+    sp = {f"{name}_w": ParamSpec((d,), ("embed",), "ones")}
+    if cfg.norm == "layernorm":
+        sp[f"{name}_b"] = ParamSpec((d,), ("embed",), "zeros")
+    return sp
+
+
+def _apply_norm(cfg: ModelConfig, p: dict, name: str, x: jax.Array):
+    if cfg.norm == "layernorm":
+        return layernorm(x, p[f"{name}_w"], p[f"{name}_b"], cfg.norm_eps)
+    return rmsnorm(x, p[f"{name}_w"], cfg.norm_eps)
+
+
+def mlp_param_specs(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    sp = {"wi": ParamSpec((d, f), ("embed", "ffn")),
+          "wo": ParamSpec((f, d), ("ffn", "embed"))}
+    if cfg.act in ("silu", "geglu"):
+        sp["wg"] = ParamSpec((d, f), ("embed", "ffn"))
+    return sp
+
+
+def mlp_apply(p: dict, cfg: ModelConfig, x: jax.Array,
+              constrain: Constrain) -> jax.Array:
+    if cfg.act in ("silu", "geglu"):
+        act = activation("silu" if cfg.act == "silu" else "gelu")
+        h = act(dense(x, p["wg"])) * dense(x, p["wi"])
+    else:
+        h = activation(cfg.act)(dense(x, p["wi"]))
+    h = constrain(h, ("batch", "seq", "ffn"))
+    return dense(h, p["wo"])
+
+
+def block_param_specs(cfg: ModelConfig, blk: BlockDef) -> dict:
+    sp: dict = {}
+    sp.update(_norm_specs(cfg, "ln1"))
+    if blk.kind == "attn":
+        sp["attn"] = attn_mod.gqa_param_specs(cfg)
+    elif blk.kind == "mla":
+        sp["attn"] = attn_mod.mla_param_specs(cfg)
+    elif blk.kind == "rwkv":
+        sp["rwkv"] = rwkv_mod.rwkv_param_specs(cfg)
+    elif blk.kind == "rglru":
+        sp["rglru"] = rglru_mod.rglru_param_specs(cfg)
+    else:
+        raise ValueError(blk.kind)
+    if blk.cross_attn:
+        sp.update(_norm_specs(cfg, "lnx"))
+        sp["cross"] = attn_mod.cross_param_specs(cfg)
+    sp.update(_norm_specs(cfg, "ln2"))
+    if blk.kind == "rwkv":
+        pass  # channel mix lives in rwkv specs
+    elif blk.moe:
+        sp["moe"] = moe_mod.moe_param_specs(cfg)
+    else:
+        sp["mlp"] = mlp_param_specs(cfg)
+    return sp
+
+
+def _stack_specs(spec_tree, repeat: int):
+    return jax.tree.map(
+        lambda s: ParamSpec((repeat, *s.shape), ("layers", *s.axes),
+                            s.init, s.scale),
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def group_param_specs(cfg: ModelConfig, pattern: tuple,
+                      repeat: int) -> dict:
+    per_layer = {f"b{i}": block_param_specs(cfg, blk)
+                 for i, blk in enumerate(pattern)}
+    return _stack_specs(per_layer, repeat)
+
+
+def model_param_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    sp: dict = {
+        "embed": ParamSpec((cfg.vocab_size, d), ("vocab", "embed"),
+                           "normal", 1.0),
+        "groups": [group_param_specs(cfg, pat, rep)
+                   for pat, rep in cfg.groups],
+    }
+    sp.update(_norm_specs(cfg, "final"))
+    if not cfg.tie_embeddings:
+        sp["lm_head"] = ParamSpec((d, cfg.vocab_size), ("embed", "vocab"))
+    if cfg.enc_groups:
+        sp["enc_groups"] = [group_param_specs(cfg, pat, rep)
+                            for pat, rep in cfg.enc_groups]
+        sp.update({f"enc_{k}": v
+                   for k, v in _norm_specs(cfg, "final").items()})
+        sp["enc_pos"] = ParamSpec((cfg.enc_len, d), ("seq", "embed"),
+                                  "normal", 0.02)
+    if cfg.frontend == "patch":
+        sp["patch_pos"] = ParamSpec((cfg.frontend_len, d),
+                                    ("seq", "embed"), "normal", 0.02)
+    return sp
+
+
+# ======================================================================
+# caches / recurrent state
+# ======================================================================
+def block_init_cache(cfg: ModelConfig, blk: BlockDef, batch: int,
+                     max_len: int, dtype, enc_len: int = 0):
+    c: dict = {}
+    if blk.kind == "attn":
+        c["kv"] = attn_mod.gqa_init_cache(cfg, blk, batch, max_len, dtype)
+    elif blk.kind == "mla":
+        c["kv"] = attn_mod.mla_init_cache(cfg, batch, max_len, dtype)
+    elif blk.kind == "rwkv":
+        c["state"] = rwkv_mod.rwkv_init_state(cfg, batch, dtype)
+    elif blk.kind == "rglru":
+        c["state"] = rglru_mod.rglru_init_state(cfg, batch, dtype)
+    if blk.cross_attn:
+        c["cross_k"] = jnp.zeros((batch, enc_len, cfg.n_kv_heads,
+                                  cfg.head_dim), dtype)
+        c["cross_v"] = jnp.zeros((batch, enc_len, cfg.n_kv_heads,
+                                  cfg.head_dim), dtype)
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    """Stacked caches mirroring the group structure."""
+    out = []
+    for pat, rep in cfg.groups:
+        per = {f"b{i}": block_init_cache(cfg, blk, batch, max_len, dtype,
+                                         cfg.enc_len)
+               for i, blk in enumerate(pat)}
+        out.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (rep, *x.shape)).copy(), per))
+    return out
+
+
+# ======================================================================
+# forward
+# ======================================================================
+def apply_block(blk: BlockDef, bp: dict, cfg: ModelConfig, x: jax.Array,
+                positions, bcache, enc_out, constrain: Constrain,
+                causal: bool):
+    new_cache = dict(bcache) if bcache is not None else None
+    h = _apply_norm(cfg, bp, "ln1", x)
+    if blk.kind == "attn":
+        o, kv = attn_mod.gqa_apply(
+            bp["attn"], cfg, blk, h, positions,
+            cache=bcache["kv"] if bcache is not None else None,
+            causal=causal, constrain=constrain)
+        if new_cache is not None and kv is not None:
+            new_cache["kv"] = kv
+        x = x + o
+    elif blk.kind == "mla":
+        o, kv = attn_mod.mla_apply(
+            bp["attn"], cfg, blk, h, positions,
+            cache=bcache["kv"] if bcache is not None else None)
+        if new_cache is not None and kv is not None:
+            new_cache["kv"] = kv
+        x = x + o
+    elif blk.kind == "rwkv":
+        st = bcache["state"] if bcache is not None else \
+            rwkv_mod.rwkv_init_state(cfg, x.shape[0], x.dtype)
+        o, st = rwkv_mod.time_mix(bp["rwkv"], cfg, h, st)
+        x = x + o
+        h2 = _apply_norm(cfg, bp, "ln2", x)
+        o2, st = rwkv_mod.channel_mix(bp["rwkv"], cfg, h2, st)
+        x = x + o2
+        if new_cache is not None:
+            new_cache["state"] = st
+        return constrain(x, ("batch", "seq", "embed")), new_cache
+    elif blk.kind == "rglru":
+        st = bcache["state"] if bcache is not None else \
+            rglru_mod.rglru_init_state(cfg, x.shape[0], x.dtype)
+        o, st = rglru_mod.rglru_apply(bp["rglru"], cfg, h, st)
+        x = x + o
+        if new_cache is not None:
+            new_cache["state"] = st
+
+    if blk.cross_attn:
+        hx = _apply_norm(cfg, bp, "lnx", x)
+        if enc_out is not None:                       # train/prefill
+            ck = dense(enc_out, bp["cross"]["wk"]).reshape(
+                enc_out.shape[0], enc_out.shape[1], cfg.n_kv_heads,
+                cfg.head_dim)
+            cv = dense(enc_out, bp["cross"]["wv"]).reshape(
+                enc_out.shape[0], enc_out.shape[1], cfg.n_kv_heads,
+                cfg.head_dim)
+            if new_cache is not None:
+                new_cache["cross_k"] = ck.astype(
+                    new_cache["cross_k"].dtype)
+                new_cache["cross_v"] = cv.astype(
+                    new_cache["cross_v"].dtype)
+        else:                                         # decode
+            ck, cv = bcache["cross_k"], bcache["cross_v"]
+        o, _ = attn_mod.gqa_apply(bp["cross"], cfg, blk, hx, positions,
+                                  cross_kv=(ck, cv))
+        x = x + o
+
+    h2 = _apply_norm(cfg, bp, "ln2", x)
+    if blk.moe:
+        moe_fn = (moe_mod.moe_apply_shardmap
+                  if cfg.moe_impl == "shardmap" else moe_mod.moe_apply)
+        x = x + moe_fn(bp["moe"], cfg, h2, constrain)
+    else:
+        x = x + mlp_apply(bp["mlp"], cfg, h2, constrain)
+    return constrain(x, ("batch", "seq", "embed")), new_cache
+
+
+def run_groups(groups_cfg, gparams_list, x, caches, *, cfg, positions,
+               enc_out, constrain, causal, remat: bool):
+    new_caches = []
+    for gi, (pat, rep) in enumerate(groups_cfg):
+        gp = gparams_list[gi]
+        gc = caches[gi] if caches is not None else None
+
+        def body(carry, xs, pat=pat):
+            xx = carry
+            if gc is not None:
+                lp, lc = xs
+            else:
+                lp, lc = xs, None
+            lc_new = {} if lc is not None else None
+            for i, blk in enumerate(pat):
+                bc = lc[f"b{i}"] if lc is not None else None
+                xx, bc_new = apply_block(blk, lp[f"b{i}"], cfg, xx,
+                                         positions, bc, enc_out,
+                                         constrain, causal)
+                if lc_new is not None:
+                    lc_new[f"b{i}"] = bc_new
+            if lc_new is not None:
+                return xx, lc_new
+            return xx, ()
+
+        if remat:
+            body = jax.checkpoint(body)
+        xs = (gp, gc) if gc is not None else gp
+        x, ys = jax.lax.scan(body, x, xs)
+        new_caches.append(ys if gc is not None else None)
+    return x, (new_caches if caches is not None else None)
+
+
+def embed_inputs(params, cfg: ModelConfig, batch: dict,
+                 constrain: Constrain):
+    """Token + frontend-stub embedding -> (B, T, D)."""
+    x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cfg.dtype)
+    if cfg.frontend == "patch" and "patches" in batch:
+        pe = (batch["patches"].astype(cfg.dtype)
+              + params["patch_pos"][None].astype(cfg.dtype))
+        x = jnp.concatenate([pe, x], axis=1)
+    return constrain(x, ("batch", "seq", "embed"))
+
+
+def encode(params, cfg: ModelConfig, batch: dict, constrain: Constrain,
+           remat: bool):
+    """Whisper encoder over stub frame embeddings (B, enc_len, D)."""
+    feats = batch["features"].astype(cfg.dtype)
+    x = feats + params["enc_pos"][None].astype(cfg.dtype)
+    positions = jnp.arange(x.shape[1])
+    x, _ = run_groups(cfg.enc_groups, params["enc_groups"], x, None,
+                      cfg=cfg, positions=positions, enc_out=None,
+                      constrain=constrain, causal=False, remat=remat)
+    return _apply_norm(cfg, {k[len("enc_"):]: v for k, v in params.items()
+                             if k.startswith("enc_final")}, "final", x)
+
+
+def _cast_params(params, dtype):
+    """Mixed precision: master params may be fp32; compute in cfg.dtype."""
+    return jax.tree.map(
+        lambda p: p.astype(dtype) if jnp.issubdtype(p.dtype, jnp.floating)
+        else p, params)
+
+
+def forward(params, cfg: ModelConfig, batch: dict, *,
+            caches=None, positions=None, constrain: Constrain = _ident,
+            remat: bool = False):
+    """Returns (hidden (B,T,D), new_caches)."""
+    params = _cast_params(params, cfg.dtype)
+    enc_out = None
+    if cfg.enc_groups and "features" in batch:
+        enc_out = encode(params, cfg, batch, constrain, remat)
+    x = embed_inputs(params, cfg, batch, constrain)
+    if positions is None:
+        positions = jnp.arange(x.shape[1])
+    x, new_caches = run_groups(
+        cfg.groups, params["groups"], x, caches, cfg=cfg,
+        positions=positions, enc_out=enc_out, constrain=constrain,
+        causal=True, remat=remat)
+    x = _apply_norm(cfg, params, "final", x)
+    return constrain(x, ("batch", "seq", "embed")), new_caches
+
+
+def logits_fn(params, cfg: ModelConfig, hidden: jax.Array,
+              constrain: Constrain = _ident) -> jax.Array:
+    params = _cast_params(params, cfg.dtype)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("btd,dv->btv", hidden, w.astype(hidden.dtype))
+    return constrain(logits, ("batch", "seq", "vocab"))
+
+
+def lm_loss(params, cfg: ModelConfig, batch: dict, *,
+            constrain: Constrain = _ident, remat: bool = True,
+            loss_chunk: int = 512) -> jax.Array:
+    """Next-token xent, vocab-sharded + sequence-chunked (the full
+    (B, T, V) logits tensor is never materialized)."""
+    hidden, _ = forward(params, cfg, batch, constrain=constrain,
+                        remat=remat)
+    labels = batch["labels"]
+    if cfg.frontend == "patch" and "patches" in batch:
+        hidden = hidden[:, -labels.shape[1]:]
+    b, t, d = hidden.shape
+    cparams = _cast_params(params, cfg.dtype)
+    w = cparams["embed"].T if cfg.tie_embeddings else cparams["lm_head"]
+    n_chunks = max(t // loss_chunk, 1)
+    while t % n_chunks:          # largest chunk count dividing t
+        n_chunks -= 1
+    hc = hidden.reshape(b, n_chunks, t // n_chunks, d)
+    lc = labels.reshape(b, n_chunks, t // n_chunks)
+
+    def chunk_loss(carry, xs):
+        h, l = xs                                     # (B,c,D), (B,c)
+        logits = jnp.einsum("bcd,dv->bcv", h,
+                            w.astype(h.dtype)).astype(jnp.float32)
+        logits = constrain(logits, ("batch", "seq", "vocab"))
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(logz - gold), ()
+
+    body = jax.checkpoint(chunk_loss) if remat else chunk_loss
+    total, _ = jax.lax.scan(
+        body, jnp.float32(0.0),
+        (jnp.moveaxis(hc, 1, 0), jnp.moveaxis(lc, 1, 0)))
+    return total / (b * t)
+
+
+def prefill(params, cfg: ModelConfig, batch: dict, cache, *,
+            constrain: Constrain = _ident):
+    """Fill caches with the prompt; returns (last_logits, caches)."""
+    tlen = batch["tokens"].shape[1] + (
+        cfg.frontend_len if cfg.frontend == "patch" and "patches" in batch
+        else 0)
+    hidden, caches = forward(params, cfg, batch, caches=cache,
+                             positions=jnp.arange(tlen),
+                             constrain=constrain)
+    logits = logits_fn(params, cfg, hidden[:, -1:], constrain)
+    return logits, caches
+
+
+def decode_step(params, cfg: ModelConfig, token: jax.Array, cache, *,
+                pos, constrain: Constrain = _ident):
+    """One decode step: token (B, 1) at absolute position ``pos``."""
+    batch = {"tokens": token}
+    positions = pos + jnp.arange(1)
+    hidden, caches = forward(params, cfg, batch, caches=cache,
+                             positions=positions, constrain=constrain)
+    logits = logits_fn(params, cfg, hidden, constrain)
+    return logits, caches

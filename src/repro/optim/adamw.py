@@ -1,0 +1,95 @@
+"""AdamW with cosine schedule and global-norm clipping (pure JAX).
+
+State is a pytree mirroring params: (m, v) in fp32 plus an optional
+fp32 master copy when params are kept in bf16 (``use_master``).  State
+shardings follow the param shardings (ZeRO-style finer sharding comes
+from the policy's param rules already spreading the embed dim over the
+batch axes in train mode).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    use_master: bool = True
+    # gradient compression: differentiate w.r.t. a bf16 copy of the
+    # params so every gradient reduction moves half the bytes
+    # (EXPERIMENTS.md §Perf iteration 7); m/v/update stay fp32.
+    grad_dtype: str = "f32"        # "f32" | "bf16"
+
+
+class OptState(NamedTuple):
+    m: any
+    v: any
+    master: any          # fp32 copy or None
+    step: jax.Array
+
+
+def cosine_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def adamw_init(cfg: AdamWConfig, params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    # jnp.array(..., copy=True): a no-copy astype would alias params and
+    # break donation (same buffer donated twice in the train step)
+    master = jax.tree.map(
+        lambda p: jnp.array(p, jnp.float32, copy=True), params) \
+        if cfg.use_master else None
+    return OptState(m=zeros,
+                    v=jax.tree.map(jnp.copy, zeros),
+                    master=master, step=jnp.int32(0))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, grads, opt: OptState, params):
+    """Returns (new_params, new_opt, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = opt.step + 1
+    lr = cosine_schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    ref = opt.master if cfg.use_master else params
+
+    gs = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+    m = jax.tree.map(lambda m_, g: cfg.b1 * m_ + (1 - cfg.b1) * g,
+                     opt.m, gs)
+    v = jax.tree.map(lambda v_, g: cfg.b2 * v_ + (1 - cfg.b2) * g * g,
+                     opt.v, gs)
+    newf = jax.tree.map(
+        lambda m_, v_, p: p.astype(jnp.float32) - lr * (
+            (m_ / b1c) / (jnp.sqrt(v_ / b2c) + cfg.eps)
+            + cfg.weight_decay * p.astype(jnp.float32)),
+        m, v, ref)
+    new_params = jax.tree.map(lambda nf, p: nf.astype(p.dtype),
+                              newf, params)
+    new_master = newf if cfg.use_master else None
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(m, v, new_master, step), metrics

@@ -1,0 +1,4 @@
+from .engine import ServeConfig, ServingEngine, make_prefill_step, make_decode_step
+
+__all__ = ["ServeConfig", "ServingEngine", "make_prefill_step",
+           "make_decode_step"]

@@ -1,0 +1,3 @@
+from .policy import ShardingPolicy, make_policy
+
+__all__ = ["ShardingPolicy", "make_policy"]

@@ -1,0 +1,233 @@
+"""Logical-axis sharding policy (MaxText-style rules, divisibility-safe).
+
+Every parameter/activation/cache tensor carries *logical* axis names;
+a rule table maps each name to the mesh axes it wants.  ``spec_for``
+degrades gracefully: a mesh-axis product that does not divide the dim
+drops trailing axes (and finally the whole rule), and no mesh axis is
+used twice in one tensor — so the same rule set serves smollm's 9
+heads and nemotron's 48 without special cases.
+
+Modes:
+  train  — 2D weight sharding ("model" on TP dims, FSDP on "embed"
+           over the batch axes), batch over (pod, data), EP for
+           experts, activations TP on ffn/vocab.
+  serve  — TP over "model"; weights additionally FSDP over "data"
+           when the per-chip estimate exceeds ``serve_fsdp_gb``
+           (the 100B+ archs); KV caches shard batch over (pod, data)
+           and sequence over "model" (kv-head sharding is preferred
+           automatically when divisible — see make_policy).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig, ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    mesh: Mesh
+    param_rules: dict
+    act_rules: dict
+    cache_rules: dict
+    # logical axes where an unsharded resolution means "emit no
+    # constraint at all" rather than "force replication": forcing
+    # head replication is a measured win for collective-bound train
+    # cells but a 2-15x memory regression for prefill (EXPERIMENTS.md
+    # §Perf iteration 5)
+    soft_axes: frozenset = frozenset()
+
+    # -- core: logical axes + shape -> PartitionSpec -------------------
+    def _resolve(self, shape, axes, rules) -> P:
+        used: set = set()
+        out = []
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        for dim, ax in zip(shape, axes):
+            want = tuple(rules.get(ax, ()) or ())
+            want = tuple(a for a in want if a not in used)
+            # drop trailing axes until the product divides the dim
+            while want:
+                prod = int(np.prod([sizes[a] for a in want]))
+                if prod > 0 and dim % prod == 0 and prod > 1:
+                    break
+                want = want[:-1]
+            if want:
+                used.update(want)
+                out.append(want if len(want) > 1 else want[0])
+            else:
+                out.append(None)
+        return P(*out)
+
+    def param_spec(self, shape, axes) -> P:
+        return self._resolve(shape, axes, self.param_rules)
+
+    def act_spec(self, shape, axes) -> P:
+        return self._resolve(shape, axes, self.act_rules)
+
+    def cache_spec(self, shape, axes) -> P:
+        return self._resolve(shape, axes, self.cache_rules)
+
+    # -- pytree helpers -------------------------------------------------
+    def param_pspecs(self, spec_tree):
+        return jax.tree.map(
+            lambda s: self.param_spec(s.shape, s.axes), spec_tree,
+            is_leaf=lambda x: isinstance(x, ParamSpec))
+
+    def param_shardings(self, spec_tree):
+        return jax.tree.map(
+            lambda s: NamedSharding(self.mesh,
+                                    self.param_spec(s.shape, s.axes)),
+            spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+    def constrain(self, x, axes):
+        """The callback threaded through the model as ``constrain``."""
+        if x.ndim != len(axes):
+            return x
+        spec = self.act_spec(x.shape, axes)
+        for ax, sp in zip(axes, spec):
+            if ax in self.soft_axes and sp is None:
+                return x          # skip: don't force replication
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def batch_spec(self) -> P:
+        ax = self.act_rules.get("batch", ())
+        return P(ax if len(ax) > 1 else (ax[0] if ax else None))
+
+    def batch_sharding(self) -> NamedSharding:
+        return NamedSharding(self.mesh, self.batch_spec())
+
+
+# ----------------------------------------------------------------------
+def _batch_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def estimate_param_bytes(spec_tree, bytes_per: int = 2) -> int:
+    total = 0
+    for s in jax.tree.leaves(
+            spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec)):
+        total += int(np.prod(s.shape)) * bytes_per
+    return total
+
+
+def make_policy(mesh: Mesh, cfg: ModelConfig, mode: str, *,
+                param_specs=None, serve_fsdp_gb: float = 8.0,
+                small_batch: bool = False) -> ShardingPolicy:
+    """Build the rule tables for (mesh, arch, mode).
+
+    mode: "train" | "serve".  ``small_batch`` (long_500k) re-targets
+    the idle batch axes at the cache sequence dim.
+    """
+    b_axes = _batch_axes(mesh)
+    mdl = ("model",) if "model" in mesh.axis_names else ()
+
+    # ---------------- parameters ----------------
+    tp_dims = {
+        "ffn": mdl, "vocab": mdl, "q_features": mdl, "kv_features": mdl,
+        "experts": mdl, "heads": mdl,
+        "kv_lora": (), "lora": (), "five": (), "conv": (), "seq": (),
+        "ffn2": (), "head_dim": (), "layers": (),
+    }
+    if mode == "train":
+        # 2D: TP dims over model, FSDP the embed dim over batch axes
+        param_rules = dict(tp_dims, embed=b_axes)
+    else:
+        pb = estimate_param_bytes(param_specs) if param_specs else 0
+        per_chip = pb / max(np.prod([mesh.devices.shape[
+            mesh.axis_names.index(a)] for a in mdl]) if mdl else 1, 1)
+        big = per_chip > serve_fsdp_gb * (1 << 30)
+        param_rules = dict(tp_dims,
+                           embed=(("data",) if big and "data"
+                                  in mesh.axis_names else ()))
+
+    # ---------------- activations ----------------
+    act_rules = {
+        "batch": b_axes if not small_batch else (),
+        "seq": () if not small_batch else b_axes,
+        "embed": (), "ffn": mdl, "vocab": mdl,
+        "experts": mdl, "exp_capacity": b_axes,
+        "heads": mdl, "kv_heads": mdl, "head_dim": (),
+    }
+
+    # ---------------- caches / states ----------------
+    kv_div = cfg.n_kv_heads and "model" in mesh.axis_names and \
+        cfg.n_kv_heads % mesh.devices.shape[
+            mesh.axis_names.index("model")] == 0
+    cache_rules = {
+        "layers": (), "cache_batch": b_axes if not small_batch else (),
+        "kv_heads": mdl if kv_div else (),
+        "cache_seq": (() if kv_div else mdl) +
+                     (b_axes if small_batch else ()),
+        "head_dim": (), "kv_lora": (),
+        "embed": (), "ffn": mdl, "ffn2": (),
+        "heads": mdl, "enc_seq": (), "conv": (),
+    }
+    soft = frozenset() if mode == "train" else         frozenset({"heads", "kv_heads"})
+    return ShardingPolicy(mesh=mesh, param_rules=param_rules,
+                          act_rules=act_rules, cache_rules=cache_rules,
+                          soft_axes=soft)
+
+
+# ----------------------------------------------------------------------
+# cache logical axes (mirrors models.transformer.init_cache structure)
+# ----------------------------------------------------------------------
+def cache_logical_axes(cfg: ModelConfig, cache) -> Any:
+    """Annotate a cache pytree with logical axes by leaf shape/role."""
+    from repro.models.attention import KVCache, MLACache
+    from repro.models.rwkv6 import RWKVState
+    from repro.models.rglru import RGLRUState
+
+    def annotate(node):
+        if isinstance(node, KVCache):
+            return KVCache(
+                k=("layers", "cache_batch", "cache_seq", "kv_heads",
+                   "head_dim"),
+                v=("layers", "cache_batch", "cache_seq", "kv_heads",
+                   "head_dim"),
+                length=("layers",))
+        if isinstance(node, MLACache):
+            return MLACache(
+                c_kv=("layers", "cache_batch", "cache_seq", "kv_lora"),
+                k_rope=("layers", "cache_batch", "cache_seq", "head_dim"),
+                length=("layers",))
+        if isinstance(node, RWKVState):
+            return RWKVState(
+                tm_last=("layers", "cache_batch", "embed"),
+                cm_last=("layers", "cache_batch", "embed"),
+                S=("layers", "cache_batch", "heads", "head_dim", "ffn2"))
+        if isinstance(node, RGLRUState):
+            return RGLRUState(
+                h=("layers", "cache_batch", "ffn"),
+                conv=("layers", "cache_batch", "conv", "ffn"))
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if k in ("cross_k", "cross_v"):
+                    out[k] = ("layers", "cache_batch", "enc_seq",
+                              "kv_heads", "head_dim")
+                else:
+                    out[k] = annotate(v)
+            return out
+        if isinstance(node, list):
+            return [annotate(v) for v in node]
+        return node
+
+    return annotate(cache)
+
+
+def cache_pspecs(policy: ShardingPolicy, cfg: ModelConfig, cache):
+    axes_tree = cache_logical_axes(cfg, cache)
+    flat_c, treedef = jax.tree.flatten(cache)
+    # leaves are tuples-of-strings; namedtuple containers are not
+    flat_a = jax.tree.leaves(
+        axes_tree, is_leaf=lambda x: isinstance(x, tuple) and
+        bool(x) and all(isinstance(e, str) for e in x))
+    assert len(flat_c) == len(flat_a), (len(flat_c), len(flat_a))
+    specs = [policy.cache_spec(c.shape, a) for c, a in zip(flat_c, flat_a)]
+    return jax.tree.unflatten(treedef, specs)

@@ -1,0 +1,22 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on 1 device;
+only launch/dryrun.py forces 512 host devices."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def small_pfo_config(**kw):
+    from repro.core import PFOConfig
+    base = dict(dim=16, L=3, C=2, m=2, l=16, t=4,
+                max_nodes_per_tree=64, max_leaves_per_tree=256,
+                main_m=3, main_max_nodes_per_tree=128,
+                main_max_leaves_per_tree=1024, store_capacity=8192,
+                max_candidates_per_probe=16, max_candidates_total=192,
+                max_snapshots=4, bloom_bits=1 << 12, snap_prefix_bits=8,
+                snap_budget_per_probe=16)
+    base.update(kw)
+    return PFOConfig(**base)

@@ -1,0 +1,101 @@
+"""Adaptive hash tree unit + property tests (paper §5.1 semantics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hash_tree import (TreeConfig, init_tree, tree_delete,
+                                  tree_insert, tree_lookup, tree_query)
+
+CFG = TreeConfig(skip_bits=2, log2_l=4, l=16, t=3, max_depth=7,
+                 max_nodes=128, max_leaves=512, max_candidates=64)
+
+
+def _insert_all(pairs, cfg=CFG):
+    stt = init_tree(cfg)
+    for h, vid in pairs:
+        stt = tree_insert(stt, jnp.uint32(h), jnp.int32(vid),
+                          jnp.int32(vid), cfg)
+    return stt
+
+
+def test_insert_then_query_returns_chain():
+    stt = _insert_all([(0x80000000, 1), (0x80000001, 2)])
+    ids, vals, n = tree_query(stt, jnp.uint32(0x80000000), CFG)
+    got = set(np.asarray(ids)[np.asarray(ids) >= 0].tolist())
+    assert 1 in got          # same bucket prefix keeps both reachable
+    assert int(stt.n_items) == 2
+
+
+def test_bucket_spread_after_t_exceeded():
+    # 5 keys sharing the root slot but differing at the next level
+    keys = [0x10000000 | (i << 20) for i in range(5)]
+    stt = _insert_all([(k, i) for i, k in enumerate(keys)])
+    # root slot must now point at a directory node (split happened)
+    assert int(stt.node_cnt) >= 2
+    for i, k in enumerate(keys):
+        val, found = tree_lookup(stt, jnp.uint32(k), jnp.int32(i), CFG)
+        assert bool(found) and int(val) == i
+
+
+def test_delete_unlinks_and_reclaims():
+    stt = _insert_all([(0xA0000000, 1), (0xA0000000, 2), (0xA0000000, 3)])
+    stt, found = tree_delete(stt, jnp.uint32(0xA0000000), jnp.int32(2), CFG)
+    assert bool(found)
+    assert int(stt.n_items) == 2
+    assert int(stt.free_head) > 0          # leaf on the free list
+    _, f2 = tree_lookup(stt, jnp.uint32(0xA0000000), jnp.int32(2), CFG)
+    assert not bool(f2)
+    # free slot is reused by the next insert
+    before = int(stt.leaf_cnt)
+    stt = tree_insert(stt, jnp.uint32(0xA0000000), jnp.int32(9),
+                      jnp.int32(9), CFG)
+    assert int(stt.leaf_cnt) == before     # bump cursor untouched
+
+
+def test_update_newest_version_wins():
+    stt = _insert_all([(0xB0000000, 7)])
+    stt = tree_insert(stt, jnp.uint32(0xB0000000), jnp.int32(7),
+                      jnp.int32(123), CFG)
+    val, found = tree_lookup(stt, jnp.uint32(0xB0000000), jnp.int32(7), CFG)
+    assert bool(found) and int(val) == 123  # prepend => newest first
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=60,
+                unique=True))
+def test_property_every_inserted_key_is_findable(keys):
+    pairs = [(k, i) for i, k in enumerate(keys)]
+    stt = _insert_all(pairs)
+    assert int(stt.overflow) == 0
+    for k, i in pairs:
+        val, found = tree_lookup(stt, jnp.uint32(k), jnp.int32(i), CFG)
+        assert bool(found) and int(val) == i
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(0, 2**32 - 1), min_size=2, max_size=40,
+                unique=True),
+       st.data())
+def test_property_delete_removes_only_target(keys, data):
+    pairs = [(k, i) for i, k in enumerate(keys)]
+    stt = _insert_all(pairs)
+    victim = data.draw(st.integers(0, len(keys) - 1))
+    stt, found = tree_delete(stt, jnp.uint32(keys[victim]),
+                             jnp.int32(victim), CFG)
+    assert bool(found)
+    for k, i in pairs:
+        val, f = tree_lookup(stt, jnp.uint32(k), jnp.int32(i), CFG)
+        if i == victim:
+            assert not bool(f)
+        else:
+            assert bool(f) and int(val) == i
+
+
+def test_chain_capped_query_still_terminates():
+    # adversarial: many identical keys (chain growth at max depth)
+    stt = _insert_all([(0xFFFFFFFF, i) for i in range(40)])
+    ids, vals, n = tree_query(stt, jnp.uint32(0xFFFFFFFF), CFG)
+    assert int(n) <= CFG.max_candidates
+    assert int(stt.n_items) == 40

@@ -1,0 +1,73 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True on CPU) vs the
+pure-jnp oracles in kernels/ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _k(i):
+    return jax.random.fold_in(KEY, i)
+
+
+@pytest.mark.parametrize("n,d,tables", [
+    (1, 8, 1), (7, 33, 2), (37, 100, 3), (128, 64, 4), (130, 257, 2),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lsh_hash_matches_ref(n, d, tables, dtype):
+    x = jax.random.normal(_k(n), (n, d), dtype)
+    a = jax.random.normal(_k(n + 1), (d, tables * 32), jnp.float32)
+    got = ops.lsh_hash(x.astype(jnp.float32), a)
+    want = ref.ref_lsh_hash(x.astype(jnp.float32), a)
+    assert got.dtype == jnp.uint32 and got.shape == (n, tables)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("q,c,d", [
+    (1, 1, 8), (5, 33, 48), (8, 128, 128), (9, 130, 65),
+])
+def test_rank_dots_matches_ref(q, c, d):
+    qq = jax.random.normal(_k(q), (q, d))
+    xx = jax.random.normal(_k(q + 7), (q, c, d))
+    np.testing.assert_allclose(np.asarray(ops.rank_dots(qq, xx)),
+                               np.asarray(ref.ref_rank_dots(qq, xx)),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("q,n,d", [
+    (1, 1, 8), (5, 57, 48), (128, 128, 256), (33, 200, 100),
+])
+def test_pair_dist_matches_ref(q, n, d):
+    qq = jax.random.normal(_k(q + 13), (q, d))
+    xx = jax.random.normal(_k(q + 17), (n, d))
+    np.testing.assert_allclose(np.asarray(ops.pair_dist_sq(qq, xx)),
+                               np.asarray(ref.ref_pair_dist(qq, xx)),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("q,n,w", [(1, 1, 1), (9, 13, 4), (130, 70, 10)])
+def test_hamming_matches_ref(q, n, w):
+    a = jax.random.randint(_k(q + 23), (q, w), 0, 2**31 - 1,
+                           dtype=jnp.int32).astype(jnp.uint32)
+    b = jax.random.randint(_k(q + 29), (n, w), 0, 2**31 - 1,
+                           dtype=jnp.int32).astype(jnp.uint32)
+    np.testing.assert_array_equal(np.asarray(ops.hamming(a, b)),
+                                  np.asarray(ref.ref_hamming(a, b)))
+
+
+def test_hamming_identity_is_zero():
+    a = jax.random.randint(_k(3), (17, 5), 0, 2**31 - 1,
+                           dtype=jnp.int32).astype(jnp.uint32)
+    d = np.asarray(ops.hamming(a, a))
+    assert (np.diag(d) == 0).all()
+
+
+def test_brute_force_topk_exact():
+    x = jax.random.normal(_k(50), (200, 32))
+    q = x[:5] + 0.001
+    ids, d = ops.brute_force_topk(q, x, 3, "l2")
+    assert (np.asarray(ids)[:, 0] == np.arange(5)).all()

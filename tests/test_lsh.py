@@ -1,0 +1,85 @@
+"""LSH primitive properties: distance preservation, key bits, murmur."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from conftest import small_pfo_config
+from repro.core import lsh
+
+
+def test_key_bits_msb_first():
+    h = jnp.uint32(0b1010 << 28)
+    assert int(lsh.key_bits(h, 0, 4)) == 0b1010
+    assert int(lsh.key_bits(h, 1, 3)) == 0b010
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(0, 2**32 - 1))
+def test_llcp_int_matches_python(a, b):
+    x = a ^ b
+    want = 32 if x == 0 else 32 - x.bit_length()
+    assert int(lsh.llcp_int(jnp.uint32(a), jnp.uint32(b))) == want
+
+
+def test_murmur_is_deterministic_and_spreads():
+    xs = jnp.arange(4096, dtype=jnp.uint32)
+    h = lsh.murmur3_fmix32(xs)
+    assert len(np.unique(np.asarray(h))) == 4096   # fmix32 is a bijection
+    # top-4-bit buckets roughly uniform
+    counts = np.bincount(np.asarray(h >> jnp.uint32(28)), minlength=16)
+    assert counts.min() > 150
+
+
+def test_pack_unpack_roundtrip():
+    keys = jax.random.randint(jax.random.PRNGKey(0), (50,), 0, 2**31 - 1,
+                              dtype=jnp.int32).astype(jnp.uint32)
+    bits = lsh.unpack_bits_msb(keys)
+    back = lsh.pack_bits_msb(bits)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(keys))
+
+
+def test_srp_preserves_similarity():
+    """Closer vectors share longer key prefixes on average (Def. 1/2)."""
+    cfg = small_pfo_config(dim=32, L=4)
+    proj = lsh.make_projections(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    base = rng.normal(size=(200, 32)).astype(np.float32)
+    near = base + rng.normal(size=base.shape).astype(np.float32) * 0.05
+    far = rng.normal(size=base.shape).astype(np.float32)
+    hb = lsh.hash_vectors(jnp.asarray(base), proj["table_proj"], 32)
+    hn = lsh.hash_vectors(jnp.asarray(near), proj["table_proj"], 32)
+    hf = lsh.hash_vectors(jnp.asarray(far), proj["table_proj"], 32)
+    llcp_near = np.asarray(lsh.llcp_int(hb, hn)).mean()
+    llcp_far = np.asarray(lsh.llcp_int(hb, hf)).mean()
+    assert llcp_near > llcp_far + 5
+
+
+def test_partition_level_preserves_similarity():
+    """PHF's second-level hash keeps similar keys in the same region
+    more often than dissimilar ones (paper §4.1)."""
+    cfg = small_pfo_config(dim=32, L=2, C=3)
+    proj = lsh.make_projections(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(1)
+    base = rng.normal(size=(300, 32)).astype(np.float32)
+    near = base + rng.normal(size=base.shape).astype(np.float32) * 0.03
+    far = rng.normal(size=base.shape).astype(np.float32)
+    rb = np.asarray(lsh.region_ids(
+        lsh.hash_vectors(jnp.asarray(base), proj["table_proj"], 32),
+        proj["part_proj"], cfg))
+    rn = np.asarray(lsh.region_ids(
+        lsh.hash_vectors(jnp.asarray(near), proj["table_proj"], 32),
+        proj["part_proj"], cfg))
+    rf = np.asarray(lsh.region_ids(
+        lsh.hash_vectors(jnp.asarray(far), proj["table_proj"], 32),
+        proj["part_proj"], cfg))
+    assert (rb == rn).mean() > (rb == rf).mean() + 0.2
+
+
+def test_region_ids_within_range():
+    cfg = small_pfo_config(C=2, m=2)
+    proj = lsh.make_projections(jax.random.PRNGKey(2), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (64, cfg.dim))
+    h = lsh.hash_vectors(x, proj["table_proj"], 32)
+    r = np.asarray(lsh.region_ids(h, proj["part_proj"], cfg))
+    assert r.min() >= 0 and r.max() < cfg.n_trees

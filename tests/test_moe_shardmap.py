@@ -1,0 +1,44 @@
+"""shard_map MoE dispatch == GSPMD reference (run in a subprocess so
+the 8-device XLA flag never leaks into other tests)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["REPRO_PALLAS"] = "off"
+import numpy as np, jax, jax.numpy as jnp
+from repro import configs
+from repro.models import moe as moe_mod
+from repro.models.registry import build_model
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+for arch, gi in (("llama4_scout_17b_a16e", 0), ("deepseek_v2_236b", 1)):
+    cfg = configs.get_config(arch, reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), jnp.float32)
+    grp = params["groups"][gi]
+    mp = jax.tree.map(lambda a: a[0], grp[list(grp)[0]]["moe"])
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(2, 16, cfg.d_model)), jnp.float32)
+    ref = moe_mod.moe_apply(mp, cfg, x)
+    with jax.sharding.set_mesh(mesh):
+        got = moe_mod.moe_apply_shardmap(mp, cfg, x)
+    diff = float(jnp.max(jnp.abs(ref - got)))
+    assert diff < 1e-5, (arch, diff)
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_shardmap_moe_matches_gspmd():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=420,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    assert "OK" in out.stdout, out.stderr[-2000:]

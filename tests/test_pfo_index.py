@@ -1,0 +1,101 @@
+"""PFOIndex system tests: insert/query/delete/update + hierarchical
+memory (seal/merge) + recall against the brute-force oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import small_pfo_config
+from repro.core import PFOIndex
+from repro.kernels import ops
+
+
+@pytest.fixture(scope="module")
+def loaded_index():
+    cfg = small_pfo_config()
+    rng = np.random.default_rng(1)
+    n = 1200
+    vecs = rng.normal(size=(n, cfg.dim)).astype(np.float32)
+    vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
+    idx = PFOIndex(cfg, seed=0)
+    for s in range(0, n, 400):
+        idx.insert(np.arange(s, s + 400, dtype=np.int32), vecs[s:s + 400])
+    return idx, vecs
+
+
+def test_no_arena_overflow_by_construction(loaded_index):
+    idx, _ = loaded_index
+    assert idx.stats()["overflow_events"] == 0
+
+
+def test_query_returns_self(loaded_index):
+    idx, vecs = loaded_index
+    q = vecs[100:110]
+    ids, dists = idx.query(q, k=5)
+    assert (ids[:, 0] == np.arange(100, 110)).all()
+    np.testing.assert_allclose(dists[:, 0], 0.0, atol=1e-5)
+
+
+def test_recall_beats_random(loaded_index):
+    idx, vecs = loaded_index
+    rng = np.random.default_rng(3)
+    q = vecs[:32] + rng.normal(size=(32, vecs.shape[1])).astype(
+        np.float32) * 0.05
+    ids, _ = idx.query(q, k=10)
+    oid, _ = ops.brute_force_topk(jnp.asarray(q), jnp.asarray(vecs), 10,
+                                  "angular")
+    oid = np.asarray(oid)
+    recall = np.mean([len(set(ids[i]) & set(oid[i])) / 10
+                      for i in range(32)])
+    assert recall > 0.15      # >> 10/1200 random baseline
+
+
+def test_hierarchical_memory_seals(loaded_index):
+    idx, _ = loaded_index
+    st = idx.stats()
+    # 1200 inserts with 256-leaf trees must have sealed at least once
+    assert st["stamp"] >= 1
+    assert st["snapshots"] >= 1
+
+
+def test_delete_then_query_excludes(loaded_index):
+    idx, vecs = loaded_index
+    victims = np.array([500, 501, 502], np.int32)
+    idx.delete(victims)
+    ids, _ = idx.query(vecs[500:503], k=5)
+    assert not np.isin(victims, ids).any()
+
+
+def test_update_changes_answer(loaded_index):
+    idx, vecs = loaded_index
+    # move vector 700 to the opposite pole; then its own query should
+    # find the new location (distance 0), not the old one
+    new = -vecs[700:701]
+    idx.update(np.array([700], np.int32), new)
+    ids, dists = idx.query(new, k=3)
+    assert ids[0, 0] == 700
+    assert dists[0, 0] < 1e-5
+
+
+def test_merge_compaction_preserves_queries():
+    cfg = small_pfo_config()
+    rng = np.random.default_rng(5)
+    vecs = rng.normal(size=(600, cfg.dim)).astype(np.float32)
+    idx = PFOIndex(cfg, seed=0)
+    idx.insert(np.arange(600, dtype=np.int32), vecs)
+    from repro.core import merge_step, seal_step
+    idx.state = seal_step(idx.state, cfg)
+    idx.state = merge_step(idx.state, cfg)
+    ids, dists = idx.query(vecs[:8], k=3)
+    assert (ids[:, 0] == np.arange(8)).all()
+
+
+def test_store_slots_reclaimed():
+    cfg = small_pfo_config()
+    rng = np.random.default_rng(6)
+    vecs = rng.normal(size=(100, cfg.dim)).astype(np.float32)
+    idx = PFOIndex(cfg, seed=0)
+    idx.insert(np.arange(100, dtype=np.int32), vecs)
+    free0 = idx.stats()["store_free"]
+    idx.delete(np.arange(50, dtype=np.int32))
+    assert idx.stats()["store_free"] == free0 + 50

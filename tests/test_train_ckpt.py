@@ -1,0 +1,114 @@
+"""Training substrate: optimizer, loss-goes-down, checkpoint/restart
+fault tolerance, elastic resharding, data determinism/skip-ahead."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.data import SyntheticLM
+from repro.models.registry import build_model
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from repro.train import TrainConfig, Trainer
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_frac=0.1)
+    assert float(cosine_schedule(cfg, jnp.int32(0))) == 0.0
+    assert abs(float(cosine_schedule(cfg, jnp.int32(10))) - 1.0) < 1e-6
+    assert float(cosine_schedule(cfg, jnp.int32(100))) == pytest.approx(
+        0.1, rel=1e-3)
+
+
+def test_adamw_moves_params_against_grad():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                      total_steps=10)
+    params = {"w": jnp.ones((4,), jnp.float32)}
+    opt = adamw_init(cfg, params)
+    grads = {"w": jnp.ones((4,), jnp.float32)}
+    new, opt, metrics = adamw_update(cfg, grads, opt, params)
+    assert (np.asarray(new["w"]) < 1.0).all()
+    assert float(metrics["grad_norm"]) == pytest.approx(2.0)
+
+
+def test_data_determinism_and_sharding():
+    d = SyntheticLM(vocab_size=64, seq_len=16, global_batch=8, seed=3)
+    b1, b2 = d.batch(5), d.batch(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # shards partition the global batch rows
+    s0 = d.batch(5, shard=0, n_shards=2)
+    assert s0["tokens"].shape[0] == 4
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+def test_training_reduces_loss(tmp_path):
+    cfg = configs.get_config("smollm_135m", reduced=True)
+    model = build_model(cfg)
+    data = SyntheticLM(cfg.vocab_size, seq_len=32, global_batch=8)
+    tcfg = TrainConfig(steps=100, ckpt_every=1000, log_every=100,
+                       ckpt_dir=str(tmp_path / "ck"), loss_chunk=16,
+                       opt=AdamWConfig(lr=1e-2, warmup_steps=10,
+                                       total_steps=100,
+                                       weight_decay=0.0))
+    out = Trainer(model, data, tcfg).run(resume=False)
+    first = np.mean(out["losses"][:5])
+    last = np.mean(out["losses"][-5:])
+    assert last < first - 1.0, (first, last)
+
+
+def test_checkpoint_restart_exact_resume(tmp_path):
+    """Fault tolerance: kill at step 20, restart, final state equals an
+    uninterrupted run (bitwise on params)."""
+    cfg = configs.get_config("smollm_135m", reduced=True)
+    model = build_model(cfg)
+    data = SyntheticLM(cfg.vocab_size, seq_len=32, global_batch=4)
+
+    def mk(dirname, steps):
+        return TrainConfig(steps=steps, ckpt_every=10, log_every=1000,
+                           ckpt_dir=str(tmp_path / dirname), loss_chunk=16,
+                           opt=AdamWConfig(lr=1e-3, warmup_steps=2,
+                                           total_steps=40))
+
+    ref = Trainer(model, data, mk("a", 20)).run(resume=False)
+
+    t = Trainer(model, data, mk("b", 10))
+    t.run(resume=False)                       # "crash" after 10 steps
+    assert latest_step(str(tmp_path / "b")) == 10
+    out = Trainer(model, data, mk("b", 20)).run(resume=True)  # restart
+    for a, b in zip(jax.tree.leaves(ref["params"]),
+                    jax.tree.leaves(out["params"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_checkpoint_reshard_roundtrip(tmp_path):
+    """Elastic restart: save replicated, restore with a different
+    sharding (1-device mesh here; the mechanism is sharding-agnostic)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    tree = {"a": jnp.arange(16, dtype=jnp.float32).reshape(4, 4),
+            "b": {"c": jnp.ones((3,), jnp.bfloat16)}}
+    save_checkpoint(str(tmp_path), 7, tree, {"note": "x"})
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = {"a": NamedSharding(mesh, P("data")),
+          "b": {"c": NamedSharding(mesh, P())}}
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored, extra = restore_checkpoint(str(tmp_path), 7, like, sh)
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+    assert extra["note"] == "x"
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A half-written checkpoint dir is never picked up."""
+    tree = {"a": jnp.ones((2,))}
+    save_checkpoint(str(tmp_path), 1, tree)
+    # simulate a crashed writer: step dir without manifest
+    os.makedirs(tmp_path / "step_00000002")
+    assert latest_step(str(tmp_path)) == 1
