@@ -9,8 +9,7 @@ import argparse
 import re
 from collections import defaultdict
 
-import zstandard
-
+from common import load_hlo
 from repro.analysis import hlo as H
 
 
@@ -75,8 +74,7 @@ def main():
     ap.add_argument("hlo_zst")
     ap.add_argument("-n", type=int, default=15)
     args = ap.parse_args()
-    text = zstandard.ZstdDecompressor().decompress(
-        open(args.hlo_zst, "rb").read()).decode()
+    text = load_hlo(args.hlo_zst)
     breakdown(text, args.n)
 
 

@@ -51,6 +51,16 @@ def timeit(fn, *args, warmup: int = 1, iters: int = 3):
     return float(np.median(ts))
 
 
+def load_hlo(path: str) -> str:
+    """Read a dry-run HLO artifact, zstd (.zst) or raw (no-zstd fallback
+    writers emit plain '.hlo' — see launch/dryrun.py)."""
+    blob = open(path, "rb").read()
+    if path.endswith(".zst"):
+        import zstandard
+        return zstandard.ZstdDecompressor().decompress(blob).decode()
+    return blob.decode()
+
+
 def bench_cfg(**kw) -> PFOConfig:
     base = dict(dim=64, L=4, C=2, m=2, l=32, t=4,
                 max_nodes_per_tree=128, max_leaves_per_tree=512,

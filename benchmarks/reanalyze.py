@@ -10,8 +10,7 @@ import argparse
 import json
 import os
 
-import zstandard
-
+from common import load_hlo
 from repro.analysis.hlo import analyze_hlo
 
 
@@ -22,14 +21,13 @@ def main():
     ap.add_argument("-o", "--out", required=True)
     args = ap.parse_args()
 
-    dctx = zstandard.ZstdDecompressor()
     with open(args.out, "w") as sink:
         for line in open(args.jsonl):
             r = json.loads(line)
             f = r.get("hlo_file")
             path = os.path.join(args.hlo_dir, f) if f else None
             if r.get("ok") and path and os.path.exists(path):
-                hlo = dctx.decompress(open(path, "rb").read()).decode()
+                hlo = load_hlo(path)
                 st = analyze_hlo(hlo)
                 r.update(flops=st.flops,
                          hlo_bytes_accessed=st.bytes_accessed,

@@ -1,0 +1,162 @@
+"""Streaming benchmark (paper §6 online workload, Figures 6-8 style):
+sustained *interleaved* query+update throughput and per-flush latency,
+stream engine vs. per-request PFOIndex calls.
+
+The workload is an open request stream mixing queries, inserts, deletes
+and updates (default 50/25/12.5/12.5 — the paper's query+update online
+serving regime, §2.2).  Two servers run it:
+
+  per-request — every request is its own ``PFOIndex`` call (batch 1),
+                the pre-engine host loop;
+  engine      — requests are coalesced by ``serving.stream.StreamEngine``
+                into power-of-two size-bucketed micro-batches and applied
+                with device-resident flag-word rounds.
+
+Reported: sustained requests/s for both, speedup, p50/p99 per-flush
+latency, round/sync/maintenance counters, and the jit-cache assertion
+(compiled step variants <= number of size buckets — the cache cannot
+grow with traffic).
+
+    PYTHONPATH=src python benchmarks/streaming.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from common import bench_cfg, clustered_dataset
+from repro.core import PFOIndex
+from repro.core.index import delete_step, insert_step, query_step
+from repro.serving import StreamConfig, StreamEngine
+
+
+def make_workload(n_requests: int, dim: int, seed: int = 0,
+                  mix=(0.5, 0.25, 0.125, 0.125), n_seed_vecs: int = 2000):
+    """(requests, seed_ids, seed_vecs): seed corpus + an interleaved
+    open stream of (kind, *args) tuples over it."""
+    ids, vecs, _ = clustered_dataset(n_seed_vecs, dim, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    new_vecs = np.asarray(vecs)[rng.integers(0, n_seed_vecs, n_requests)]
+    noise = rng.normal(size=new_vecs.shape).astype(np.float32) * 0.05
+    stream_vecs = new_vecs + noise
+    kinds = rng.choice(4, size=n_requests, p=mix)
+    reqs = []
+    next_id = n_seed_vecs
+    for i, kd in enumerate(kinds):
+        v = stream_vecs[i]
+        if kd == 0:
+            reqs.append(("query", v))
+        elif kd == 1:
+            reqs.append(("insert", next_id, v))
+            next_id += 1
+        elif kd == 2:
+            reqs.append(("delete", int(rng.integers(0, next_id))))
+        else:
+            reqs.append(("update", int(rng.integers(0, n_seed_vecs)), v))
+    return reqs, np.asarray(ids), np.asarray(vecs)
+
+
+def run_per_request(index: PFOIndex, requests, k: int) -> float:
+    """Every request is its own PFOIndex call; returns elapsed seconds."""
+    t0 = time.perf_counter()
+    for req in requests:
+        kind, args = req[0], req[1:]
+        if kind == "query":
+            index.query(args[0][None, :], k=k)
+        elif kind == "insert":
+            index.insert(np.asarray([args[0]], np.int32), args[1][None, :])
+        elif kind == "delete":
+            index.delete(np.asarray([args[0]], np.int32))
+        else:
+            index.update(np.asarray([args[0]], np.int32), args[1][None, :])
+    return time.perf_counter() - t0
+
+
+def run_engine(engine: StreamEngine, requests, flush_every: int):
+    """Closed-loop engine run; returns (elapsed s, per-flush latencies)."""
+    from repro.serving.stream import drive
+    _, elapsed, lat = drive(engine, requests, flush_every=flush_every)
+    return elapsed, lat
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=4000)
+    ap.add_argument("--seed-vecs", type=int, default=2000)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--max-batch", type=int, default=256)
+    ap.add_argument("--query-max-batch", type=int, default=8)
+    ap.add_argument("--flush-every", type=int, default=256)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes + assertions only (CI)")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    if args.smoke:
+        args.requests, args.seed_vecs = 600, 500
+        args.max_batch, args.flush_every = 64, 64
+
+    cfg = bench_cfg(dim=args.dim)
+    reqs, seed_ids, seed_vecs = make_workload(
+        args.requests, args.dim, n_seed_vecs=args.seed_vecs)
+
+    # ---- engine ------------------------------------------------------
+    scfg = StreamConfig(max_batch=args.max_batch, min_batch=8,
+                        query_max_batch=args.query_max_batch,
+                        default_k=args.k)
+    eng = StreamEngine(PFOIndex(cfg, seed=0), scfg)
+    ins_before = insert_step._cache_size()
+    del_before = delete_step._cache_size()
+    qry_before = query_step._cache_size()
+    eng.index.insert(seed_ids, seed_vecs)            # seed corpus
+    # warmup: precompile every bucket variant, then run a stream prefix
+    eng.warmup()
+    warm = max(args.flush_every, 64)
+    run_engine(eng, reqs[:warm], args.flush_every)
+    t_eng, lat = run_engine(eng, reqs[warm:], args.flush_every)
+    eng_rps = (len(reqs) - warm) / t_eng
+
+    n_buckets = len(scfg.buckets)
+    ins_variants = insert_step._cache_size() - ins_before
+    del_variants = delete_step._cache_size() - del_before
+    qry_variants = query_step._cache_size() - qry_before
+    # jit cache is bounded by the bucket table, not by traffic.
+    # (insert gets one extra variant from the full-size corpus seeding.)
+    assert ins_variants <= n_buckets + 1, (ins_variants, n_buckets)
+    assert del_variants <= n_buckets, (del_variants, n_buckets)
+    assert qry_variants <= n_buckets, (qry_variants, n_buckets)
+
+    # ---- per-request baseline ---------------------------------------
+    base = PFOIndex(cfg, seed=0)
+    base.insert(seed_ids, seed_vecs)
+    run_per_request(base, reqs[:warm], args.k)       # warmup/compile
+    t_base = run_per_request(base, reqs[warm:], args.k)
+    base_rps = (len(reqs) - warm) / t_base
+
+    lat_ms = np.asarray(lat) * 1e3
+    rec = {
+        "requests": len(reqs) - warm,
+        "engine_rps": round(eng_rps, 1),
+        "per_request_rps": round(base_rps, 1),
+        "speedup": round(eng_rps / base_rps, 2),
+        "flush_p50_ms": round(float(np.percentile(lat_ms, 50)), 2),
+        "flush_p99_ms": round(float(np.percentile(lat_ms, 99)), 2),
+        "jit_variants": {"insert": ins_variants, "delete": del_variants,
+                         "query": qry_variants, "buckets": n_buckets},
+        "engine_stats": eng.stats(),
+    }
+    print(json.dumps(rec, indent=2))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rec, f)
+    if args.smoke:
+        assert rec["speedup"] >= 2.0, \
+            f"streaming engine speedup {rec['speedup']} < 2x"
+        print("SMOKE OK")
+
+
+if __name__ == "__main__":
+    main()

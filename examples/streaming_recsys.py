@@ -1,9 +1,11 @@
-"""Streaming recommendation (paper §2.2): a live stream of user-history
-vectors is *inserted* while *queries* for similar users arrive
-concurrently — the online query+update workload PFO exists for.
+"""Streaming recommendation (paper §2.2): a live, *interleaved* stream
+of user-history updates and similar-user queries served through the
+StreamEngine — the online query+update workload PFO exists for.
 
-Each epoch: a batch of new/updated user vectors lands (writes), then
-recommendations are served (reads); recall@10 vs brute force is
+Each epoch interleaves writes (new/updated user vectors) with reads
+(recommendation queries) in one request stream; the engine coalesces
+them into size-bucketed micro-batches with device-resident rounds and
+runs seal/merge epochs as explicit events.  Recall@10 vs brute force is
 tracked as the store grows, demonstrating realtime visibility of new
 data (no pause-to-update, unlike PLSH).
 
@@ -17,42 +19,50 @@ import numpy as np
 from repro.core import PFOConfig, PFOIndex
 from repro.data import VectorStream
 from repro.kernels import ops
+from repro.serving import StreamConfig, StreamEngine
 
 DIM, EPOCHS, BATCH, QUERIES = 64, 8, 800, 32
 
 cfg = PFOConfig(dim=DIM, L=6, C=2, m=2, l=32, t=4,
                 max_leaves_per_tree=512, store_capacity=1 << 16,
                 max_candidates_total=256)
-index = PFOIndex(cfg, seed=0)
+engine = StreamEngine(PFOIndex(cfg, seed=0),
+                      StreamConfig(max_batch=256, default_k=10))
+engine.warmup()
 stream = VectorStream(dim=DIM, n_clusters=24, seed=1)
 
 all_ids = np.zeros((0,), np.int32)
 all_vecs = np.zeros((0, DIM), np.float32)
 
 for epoch in range(EPOCHS):
-    # -- writes: new click-history vectors arrive --------------------
     ids, vecs = stream.batch(epoch, BATCH)
-    t0 = time.perf_counter()
-    rounds = index.insert(ids, vecs)
-    t_ins = time.perf_counter() - t0
+    q = stream.queries(epoch, QUERIES)
     all_ids = np.concatenate([all_ids, ids])
     all_vecs = np.concatenate([all_vecs, vecs])
 
-    # -- reads: concurrent similar-user queries ----------------------
-    q = stream.queries(epoch, QUERIES)
+    # one interleaved stream: writes and reads mixed, engine coalesces
     t0 = time.perf_counter()
-    got, _ = index.query(q, k=10)
-    t_q = time.perf_counter() - t0
+    tickets = []
+    qi = 0
+    for r in range(BATCH):
+        engine.insert(int(ids[r]), vecs[r])
+        if r % (BATCH // QUERIES) == 0 and qi < QUERIES:
+            tickets.append(engine.query(q[qi], k=10))
+            qi += 1
+    res = engine.flush()
+    elapsed = time.perf_counter() - t0
 
+    got = np.stack([res[t][0] for t in tickets])
     oid, _ = ops.brute_force_topk(jnp.asarray(q), jnp.asarray(all_vecs),
                                   10, "angular")
     oracle_ids = all_ids[np.asarray(oid)]
     recall = np.mean([len(set(got[i]) & set(oracle_ids[i])) / 10
                       for i in range(QUERIES)])
-    st = index.stats()
+    st = engine.stats()
     print(f"epoch {epoch}: store={len(all_ids):5d} "
-          f"insert={BATCH / t_ins:7.0f} vec/s ({rounds} rounds) "
-          f"query={QUERIES / t_q:6.0f} q/s recall@10={recall:.2f} "
-          f"snaps={st['snapshots']}")
+          f"{(BATCH + QUERIES) / elapsed:7.0f} req/s "
+          f"recall@10={recall:.2f} rounds={st['rounds']} "
+          f"syncs={st['syncs']} seals={st['seals']}")
 
-print("final stats:", index.stats())
+print("final stats:", engine.stats())
+print("index stats:", engine.index.stats())

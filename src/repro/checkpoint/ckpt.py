@@ -8,7 +8,9 @@ renamed atomically; ``latest_step`` scans for the newest complete
 checkpoint (a crashed writer leaves no half-read state — the
 fault-tolerance contract exercised in tests/test_train.py).
 
-Layout:  <dir>/step_<k>/manifest.json + <leaf-id>.npz (zstd).
+Layout:  <dir>/step_<k>/manifest.json + <leaf-id>.npz (zstd when the
+``zstandard`` package is available; raw bytes otherwise — the per-leaf
+``codec`` manifest field records which, so either build restores both).
 """
 from __future__ import annotations
 
@@ -20,14 +22,40 @@ import tempfile
 import jax
 import ml_dtypes  # noqa: F401  (registers bfloat16 with numpy)
 import numpy as np
-import zstandard
 
-_CCTX = zstandard.ZstdCompressor(level=3)
-_DCTX = zstandard.ZstdDecompressor()
+try:
+    import zstandard
+except ImportError:            # optional dep: fall back to raw bytes
+    zstandard = None
+
+_CTX: dict = {}                # lazily-built, reused zstd contexts
+
+
+def _compress(raw: bytes) -> tuple[bytes, str]:
+    if zstandard is None:
+        return raw, "raw"
+    if "c" not in _CTX:
+        _CTX["c"] = zstandard.ZstdCompressor(level=3)
+    return _CTX["c"].compress(raw), "zstd"
+
+
+def _decompress(blob: bytes, codec: str) -> bytes:
+    if codec == "raw":
+        return blob
+    if codec != "zstd":
+        raise ValueError(f"unknown checkpoint codec {codec!r}")
+    if zstandard is None:
+        raise RuntimeError(
+            "checkpoint was written with zstd but the 'zstandard' "
+            "package is not installed")
+    if "d" not in _CTX:
+        _CTX["d"] = zstandard.ZstdDecompressor()
+    return _CTX["d"].decompress(blob)
 
 
 def _flatten_with_paths(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    from repro.compat import tree_flatten_with_path
+    flat, treedef = tree_flatten_with_path(tree)
     paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
                       for k in path) for path, _ in flat]
     leaves = [leaf for _, leaf in flat]
@@ -44,12 +72,12 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, extra: dict | None
     for i, (p, leaf) in enumerate(zip(paths, leaves)):
         arr = np.asarray(jax.device_get(leaf))
         fn = f"leaf_{i:05d}.npz"
-        raw = arr.tobytes()
+        blob, codec = _compress(arr.tobytes())
         with open(os.path.join(tmp, fn), "wb") as f:
-            f.write(_CCTX.compress(raw))
+            f.write(blob)
         manifest["leaves"].append({
             "path": p, "file": fn, "shape": list(arr.shape),
-            "dtype": str(arr.dtype)})
+            "dtype": str(arr.dtype), "codec": codec})
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):
@@ -84,7 +112,7 @@ def restore_checkpoint(ckpt_dir: str, step: int, like, shardings=None):
     for p, leaf, sh in zip(paths, leaves, shard_leaves):
         e = by_path[p]
         with open(os.path.join(src, e["file"]), "rb") as f:
-            raw = _DCTX.decompress(f.read())
+            raw = _decompress(f.read(), e.get("codec", "zstd"))
         arr = np.frombuffer(raw, dtype=np.dtype(e["dtype"])).reshape(
             e["shape"]).copy()
         if sh is not None:

@@ -11,12 +11,16 @@ Public API:
 """
 from .config import PFOConfig
 from .index import (PFOIndex, PFOState, init_state, insert_step, query_step,
-                    delete_step, seal_step, merge_step)
+                    delete_step, seal_step, merge_step, round_flags)
+from .dispatch import (FLAG_ANY_PENDING, FLAG_NEED_SEAL, FLAG_SNAPS_FULL,
+                       FLAG_TOMBS_FULL, pack_round_flags)
 from .distributed import (DistConfig, dist_init_state, make_dist_query,
                           make_dist_insert)
 
 __all__ = [
     "PFOConfig", "PFOIndex", "PFOState", "init_state", "insert_step",
-    "query_step", "delete_step", "seal_step", "merge_step",
+    "query_step", "delete_step", "seal_step", "merge_step", "round_flags",
+    "FLAG_ANY_PENDING", "FLAG_NEED_SEAL", "FLAG_SNAPS_FULL",
+    "FLAG_TOMBS_FULL", "pack_round_flags",
     "DistConfig", "dist_init_state", "make_dist_query", "make_dist_insert",
 ]

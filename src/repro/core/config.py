@@ -46,6 +46,7 @@ class PFOConfig:
     # --- hierarchical memory (sealed snapshot tier) -----------------
     seal_threshold: float = 0.85         # hot-tier fill fraction triggering seal
     max_snapshots: int = 8
+    max_tombstones: int = 1024           # pending-delete buffer (merge drains it)
     snapshot_capacity: int = 65536       # entries per sealed segment
     snap_prefix_bits: int = 12           # bucket-prefix resolution of snapshot probes
     snap_budget_per_probe: int = 32      # candidates gathered per snapshot probe

@@ -19,6 +19,31 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+# ----------------------------------------------------------------------
+# round flag word (paper §4.2 maintenance signals, device-resident)
+#
+# Each dispatch round returns ONE packed i32 so the host learns
+# everything it needs for the next round from a single scalar readback:
+#   ANY_PENDING — some request overflowed its mailbox / buffer and must
+#                 be re-submitted (the actor's bounded-inbox retry);
+#   NEED_SEAL   — an arena could exhaust next round: seal hot -> flash;
+#   SNAPS_FULL  — the snapshot set is full: merge before sealing;
+#   TOMBS_FULL  — the tombstone buffer is (nearly) full: merge to drain.
+# ----------------------------------------------------------------------
+FLAG_ANY_PENDING = 1
+FLAG_NEED_SEAL = 2
+FLAG_SNAPS_FULL = 4
+FLAG_TOMBS_FULL = 8
+
+
+def pack_round_flags(any_pending: jax.Array, need_seal: jax.Array,
+                     snaps_full: jax.Array, tombs_full: jax.Array) -> jax.Array:
+    """Pack four booleans into the round's i32 flag word (device-side)."""
+    return (any_pending.astype(jnp.int32) * FLAG_ANY_PENDING
+            + need_seal.astype(jnp.int32) * FLAG_NEED_SEAL
+            + snaps_full.astype(jnp.int32) * FLAG_SNAPS_FULL
+            + tombs_full.astype(jnp.int32) * FLAG_TOMBS_FULL)
+
 
 def dispatch_to_trees(tree_ids: jax.Array, n_trees: int, capacity: int):
     """Build per-tree mailboxes from a flat request batch.

@@ -48,6 +48,7 @@ from .hash_tree import forest_insert_dispatched, forest_lookup, forest_query, in
 from .index import PFOState, init_state, lsh_tree_config, main_tree_config
 from .lsh import main_table_keys, make_projections, region_ids
 from .store import dense_alloc, dense_init, dense_read
+from repro import compat
 from repro.kernels import ops as kops
 
 INT_MAX = jnp.int32(2**31 - 1)
@@ -100,7 +101,7 @@ def _abstract_state(dcfg: DistConfig) -> PFOState:
             main_snaps=jax.vmap(
                 lambda _: snap_mod.init_snapshots(msnap_cfg))(
                 jnp.arange(dcfg.n_model)),
-            tombstones=jnp.full((1024,), -1, jnp.int32),
+            tombstones=jnp.full((cfg.max_tombstones,), -1, jnp.int32),
             n_tombstones=jnp.int32(0),
             stamp=jnp.int32(0),
             proj=make_projections(k, cfg),
@@ -140,7 +141,7 @@ def dist_init_state(dcfg: DistConfig, key: jax.Array, mesh: Mesh) -> PFOState:
             jnp.arange(dcfg.n_model)),
         main_snaps=jax.vmap(lambda _: snap_mod.init_snapshots(msnap_cfg))(
             jnp.arange(dcfg.n_model)),
-        tombstones=jnp.full((1024,), -1, jnp.int32),
+        tombstones=jnp.full((cfg.max_tombstones,), -1, jnp.int32),
         n_tombstones=jnp.int32(0),
         stamp=jnp.int32(0),
         proj=make_projections(key, cfg),
@@ -273,10 +274,10 @@ def make_dist_query(dcfg: DistConfig, mesh: Mesh, k: int):
 
         return jax.vmap(topk_for)(my_rows)
 
-    fn = jax.shard_map(local_fn, mesh=mesh,
-                       in_specs=(state_pspecs(dcfg), _batch_spec(dcfg)),
-                       out_specs=(_batch_spec(dcfg), _batch_spec(dcfg)),
-                       check_vma=False)
+    fn = compat.shard_map(local_fn, mesh=mesh,
+                          in_specs=(state_pspecs(dcfg), _batch_spec(dcfg)),
+                          out_specs=(_batch_spec(dcfg), _batch_spec(dcfg)),
+                          check_vma=False)
     return jax.jit(fn)
 
 
@@ -359,9 +360,9 @@ def make_dist_insert(dcfg: DistConfig, mesh: Mesh, capacity: int):
         pending = active & (jnp.any(ovf.reshape(n, cfg.L), axis=1) | movf)
         return state, pending
 
-    fn = jax.shard_map(local_fn, mesh=mesh,
-                       in_specs=(state_pspecs(dcfg), _batch_spec(dcfg),
-                                 _batch_spec(dcfg), _batch_spec(dcfg)),
-                       out_specs=(state_pspecs(dcfg), _batch_spec(dcfg)),
-                       check_vma=False)
+    fn = compat.shard_map(local_fn, mesh=mesh,
+                          in_specs=(state_pspecs(dcfg), _batch_spec(dcfg),
+                                    _batch_spec(dcfg), _batch_spec(dcfg)),
+                          out_specs=(state_pspecs(dcfg), _batch_spec(dcfg)),
+                          check_vma=False)
     return jax.jit(fn)

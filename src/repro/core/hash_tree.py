@@ -331,6 +331,20 @@ def tree_delete(st: TreeState, h: jax.Array, vid: jax.Array,
 
 
 # ----------------------------------------------------------------------
+# headroom (device-side; folded into the jitted round flags — index.py)
+# ----------------------------------------------------------------------
+def forest_headroom(forest: TreeState) -> tuple[jax.Array, jax.Array]:
+    """Worst-tree arena cursors: (max leaf_cnt, max node_cnt), i32 ().
+
+    A dispatch round adds at most ``capacity`` leaves/nodes per tree, so
+    the host can decide "would the next round exhaust any arena?" from
+    these two scalars alone — they stay on device and are packed into
+    the round's flag word rather than read back individually.
+    """
+    return jnp.max(forest.leaf_cnt), jnp.max(forest.node_cnt)
+
+
+# ----------------------------------------------------------------------
 # batched / forest-level wrappers
 # ----------------------------------------------------------------------
 def forest_insert_dispatched(forest: TreeState, per_tree_h: jax.Array,

@@ -31,16 +31,18 @@ import numpy as np
 
 from . import snapshots as snap_mod
 from .config import PFOConfig
-from .dispatch import dispatch_to_trees, gather_mailbox, mailbox_ids
+from .dispatch import (FLAG_ANY_PENDING, FLAG_NEED_SEAL, FLAG_SNAPS_FULL,
+                       FLAG_TOMBS_FULL, dispatch_to_trees, gather_mailbox,
+                       mailbox_ids, pack_round_flags)
 from .hash_tree import (TreeConfig, TreeState, forest_delete_dispatched,
-                        forest_insert_dispatched, forest_lookup, forest_query,
-                        init_forest)
+                        forest_headroom, forest_insert_dispatched,
+                        forest_lookup, forest_query, init_forest)
 from .lsh import main_table_keys, make_projections, region_ids
 from .store import (DenseStore, dense_alloc, dense_free, dense_init,
                     dense_read)
 
 INT_MAX = jnp.int32(2**31 - 1)
-MAX_TOMBSTONES = 1024
+MAX_TOMBSTONES = 1024        # default for PFOConfig.max_tombstones
 
 
 def lsh_tree_config(cfg: PFOConfig) -> TreeConfig:
@@ -92,7 +94,7 @@ def init_state(cfg: PFOConfig, key: jax.Array) -> PFOState:
         store=dense_init(cfg.store_capacity, cfg.dim),
         lsh_snaps=lsh_snaps,
         main_snaps=snap_mod.init_snapshots(_snap_cfg_main(cfg)),
-        tombstones=jnp.full((MAX_TOMBSTONES,), -1, jnp.int32),
+        tombstones=jnp.full((cfg.max_tombstones,), -1, jnp.int32),
         n_tombstones=jnp.int32(0),
         stamp=jnp.int32(0),
         proj=make_projections(key, cfg),
@@ -111,19 +113,66 @@ def compute_keys(state: PFOState, vecs: jax.Array, cfg: PFOConfig):
     return h, region + table_off
 
 
+def _tombs_threshold(cfg: PFOConfig) -> int:
+    """Proactive-merge watermark: leave one round of delete headroom."""
+    return cfg.max_tombstones - max(1, min(64, cfg.max_tombstones // 4))
+
+
+def _round_flags(state: PFOState, cfg: PFOConfig, main_capacity: int,
+                 lsh_capacity: int, any_pending: jax.Array) -> jax.Array:
+    """Device-side maintenance decision for the *next* round, packed.
+
+    A round adds at most ``capacity`` leaves and nodes per tree (module
+    doc), so comparing the worst-tree cursors against the arena sizes
+    decides seal; snapshot-set and tombstone occupancy decide merge.
+    All of it stays on device — the host reads back one i32.
+    """
+    leaf_head, node_head = forest_headroom(state.lsh_forest)
+    mleaf, mnode = forest_headroom(state.main_forest)
+    need_seal = (
+        (leaf_head + lsh_capacity > cfg.max_leaves_per_tree)
+        | (node_head + lsh_capacity > cfg.max_nodes_per_tree)
+        | (mleaf + main_capacity > cfg.main_max_leaves_per_tree)
+        | (mnode + main_capacity > cfg.main_max_nodes_per_tree)
+        | (leaf_head >= jnp.int32(
+            int(cfg.seal_threshold * cfg.max_leaves_per_tree))))
+    snaps_full = (jnp.max(state.lsh_snaps.n_snaps)
+                  >= cfg.max_snapshots - 1)
+    tombs_full = state.n_tombstones >= _tombs_threshold(cfg)
+    return pack_round_flags(jnp.asarray(any_pending), need_seal,
+                            snaps_full, tombs_full)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("cfg", "main_capacity", "lsh_capacity"))
+def round_flags(state: PFOState, cfg: PFOConfig, main_capacity: int,
+                lsh_capacity: int) -> jax.Array:
+    """Standalone flag computation (cold start / capacity change only —
+    steady-state rounds get their flags from the step itself)."""
+    return _round_flags(state, cfg, main_capacity, lsh_capacity,
+                        jnp.bool_(False))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "main_capacity", "lsh_capacity",
+                                    "flags_main_capacity",
+                                    "flags_lsh_capacity"))
 def insert_step(state: PFOState, ids: jax.Array, vecs: jax.Array,
                 slots_in: jax.Array, main_active: jax.Array,
                 lsh_active: jax.Array, cfg: PFOConfig, main_capacity: int,
-                lsh_capacity: int):
+                lsh_capacity: int, flags_main_capacity: int | None = None,
+                flags_lsh_capacity: int | None = None):
     """One dispatch round of batched insert.
 
     ids/vecs: (N,), (N,d).  ``slots_in``: -2 == store slot not yet
     allocated.  ``main_active`` (N,) / ``lsh_active`` (N*L,) mark
     requests still pending — tracked per *request* so a retry round
     never double-inserts entries that already landed.
-    Returns (state, slots, main_pending, lsh_pending).
+    Returns (state, slots, main_pending, lsh_pending, flags) where
+    ``flags`` is the packed maintenance word for the next round.
+    ``flags_*_capacity`` override the capacity the flag headroom is
+    computed against (the stream engine passes its worst-case bucket so
+    one carried flag word stays valid across bucket sizes).
     """
     # --- store allocation (at most once per row) ---------------------
     need_alloc = (slots_in == -2) & main_active
@@ -166,7 +215,11 @@ def insert_step(state: PFOState, ids: jax.Array, vecs: jax.Array,
 
     main_pending = main_active & (m_ovf | ~have_slot)
     lsh_pending = lsh_active & (l_ovf | ~jnp.repeat(have_slot, cfg.L))
-    return state, slots, main_pending, lsh_pending
+    flags = _round_flags(state, cfg,
+                         flags_main_capacity or main_capacity,
+                         flags_lsh_capacity or lsh_capacity,
+                         jnp.any(main_pending) | jnp.any(lsh_pending))
+    return state, slots, main_pending, lsh_pending, flags
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -274,12 +327,25 @@ def query_step(state: PFOState, qvecs: jax.Array, cfg: PFOConfig, k: int):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("cfg", "main_capacity", "lsh_capacity"))
+                   static_argnames=("cfg", "main_capacity", "lsh_capacity",
+                                    "flags_main_capacity",
+                                    "flags_lsh_capacity"))
 def delete_step(state: PFOState, ids: jax.Array, active: jax.Array,
-                cfg: PFOConfig, main_capacity: int, lsh_capacity: int):
+                cfg: PFOConfig, main_capacity: int, lsh_capacity: int,
+                flags_main_capacity: int | None = None,
+                flags_lsh_capacity: int | None = None):
     """Batched delete: unlink hot entries, free store slots, tombstone
     sealed copies.  Idempotent per round, so per-row retry is safe.
-    Returns (state, pending)."""
+    Returns (state, pending, flags).
+
+    Tombstone-buffer overflow marks the row *pending* (it is NOT safe to
+    drop: a sealed copy could resurface on query).  The host sees
+    TOMBS_FULL in ``flags``, merges — which drains the buffer and
+    physically drops tombstoned sealed entries — and retries the row;
+    the retry re-finds any surviving sealed copy via the MainTable
+    sealed tier and tombstones it then.  Rows whose hot/store cleanup
+    already ran are no-ops on retry (unlink misses, dense_free checks
+    ``live``)."""
     slot, found = _main_lookup(state, ids, cfg)
     ok = active & found & (slot >= 0)
 
@@ -305,21 +371,29 @@ def delete_step(state: PFOState, ids: jax.Array, active: jax.Array,
 
     store = dense_free(state.store, slot, ok)
 
-    # tombstones cover sealed copies
+    # tombstones cover sealed copies; overflow rows stay pending.
+    # Overflow writes park out of bounds (dropped by XLA) — clamping
+    # them to the last slot would clobber the tombstone legitimately
+    # written there in the same scatter.
     want = ok.astype(jnp.int32)
     rank = jnp.cumsum(want) - want
     pos = state.n_tombstones + rank
-    fits = ok & (pos < MAX_TOMBSTONES)
-    safe = jnp.where(fits, pos, MAX_TOMBSTONES - 1)
-    tombs = state.tombstones.at[safe].set(
-        jnp.where(fits, ids, state.tombstones[safe]))
-    n_t = jnp.minimum(state.n_tombstones + jnp.sum(want), MAX_TOMBSTONES)
+    fits = ok & (pos < cfg.max_tombstones)
+    safe = jnp.where(fits, pos, cfg.max_tombstones)
+    tombs = state.tombstones.at[safe].set(ids, mode="drop")
+    n_t = jnp.minimum(state.n_tombstones + jnp.sum(fits.astype(jnp.int32)),
+                      cfg.max_tombstones)
 
     state = state._replace(lsh_forest=lsh_forest, main_forest=main_forest,
                            store=store, tombstones=tombs, n_tombstones=n_t)
     l_row = jnp.any(l_ovf.reshape(-1, cfg.L), axis=1)
-    pending = ok & (l_row | m_ovf)
-    return state, pending
+    tomb_ovf = ok & ~fits
+    pending = (ok & (l_row | m_ovf)) | tomb_ovf
+    flags = _round_flags(state, cfg,
+                         flags_main_capacity or main_capacity,
+                         flags_lsh_capacity or lsh_capacity,
+                         jnp.any(pending))
+    return state, pending, flags
 
 
 # ======================================================================
@@ -327,7 +401,17 @@ def delete_step(state: PFOState, ids: jax.Array, active: jax.Array,
 # ======================================================================
 class PFOIndex:
     """Host-side driver: owns the device state, runs dispatch rounds and
-    seal/merge epochs (the paper's maintenance routines)."""
+    seal/merge epochs (the paper's maintenance routines).
+
+    Steady-state rounds are device-resident: every jitted step returns a
+    packed i32 flag word (pending / seal / merge signals — see
+    ``dispatch.pack_round_flags``) and the host performs exactly ONE
+    explicit scalar readback per round (:meth:`_read_flags`, counted in
+    ``sync_count``).  The flag word is carried across calls, so the cold
+    ``round_flags`` probe only runs on the first round after init or
+    when a call's dispatch capacity grows beyond what the carried word
+    was computed for.
+    """
 
     MAX_ROUNDS = 64
 
@@ -336,6 +420,10 @@ class PFOIndex:
         self.state = init_state(cfg, jax.random.PRNGKey(seed))
         self.n_inserted = 0
         self.rounds_log: list[int] = []
+        self.sync_count = 0          # explicit host<->device scalar syncs
+        self.maintenance_log: list[str] = []    # "seal"/"merge" events
+        self._flags: int | None = None
+        self._flags_caps = (0, 0)    # (main_cap, lsh_cap) flags were computed for
 
     # -- capacity heuristics -------------------------------------------
     def _lsh_capacity(self, n: int) -> int:
@@ -347,26 +435,37 @@ class PFOIndex:
         per = (n + self.cfg.main_n_trees - 1) // self.cfg.main_n_trees
         return int(max(8, 2 * per))
 
-    def _maybe_maintain(self, lsh_cap: int, main_cap: int):
-        """Seal before a round could exhaust any arena (see module doc)."""
-        st = self.state
-        leaf_head = int(np.asarray(st.lsh_forest.leaf_cnt).max())
-        node_head = int(np.asarray(st.lsh_forest.node_cnt).max())
-        mleaf = int(np.asarray(st.main_forest.leaf_cnt).max())
-        mnode = int(np.asarray(st.main_forest.node_cnt).max())
-        need_seal = (
-            leaf_head + lsh_cap > self.cfg.max_leaves_per_tree
-            or node_head + lsh_cap > self.cfg.max_nodes_per_tree
-            or mleaf + main_cap > self.cfg.main_max_leaves_per_tree
-            or mnode + main_cap > self.cfg.main_max_nodes_per_tree
-            or leaf_head >= self.cfg.seal_threshold * self.cfg.max_leaves_per_tree
-        )
-        if need_seal:
-            if int(self.state.lsh_snaps.n_snaps[0]) >= self.cfg.max_snapshots - 1:
+    # -- device-resident maintenance -----------------------------------
+    def _read_flags(self, flags: jax.Array, caps: tuple[int, int]) -> int:
+        """THE host<->device sync of a round: one explicit i32 readback."""
+        self.sync_count += 1
+        f = int(jax.device_get(flags))
+        self._flags, self._flags_caps = f, caps
+        return f
+
+    def _ensure_flags(self, mcap: int, lcap: int) -> int:
+        """Flags valid for a round at (mcap, lcap), reusing the carried
+        word when it was computed for capacities at least this large."""
+        if (self._flags is not None
+                and self._flags_caps[0] >= mcap
+                and self._flags_caps[1] >= lcap):
+            return self._flags
+        return self._read_flags(
+            round_flags(self.state, self.cfg, mcap, lcap), (mcap, lcap))
+
+    def _maintain(self, flags: int) -> None:
+        """Run the seal/merge epochs the flag word asks for."""
+        if flags & FLAG_NEED_SEAL:
+            if flags & FLAG_SNAPS_FULL:
                 self.state = merge_step(self.state, self.cfg)
+                self.maintenance_log.append("merge")
             self.state = seal_step(self.state, self.cfg)
-        if int(self.state.n_tombstones) >= MAX_TOMBSTONES - 64:
+            self.maintenance_log.append("seal")
+        if flags & FLAG_TOMBS_FULL:
             self.state = merge_step(self.state, self.cfg)
+            self.maintenance_log.append("merge")
+        if flags & (FLAG_NEED_SEAL | FLAG_TOMBS_FULL):
+            self._flags = None       # state changed; carried word is stale
 
     # -- public API ----------------------------------------------------
     def insert(self, ids, vecs) -> int:
@@ -378,14 +477,16 @@ class PFOIndex:
         main_active = jnp.ones((n,), bool)
         lsh_active = jnp.ones((n * self.cfg.L,), bool)
         lcap, mcap = self._lsh_capacity(n), self._main_capacity(n)
+        flags = self._ensure_flags(mcap, lcap)
         rounds = 0
         for _ in range(self.MAX_ROUNDS):
-            self._maybe_maintain(lcap, mcap)
-            self.state, slots, main_active, lsh_active = insert_step(
+            self._maintain(flags)
+            self.state, slots, main_active, lsh_active, fw = insert_step(
                 self.state, ids, vecs, slots, main_active, lsh_active,
                 self.cfg, mcap, lcap)
             rounds += 1
-            if not (bool(jnp.any(main_active)) or bool(jnp.any(lsh_active))):
+            flags = self._read_flags(fw, (mcap, lcap))
+            if not flags & FLAG_ANY_PENDING:
                 break
         self.n_inserted += n
         self.rounds_log.append(rounds)
@@ -394,6 +495,7 @@ class PFOIndex:
     def query(self, qvecs, k: int = 10):
         qvecs = jnp.asarray(qvecs, jnp.float32)
         ids, dists = query_step(self.state, qvecs, self.cfg, k)
+        ids, dists = jax.device_get((ids, dists))
         return np.asarray(ids), np.asarray(dists)
 
     def delete(self, ids) -> int:
@@ -401,13 +503,15 @@ class PFOIndex:
         active = jnp.ones(ids.shape, bool)
         n = int(ids.shape[0])
         lcap, mcap = self._lsh_capacity(n), self._main_capacity(n)
+        flags = self._ensure_flags(mcap, lcap)
         rounds = 0
         for _ in range(self.MAX_ROUNDS):
-            self._maybe_maintain(lcap, mcap)
-            self.state, pending = delete_step(self.state, ids, active,
-                                              self.cfg, mcap, lcap)
+            self._maintain(flags)
+            self.state, pending, fw = delete_step(self.state, ids, active,
+                                                  self.cfg, mcap, lcap)
             rounds += 1
-            if not bool(jnp.any(pending)):
+            flags = self._read_flags(fw, (mcap, lcap))
+            if not flags & FLAG_ANY_PENDING:
                 break
             active = pending
         return rounds

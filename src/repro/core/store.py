@@ -72,9 +72,25 @@ def dense_alloc(st: DenseStore, vecs: jax.Array, mask: jax.Array):
 
 
 def dense_free(st: DenseStore, slots: jax.Array, mask: jax.Array) -> DenseStore:
-    """Reclaim slots (push back on the free stack)."""
+    """Reclaim slots (push back on the free stack).
+
+    Duplicate slots within one batch free once: every row reads the
+    pre-update ``live`` bits, so without the first-occurrence mask two
+    rows naming the same slot would push it on the free stack twice and
+    later hand the same row to two different ids."""
     cap = st.data.shape[0]
-    ok = mask & (slots >= 0) & st.live[jnp.maximum(slots, 0)]
+    n = slots.shape[0]
+    # sort-based first-occurrence mask (O(n log n)); rows that are
+    # masked out or slotless get distinct out-of-range keys so they
+    # never collide with (or suppress) a real free.
+    valid = mask & (slots >= 0)
+    key = jnp.where(valid, slots, cap + jnp.arange(n, dtype=jnp.int32))
+    order = jnp.argsort(key, stable=True)
+    s = key[order]
+    dup_sorted = jnp.concatenate(
+        [jnp.zeros((1,), bool), s[1:] == s[:-1]])
+    first = jnp.zeros((n,), bool).at[order].set(~dup_sorted)
+    ok = valid & st.live[jnp.maximum(slots, 0)] & first
     want = ok.astype(jnp.int32)
     rank = jnp.cumsum(want) - want
     pos = jnp.where(ok, st.free_top + rank, cap)      # OOB park (dropped)

@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import compat, configs
 from repro.configs.shapes import SHAPES, cache_len, input_specs, runnable_cells
 from repro.launch.mesh import make_production_mesh
 from repro.models.registry import build_model
@@ -149,7 +149,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, *,
     if overrides:
         rec["overrides"] = overrides
     t0 = time.time()
-    with jax.sharding.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         step, args = build_cell(arch, shape, mesh, reduced=reduced,
                                 overrides=overrides)
         lowered = step.lower(*args)
@@ -161,12 +161,13 @@ def run_cell(arch: str, shape: str, multi_pod: bool, *,
         cost = compiled.cost_analysis() or {}
         hlo = compiled.as_text()
     if hlo_dir:
-        import zstandard
+        from repro.checkpoint.ckpt import _compress
         os.makedirs(hlo_dir, exist_ok=True)
-        fn = f"{arch}_{shape}_{rec['mesh']}.hlo.zst"
+        blob, codec = _compress(hlo.encode())
+        fn = f"{arch}_{shape}_{rec['mesh']}.hlo" + \
+            (".zst" if codec == "zstd" else "")
         with open(os.path.join(hlo_dir, fn), "wb") as f:
-            f.write(zstandard.ZstdCompressor(level=3).compress(
-                hlo.encode()))
+            f.write(blob)
         rec["hlo_file"] = fn
     st = analyze_hlo(hlo)   # trip-count-corrected per-chip stats
     rec.update({
@@ -206,7 +207,7 @@ def run_pfo(multi_pod: bool) -> dict:
                       n_model=16)
     rec = {"arch": "pfo_index", "shape": "q4096_u4096",
            "mesh": "2x16x16" if multi_pod else "16x16"}
-    with jax.sharding.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         st = jax.tree.map(
             lambda s, sp: jax.ShapeDtypeStruct(
                 s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),

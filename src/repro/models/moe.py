@@ -134,10 +134,11 @@ def moe_apply_shardmap(p: dict, cfg: ModelConfig, x: jax.Array,
     (decode T==1) or no mesh is ambient (unit tests).
     """
     from jax.sharding import PartitionSpec as P
+    from repro import compat
     from repro.core.dispatch import dispatch_to_trees, gather_mailbox, \
         mailbox_ids
 
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_mesh()
     axis_names = getattr(mesh, "axis_names", ()) or ()
     if "model" not in axis_names:
         return moe_apply(p, cfg, x, constrain)
@@ -220,8 +221,8 @@ def moe_apply_shardmap(p: dict, cfg: ModelConfig, x: jax.Array,
             pair_out * pair_w[:, None])
         return y.reshape(bl, tl, d)
 
-    fn = jax.shard_map(
-        local_fn,
+    fn = compat.shard_map(
+        local_fn, mesh=mesh,
         in_specs=(P(bspec, "model", None), P(None, "model"),
                   P("model", None, None), P("model", None, None),
                   P("model", None, None)),

@@ -1,4 +1,6 @@
-from .engine import ServeConfig, ServingEngine, make_prefill_step, make_decode_step
+from .engine import (ServeConfig, ServingEngine, make_decode_step,
+                     make_prefill_step)
+from .stream import StreamConfig, StreamEngine, drive
 
 __all__ = ["ServeConfig", "ServingEngine", "make_prefill_step",
-           "make_decode_step"]
+           "make_decode_step", "StreamConfig", "StreamEngine", "drive"]

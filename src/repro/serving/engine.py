@@ -63,15 +63,25 @@ def make_decode_step(model, policy: ShardingPolicy | None = None):
 
 class ServingEngine:
     """Continuous-batching server (fixed batch slots, greedy/temp
-    sampling) with optional PFO kNN-LM augmentation."""
+    sampling) with optional PFO kNN-LM augmentation.
+
+    The kNN datastore is driven through the :class:`~.stream.StreamEngine`
+    request front-end: per-step queries and post-request online inserts
+    are *submitted* to the stream and coalesced into size-bucketed
+    micro-batches, so the datastore traffic rides the same bounded-jit,
+    single-sync round machinery as any other PFO client."""
 
     def __init__(self, model, params, scfg: ServeConfig,
                  policy: ShardingPolicy | None = None, pfo_index=None,
-                 knn_vocab_map=None):
+                 knn_vocab_map=None, pfo_stream=None):
+        from .stream import StreamEngine
         self.model, self.params, self.scfg = model, params, scfg
         self.prefill_step = make_prefill_step(model, policy)
         self.decode_step = make_decode_step(model, policy)
-        self.pfo = pfo_index
+        if pfo_stream is None and pfo_index is not None:
+            pfo_stream = StreamEngine(pfo_index)
+        self.stream = pfo_stream
+        self.pfo = pfo_stream.index if pfo_stream is not None else None
         # datastore value -> token id mapping (np array indexed by id)
         self.knn_vocab_map = knn_vocab_map
         self._hidden_tap = []
@@ -79,7 +89,11 @@ class ServingEngine:
     # -- kNN-LM ----------------------------------------------------------
     def _knn_logits(self, hidden: np.ndarray, vocab: int) -> np.ndarray:
         """hidden (B, D) -> (B, V) kNN distribution (log space)."""
-        ids, dists = self.pfo.query(hidden, k=self.scfg.knn_k)
+        tickets = [self.stream.query(hidden[b], k=self.scfg.knn_k)
+                   for b in range(hidden.shape[0])]
+        res = self.stream.flush()
+        ids = np.stack([res[t][0] for t in tickets])
+        dists = np.stack([res[t][1] for t in tickets])
         logits = np.full((hidden.shape[0], vocab), -1e30, np.float32)
         for b in range(hidden.shape[0]):
             ok = ids[b] >= 0
@@ -139,10 +153,12 @@ class ServingEngine:
 
         if insert_online and self.pfo is not None:
             # the paper's online-update half: store this request's
-            # (hidden -> produced token) memories
+            # (hidden -> produced token) memories via the stream engine
             base = self.pfo.n_inserted
             ids = np.arange(base, base + b, dtype=np.int32)
-            self.pfo.insert(ids, mem_h[0])
+            for r in range(b):
+                self.stream.insert(int(ids[r]), mem_h[0][r])
+            self.stream.flush()
             if self.knn_vocab_map is not None:
                 need = base + b
                 if self.knn_vocab_map.shape[0] < need:

@@ -1,0 +1,448 @@
+"""Streaming request engine — the paper's online serving loop (§4.2).
+
+Paper terminology -> this module:
+
+* **actors / mailboxes** — every hash tree is an actor whose mailbox is
+  one row of the dense ``(T, K)`` dispatch buffer (``core.dispatch``).
+  The engine is the layer *in front* of dispatch: the global request
+  stream that the paper's router thread drains.
+* **rounds** — one jitted step applies one micro-batch; mailbox
+  overflow is re-submitted next round (the actor's bounded inbox).
+  Steady-state rounds are device-resident: the only host<->device
+  traffic is ONE packed i32 flag word (pending/seal/merge signals,
+  ``core.dispatch.pack_round_flags``) read back per round.
+* **maintenance epochs** — seal (hot tier -> sealed snapshots) and
+  merge (snapshot compaction + tombstone drain) run between rounds as
+  explicit engine events, exactly when the flag word asks, never via
+  ad-hoc device readbacks.
+
+The engine coalesces an *interleaved* stream of query / insert /
+delete / update requests into fixed-shape micro-batches.  Batch shapes
+are drawn from a small set of power-of-two **size buckets** and the
+dispatch capacities for every bucket are precomputed, so the number of
+compiled step variants is bounded by ``len(buckets)`` per operation —
+the jit cache cannot grow with traffic.  Ragged tails are padded with
+inactive rows (``active=False`` masks), which the jitted steps already
+treat as no-ops.
+
+Consistency (``StreamConfig.ordering``):
+
+* ``"window"`` (default) — the paper's round semantics: every flush is
+  one epoch; the window's updates apply first, then ALL of the
+  window's queries probe the post-update state.  A query therefore
+  sees every update submitted before it (read-your-writes) and
+  possibly updates submitted later in the same window (bounded
+  staleness in the *fresh* direction).  Within the update half, ops
+  coalesce **by kind** (one delete batch, one update pair, one insert
+  batch) because a dispatch round's cost is set by mailbox capacity,
+  not row count; whenever an id is touched by two conflicting ops the
+  epoch splits at that point, so per-id semantics always match the
+  sequential order.  This is what lets a randomly interleaved stream
+  collapse into a handful of micro-batches per window.
+* ``"strict"`` — exact submission order: only runs of consecutive
+  same-kind requests batch together, and an engine-fed index answers
+  bit-identically to per-request ``PFOIndex`` calls — asserted in
+  ``tests/test_stream_engine.py``.
+
+Either way updates never reorder relative to each other, so the final
+index state always equals the sequential one.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dispatch import FLAG_ANY_PENDING
+from repro.core.index import (PFOIndex, delete_step, init_state, insert_step,
+                              merge_step, query_step, round_flags, seal_step)
+
+QUERY, INSERT, DELETE, UPDATE = "query", "insert", "delete", "update"
+
+
+def _pow2_buckets(lo: int, hi: int) -> tuple[int, ...]:
+    out, b = [], lo
+    while b < hi:
+        out.append(b)
+        b *= 2
+    out.append(hi)
+    return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    max_batch: int = 256          # largest update micro-batch (power of two)
+    min_batch: int = 8            # smallest size bucket (power of two)
+    # Queries chunk to their own (smaller) cap: an update round's cost
+    # is set by mailbox capacity, not rows, so updates want the biggest
+    # bucket; a query's per-row cost *grows* with batch on lockstepped
+    # while-loop backends (CPU), so queries stay in the flat region.
+    query_max_batch: int = 16
+    default_k: int = 10           # top-k for queries submitted without k
+    ordering: str = "window"      # "window" (round epochs) | "strict"
+    # results already returned by flush() are retained for result()
+    # lookups up to this many tickets, then evicted oldest-first —
+    # bounds engine memory in a long-running serving loop.
+    max_retained_results: int = 4096
+
+    def __post_init__(self):
+        for v in (self.max_batch, self.min_batch, self.query_max_batch):
+            assert v & (v - 1) == 0, "buckets must be powers of two"
+        assert self.min_batch <= self.max_batch
+        assert self.min_batch <= self.query_max_batch, \
+            "query_max_batch below min_batch would dispatch off-bucket " \
+            "shapes warmup never compiled"
+        assert self.ordering in ("window", "strict")
+
+    @property
+    def buckets(self) -> tuple[int, ...]:
+        return _pow2_buckets(self.min_batch, self.max_batch)
+
+    def cap_for(self, kind: str) -> int:
+        if kind == QUERY:
+            return min(self.query_max_batch, self.max_batch)
+        return self.max_batch
+
+
+class StreamEngine:
+    """Online query/update front-end over a :class:`PFOIndex`.
+
+    Submission enqueues and returns a ticket immediately; :meth:`flush`
+    drains the stream in order and materializes results.  ``stats()``
+    exposes round/sync/maintenance counters for benchmarks and tests.
+    """
+
+    MAX_ROUNDS = PFOIndex.MAX_ROUNDS
+
+    def __init__(self, index: PFOIndex, scfg: StreamConfig | None = None):
+        self.index = index
+        self.scfg = scfg or StreamConfig()
+        cfg = index.cfg
+        # per-bucket dispatch capacities, precomputed once: the static
+        # (batch, capacity) jit keys are drawn from this fixed table.
+        self._caps = {b: (index._main_capacity(b), index._lsh_capacity(b))
+                      for b in self.scfg.buckets}
+        mb = self.scfg.max_batch
+        self._flags_caps = self._caps[mb]     # worst case: one carried word
+        self._queue: list[tuple[int, str, Any]] = []   # (ticket, kind, payload)
+        self._results: dict[int, Any] = {}
+        self._next_ticket = 0
+        self.events: list[tuple[str, int]] = []        # (epoch kind, flush#)
+        self.n_flushes = 0
+        self.n_batches = 0
+        self.n_rounds = 0
+        self.n_requests = 0
+        self._dim = cfg.dim
+
+    # ------------------------------------------------------------------
+    # warmup: precompile every (op, bucket) variant + maintenance steps
+    # ------------------------------------------------------------------
+    def warmup(self) -> None:
+        """Compile all step variants the engine can ever dispatch, so no
+        jit compile lands inside a serving round.  Uses all-inactive
+        batches (state untouched) and a scratch state for seal/merge."""
+        idx, cfg = self.index, self.index.cfg
+        fm, fl = self._flags_caps
+        qcap = self.scfg.cap_for(QUERY)
+        for b in self.scfg.buckets:
+            mcap, lcap = self._caps[b]
+            ids = jnp.zeros((b,), jnp.int32)
+            vecs = jnp.zeros((b, self._dim), jnp.float32)
+            off = jnp.zeros((b,), bool)
+            r = insert_step(idx.state, ids, vecs,
+                            jnp.full((b,), -2, jnp.int32), off,
+                            jnp.zeros((b * cfg.L,), bool), cfg, mcap, lcap,
+                            fm, fl)
+            jax.block_until_ready(r[-1])
+            r = delete_step(idx.state, ids, off, cfg, mcap, lcap, fm, fl)
+            jax.block_until_ready(r[-1])
+            if b <= qcap:
+                jax.block_until_ready(
+                    query_step(idx.state, vecs, cfg, self.scfg.default_k))
+        jax.block_until_ready(round_flags(idx.state, cfg, fm, fl))
+        scratch = init_state(cfg, jax.random.PRNGKey(0))
+        jax.block_until_ready(merge_step(seal_step(scratch, cfg), cfg))
+
+    # ------------------------------------------------------------------
+    # submission (the request stream)
+    # ------------------------------------------------------------------
+    def _enqueue(self, kind: str, payload) -> int:
+        t = self._next_ticket
+        self._next_ticket += 1
+        self._queue.append((t, kind, payload))
+        self.n_requests += 1
+        return t
+
+    def query(self, vec, k: int | None = None) -> int:
+        vec = np.asarray(vec, np.float32).reshape(self._dim)
+        return self._enqueue(QUERY, (vec, int(k or self.scfg.default_k)))
+
+    def insert(self, vid: int, vec) -> int:
+        vec = np.asarray(vec, np.float32).reshape(self._dim)
+        return self._enqueue(INSERT, (int(vid), vec))
+
+    def delete(self, vid: int) -> int:
+        return self._enqueue(DELETE, int(vid))
+
+    def update(self, vid: int, vec) -> int:
+        """Online update (paper §5): new version written, old reclaimed."""
+        vec = np.asarray(vec, np.float32).reshape(self._dim)
+        return self._enqueue(UPDATE, (int(vid), vec))
+
+    # ------------------------------------------------------------------
+    # draining
+    # ------------------------------------------------------------------
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def result(self, ticket: int):
+        """Result for ``ticket`` (flushes if still queued)."""
+        if ticket not in self._results:
+            self.flush()
+        return self._results.pop(ticket)
+
+    def flush(self) -> dict[int, Any]:
+        """Drain the queue; returns {ticket: result} for every request
+        processed by this flush.  ``window`` ordering applies the
+        window's updates first (in order), then all queries; ``strict``
+        keeps exact submission order (see module docstring)."""
+        queue, self._queue = self._queue, []
+        out: dict[int, Any] = {}
+        if self.scfg.ordering == "window":
+            updates = [r for r in queue if r[1] != QUERY]
+            queries = [r for r in queue if r[1] == QUERY]
+            self._drain_updates_coalesced(updates, out)
+            self._drain_in_runs(queries, out)
+        else:
+            self._drain_in_runs(queue, out)
+        self._results.update(out)
+        while len(self._results) > self.scfg.max_retained_results:
+            self._results.pop(next(iter(self._results)))    # oldest first
+        self.n_flushes += 1
+        return out
+
+    def _drain_updates_coalesced(self, updates: list, out: dict) -> None:
+        """Window mode: coalesce the update half by kind.
+
+        Ops land in per-kind epochs — deletes, then updates, then
+        inserts — which is order-equivalent to submission order as long
+        as no id is touched twice with conflicting kinds inside one
+        epoch; on conflict (or an UPDATE repeat, whose delete half must
+        see the previous version) the epoch is flushed first.  Repeated
+        same-kind inserts/deletes are submission-stable within a batch
+        (dispatch sorts stably), so they need no split."""
+        epoch: dict[str, list] = {DELETE: [], UPDATE: [], INSERT: []}
+        touched: dict[int, str] = {}
+        for req in updates:
+            kind, payload = req[1], req[2]
+            vid = payload if kind == DELETE else payload[0]
+            prev = touched.get(vid)
+            if prev is not None and (prev != kind or kind == UPDATE):
+                self._flush_epoch(epoch, out)
+                epoch = {DELETE: [], UPDATE: [], INSERT: []}
+                touched = {}
+            touched[vid] = kind
+            epoch[kind].append(req)
+        self._flush_epoch(epoch, out)
+
+    def _flush_epoch(self, epoch: dict, out: dict) -> None:
+        for kind in (DELETE, UPDATE, INSERT):
+            if epoch[kind]:
+                self._run(epoch[kind], kind, out)
+
+    def _drain_in_runs(self, queue: list, out: dict) -> None:
+        """Batch maximal runs of same-kind (and same-k, for queries)
+        consecutive requests; never reorders within ``queue``."""
+        i = 0
+        while i < len(queue):
+            kind = queue[i][1]
+            key = (kind, queue[i][2][1]) if kind == QUERY else kind
+            j = i
+            while j < len(queue) and queue[j][1] == kind and (
+                    kind != QUERY or queue[j][2][1] == key[1]):
+                j += 1
+            self._run(queue[i:j], kind, out)
+            i = j
+
+    # -- micro-batching -------------------------------------------------
+    def _bucket(self, n: int, cap: int) -> int:
+        for b in self.scfg.buckets:
+            if n <= b:
+                return min(b, cap)
+        return cap
+
+    def _chunks(self, run: list, cap: int):
+        i = 0
+        while i < len(run):
+            take = min(len(run) - i, cap)
+            yield run[i:i + take], self._bucket(take, cap)
+            i += take
+
+    def _run(self, run: list, kind: str, out: dict) -> None:
+        if kind == UPDATE:
+            # An update chunk is one delete batch + one insert batch, so
+            # repeated ids inside a chunk would leave the stale version
+            # live (its delete half sees only the pre-chunk state) —
+            # split the run so each id appears once per chunk.
+            sub: list = []
+            seen: set = set()
+            for req in run:
+                if req[2][0] in seen:
+                    self._run_chunks(sub, kind, out)
+                    sub, seen = [], set()
+                sub.append(req)
+                seen.add(req[2][0])
+            self._run_chunks(sub, kind, out)
+        else:
+            self._run_chunks(run, kind, out)
+
+    def _run_chunks(self, run: list, kind: str, out: dict) -> None:
+        for chunk, bucket in self._chunks(run, self.scfg.cap_for(kind)):
+            if kind == QUERY:
+                self._query_batch(chunk, bucket, out)
+            elif kind == INSERT:
+                self._insert_batch(chunk, bucket, out)
+            elif kind == DELETE:
+                self._delete_batch(chunk, bucket, out)
+            else:                                           # UPDATE
+                self._delete_batch(chunk, bucket, None)
+                self._insert_batch(chunk, bucket, out)
+            self.n_batches += 1
+
+    # ------------------------------------------------------------------
+    # device rounds (all flag-word driven; see module docstring)
+    # ------------------------------------------------------------------
+    def _maintain(self, flags: int) -> None:
+        before = len(self.index.maintenance_log)
+        self.index._maintain(flags)
+        for ev in self.index.maintenance_log[before:]:
+            self.events.append((ev, self.n_flushes))
+
+    def _ensure_flags(self) -> int:
+        fm, fl = self._flags_caps
+        return self.index._ensure_flags(fm, fl)
+
+    def _query_batch(self, chunk: list, bucket: int, out: dict) -> None:
+        idx = self.index
+        k = chunk[0][2][1]
+        q = np.zeros((bucket, self._dim), np.float32)
+        for r, (_, _, (vec, _)) in enumerate(chunk):
+            q[r] = vec
+        ids, dists = query_step(idx.state, jnp.asarray(q), idx.cfg, k)
+        ids, dists = jax.device_get((ids, dists))
+        for r, (ticket, _, _) in enumerate(chunk):
+            out[ticket] = (ids[r], dists[r])
+
+    def _insert_batch(self, chunk: list, bucket: int, out) -> None:
+        idx, cfg = self.index, self.index.cfg
+        mcap, lcap = self._caps[bucket]
+        fm, fl = self._flags_caps
+        ids = np.zeros((bucket,), np.int32)
+        vecs = np.zeros((bucket, self._dim), np.float32)
+        mask = np.zeros((bucket,), bool)
+        for r, (_, _, (vid, vec)) in enumerate(chunk):
+            ids[r], vecs[r], mask[r] = vid, vec, True
+        ids_d = jnp.asarray(ids)
+        vecs_d = jnp.asarray(vecs)
+        slots = jnp.full((bucket,), -2, jnp.int32)
+        main_active = jnp.asarray(mask)
+        lsh_active = jnp.repeat(main_active, cfg.L)
+        flags = self._ensure_flags()
+        for _ in range(self.MAX_ROUNDS):
+            self._maintain(flags)
+            idx.state, slots, main_active, lsh_active, fw = insert_step(
+                idx.state, ids_d, vecs_d, slots, main_active, lsh_active,
+                cfg, mcap, lcap, fm, fl)
+            self.n_rounds += 1
+            flags = idx._read_flags(fw, (fm, fl))
+            if not flags & FLAG_ANY_PENDING:
+                break
+        idx.n_inserted += len(chunk)
+        if out is not None:
+            for ticket, _, _ in chunk:
+                out[ticket] = "ok"
+
+    def _delete_batch(self, chunk: list, bucket: int, out) -> None:
+        idx, cfg = self.index, self.index.cfg
+        mcap, lcap = self._caps[bucket]
+        fm, fl = self._flags_caps
+        ids = np.zeros((bucket,), np.int32)
+        mask = np.zeros((bucket,), bool)
+        for r, (_, kind, payload) in enumerate(chunk):
+            ids[r] = payload if kind == DELETE else payload[0]
+            mask[r] = True
+        ids_d = jnp.asarray(ids)
+        active = jnp.asarray(mask)
+        flags = self._ensure_flags()
+        for _ in range(self.MAX_ROUNDS):
+            self._maintain(flags)
+            idx.state, pending, fw = delete_step(
+                idx.state, ids_d, active, cfg, mcap, lcap, fm, fl)
+            self.n_rounds += 1
+            flags = idx._read_flags(fw, (fm, fl))
+            if not flags & FLAG_ANY_PENDING:
+                break
+            active = pending
+        if out is not None:
+            for ticket, _, _ in chunk:
+                out[ticket] = "ok"
+
+    # ------------------------------------------------------------------
+    # explicit epochs + stats
+    # ------------------------------------------------------------------
+    def seal(self) -> None:
+        """Force a seal epoch (hot tier -> sealed snapshots)."""
+        self.index.state = seal_step(self.index.state, self.index.cfg)
+        self.index._flags = None
+        self.events.append(("seal", self.n_flushes))
+
+    def merge(self) -> None:
+        """Force a merge epoch (compaction + tombstone drain)."""
+        self.index.state = merge_step(self.index.state, self.index.cfg)
+        self.index._flags = None
+        self.events.append(("merge", self.n_flushes))
+
+    def stats(self) -> dict:
+        return {
+            "requests": self.n_requests,
+            "flushes": self.n_flushes,
+            "batches": self.n_batches,
+            "rounds": self.n_rounds,
+            "syncs": self.index.sync_count,
+            "seals": sum(1 for e, _ in self.events if e == "seal"),
+            "merges": sum(1 for e, _ in self.events if e == "merge"),
+            "buckets": list(self.scfg.buckets),
+        }
+
+
+# ======================================================================
+# closed-loop driver (benchmarks / examples)
+# ======================================================================
+def drive(engine: StreamEngine, requests: list[tuple], flush_every: int = 0):
+    """Feed ``(kind, *args)`` request tuples through the engine.
+
+    ``flush_every`` > 0 flushes after that many submissions (latency
+    mode); 0 flushes once at the end (throughput mode).  Returns
+    ({ticket: result}, elapsed seconds, per-flush latencies).
+    """
+    results: dict[int, Any] = {}
+    lat: list[float] = []
+    t0 = time.perf_counter()
+    n = 0
+    for req in requests:
+        kind, args = req[0], req[1:]
+        getattr(engine, kind)(*args)
+        n += 1
+        if flush_every and n % flush_every == 0:
+            f0 = time.perf_counter()
+            results.update(engine.flush())
+            lat.append(time.perf_counter() - f0)
+    if engine.pending():
+        f0 = time.perf_counter()
+        results.update(engine.flush())
+        lat.append(time.perf_counter() - f0)
+    return results, time.perf_counter() - t0, lat

@@ -1,0 +1,94 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+Implements just the surface these tests use — ``given``, ``settings``,
+``strategies.integers/lists/data`` — with a fixed-seed numpy generator,
+so the property tests still execute as deterministic multi-example
+smoke tests instead of erroring at collection.  When ``hypothesis`` is
+available the real library is used instead (see the test modules'
+import guard); this fallback intentionally caps the example count to
+keep the no-deps CI lane fast.
+"""
+from __future__ import annotations
+
+import types
+
+import numpy as np
+
+_MAX_FALLBACK_EXAMPLES = 5
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample                 # sample(rng) -> value
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def lists(elem: _Strategy, min_size: int = 0, max_size: int = 10,
+          unique: bool = False) -> _Strategy:
+    # clamp: fallback examples run eagerly (no hypothesis shrinking or
+    # caching), so huge lists only add minutes, not coverage
+    max_size = max(min_size, min(max_size, 24))
+
+    def sample(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        if not unique:
+            return [elem.sample(rng) for _ in range(n)]
+        out: list = []
+        seen: set = set()
+        budget = 100 * (n + 1)               # value domain may be < n
+        while len(out) < n and budget:
+            budget -= 1
+            v = elem.sample(rng)
+            if v not in seen:
+                seen.add(v)
+                out.append(v)
+        if len(out) < min_size:
+            raise RuntimeError("fallback lists(): domain too small for "
+                               f"min_size={min_size} unique elements")
+        return out
+    return _Strategy(sample)
+
+
+class _DrawData:
+    """Interactive draws (``st.data()``): shares the example's rng."""
+
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy):
+        return strategy.sample(self._rng)
+
+
+def data() -> _Strategy:
+    return _Strategy(lambda rng: _DrawData(rng))
+
+
+def settings(max_examples: int = 20, **_ignored):
+    def deco(fn):
+        fn._prop_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies: _Strategy):
+    def deco(fn):
+        # NB: no functools.wraps — pytest must see run's own
+        # no-argument signature, not fn's strategy parameters.
+        def run():
+            n = min(getattr(run, "_prop_max_examples",
+                            getattr(fn, "_prop_max_examples", 10)),
+                    _MAX_FALLBACK_EXAMPLES)
+            rng = np.random.default_rng(0)
+            for _ in range(n):
+                fn(*[s.sample(rng) for s in strategies])
+        run.__name__ = fn.__name__
+        run.__doc__ = fn.__doc__
+        run.__module__ = fn.__module__
+        return run
+    return deco
+
+
+strategies = types.SimpleNamespace(integers=integers, lists=lists, data=data)

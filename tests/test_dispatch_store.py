@@ -3,7 +3,10 @@ unit + hypothesis property tests on the core invariants."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # optional dep: deterministic fallback
+    from _prop import given, settings, strategies as st
 
 from repro.core import bloom
 from repro.core.config import PFOConfig
@@ -72,6 +75,22 @@ def test_dense_store_alloc_free_no_leak(n_alloc, n_free):
     # double free is a no-op
     stt2 = dense_free(stt, slots[:n_free], jnp.ones(n_free, bool))
     assert int(stt2.free_top) == int(stt.free_top)
+
+
+def test_dense_store_duplicate_free_in_one_batch_frees_once():
+    """Two rows freeing the same slot in ONE batch must reclaim it once;
+    a double push would later hand the slot to two different ids."""
+    stt = dense_init(16, 2)
+    vecs = jnp.ones((3, 2), jnp.float32)
+    stt, slots, _ = dense_alloc(stt, vecs, jnp.ones(3, bool))
+    free_before = int(stt.free_top)
+    dup = jnp.asarray([int(slots[0]), int(slots[0]), int(slots[1])],
+                      jnp.int32)
+    stt = dense_free(stt, dup, jnp.ones(3, bool))
+    assert int(stt.free_top) == free_before + 2     # not +3
+    # the two re-allocations must get distinct slots
+    stt, news, ok = dense_alloc(stt, vecs[:2], jnp.ones(2, bool))
+    assert bool(ok.all()) and int(news[0]) != int(news[1])
 
 
 def test_dense_store_full_returns_not_ok():

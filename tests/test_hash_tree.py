@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # optional dep: deterministic fallback
+    from _prop import given, settings, strategies as st
 
 from repro.core.hash_tree import (TreeConfig, init_tree, tree_delete,
                                   tree_insert, tree_lookup, tree_query)

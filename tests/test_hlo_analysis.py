@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.analysis.hlo import analyze_hlo
 
 SYNTH = """
@@ -62,9 +63,9 @@ def test_collective_bytes_counted():
     def f(a):
         return jax.lax.psum(a, "x")
 
-    fn = jax.shard_map(f, mesh=mesh,
-                       in_specs=jax.sharding.PartitionSpec("x"),
-                       out_specs=jax.sharding.PartitionSpec())
+    fn = compat.shard_map(f, mesh=mesh,
+                          in_specs=jax.sharding.PartitionSpec("x"),
+                          out_specs=jax.sharding.PartitionSpec())
     hlo = jax.jit(fn).lower(
         jax.ShapeDtypeStruct((8,), jnp.float32)).compile().as_text()
     st = analyze_hlo(hlo)

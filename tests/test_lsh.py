@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # optional dep: deterministic fallback
+    from _prop import given, settings, strategies as st
 
 from conftest import small_pfo_config
 from repro.core import lsh

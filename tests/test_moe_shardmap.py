@@ -11,7 +11,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 os.environ["REPRO_PALLAS"] = "off"
 import numpy as np, jax, jax.numpy as jnp
-from repro import configs
+from repro import compat, configs
 from repro.models import moe as moe_mod
 from repro.models.registry import build_model
 
@@ -25,7 +25,7 @@ for arch, gi in (("llama4_scout_17b_a16e", 0), ("deepseek_v2_236b", 1)):
     x = jnp.asarray(np.random.default_rng(0).normal(
         size=(2, 16, cfg.d_model)), jnp.float32)
     ref = moe_mod.moe_apply(mp, cfg, x)
-    with jax.sharding.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         got = moe_mod.moe_apply_shardmap(mp, cfg, x)
     diff = float(jnp.max(jnp.abs(ref - got)))
     assert diff < 1e-5, (arch, diff)

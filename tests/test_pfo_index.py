@@ -36,6 +36,7 @@ def test_query_returns_self(loaded_index):
     np.testing.assert_allclose(dists[:, 0], 0.0, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_recall_beats_random(loaded_index):
     idx, vecs = loaded_index
     rng = np.random.default_rng(3)
@@ -88,6 +89,31 @@ def test_merge_compaction_preserves_queries():
     idx.state = merge_step(idx.state, cfg)
     ids, dists = idx.query(vecs[:8], k=3)
     assert (ids[:, 0] == np.arange(8)).all()
+
+
+def test_tombstone_overflow_never_resurfaces_deletes():
+    """Deleting far more ids than the tombstone buffer holds must not
+    silently drop any delete: overflow rows are returned as pending, the
+    host merges (draining the buffer) and retries, so no deleted id is
+    ever answered from the sealed tier again."""
+    cfg = small_pfo_config(max_tombstones=32)
+    rng = np.random.default_rng(7)
+    n = 300
+    vecs = rng.normal(size=(n, cfg.dim)).astype(np.float32)
+    vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
+    idx = PFOIndex(cfg, seed=0)
+    idx.insert(np.arange(n, dtype=np.int32), vecs)
+    from repro.core import seal_step
+    # push every entry into the sealed tier: now deletes *need* tombstones
+    idx.state = seal_step(idx.state, cfg)
+    victims = np.arange(100, dtype=np.int32)          # >> max_tombstones
+    rounds = idx.delete(victims)
+    assert rounds > 1            # overflow forced at least one retry
+    ids, _ = idx.query(vecs[:100], k=10)
+    assert not np.isin(victims, ids).any()
+    # the survivors are still served
+    ids2, dists2 = idx.query(vecs[200:210], k=3)
+    assert (ids2[:, 0] == np.arange(200, 210)).all()
 
 
 def test_store_slots_reclaimed():

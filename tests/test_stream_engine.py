@@ -1,0 +1,233 @@
+"""Stream engine tests: interleaved-stream equivalence vs. sequential
+PFOIndex calls, ragged-bucket padding, device-resident rounds (single
+explicit scalar sync, no implicit device->host transfers), and the
+bounded jit cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import small_pfo_config
+from repro.core import PFOIndex
+from repro.core.index import delete_step, insert_step
+from repro.serving import StreamConfig, StreamEngine
+
+
+def _vecs(n, dim, seed=0):
+    rng = np.random.default_rng(seed)
+    v = rng.normal(size=(n, dim)).astype(np.float32)
+    return v / np.linalg.norm(v, axis=1, keepdims=True)
+
+
+def _engine(cfg=None, **scfg_kw):
+    cfg = cfg or small_pfo_config()
+    kw = dict(max_batch=64, min_batch=8)
+    kw.update(scfg_kw)
+    return StreamEngine(PFOIndex(cfg, seed=0), StreamConfig(**kw))
+
+
+def test_interleaved_equivalence_vs_sequential():
+    """In strict ordering, an interleaved query/insert/delete/update
+    stream through the engine answers exactly like per-request PFOIndex
+    calls."""
+    cfg = small_pfo_config()
+    v = _vecs(150, cfg.dim, seed=1)
+    eng = _engine(cfg, ordering="strict")
+    ref = PFOIndex(cfg, seed=0)
+
+    # interleaved stream: inserts, queries, deletes, updates mixed
+    for i in range(100):
+        eng.insert(i, v[i])
+    q1 = [eng.query(v[i], k=5) for i in range(0, 10)]
+    for i in range(5):
+        eng.delete(i)
+    for i in range(5, 8):
+        eng.update(i, v[100 + i])
+    q2 = [eng.query(v[100 + i], k=5) for i in range(5, 8)]
+    res = eng.flush()
+
+    # sequential reference, same op order
+    ref.insert(np.arange(100, dtype=np.int32), v[:100])
+    r1_ids, r1_d = ref.query(v[:10], k=5)
+    ref.delete(np.arange(5, dtype=np.int32))
+    ref.update(np.arange(5, 8, dtype=np.int32), v[105:108])
+    r2_ids, r2_d = ref.query(v[105:108], k=5)
+
+    for row, t in enumerate(q1):
+        ids, d = res[t]
+        np.testing.assert_array_equal(ids, r1_ids[row])
+        np.testing.assert_allclose(d, r1_d[row], atol=1e-6)
+    for row, t in enumerate(q2):
+        ids, d = res[t]
+        np.testing.assert_array_equal(ids, r2_ids[row])
+        np.testing.assert_allclose(d, r2_d[row], atol=1e-6)
+        assert ids[0] == 5 + row          # update visible at new location
+
+
+def test_window_ordering_round_semantics():
+    """Window mode: a flush is one epoch — its updates (in submission
+    order) land first, then every query probes the post-update state.
+    Equivalent to a sequential run with the window's updates hoisted."""
+    cfg = small_pfo_config()
+    v = _vecs(80, cfg.dim, seed=6)
+    eng = _engine(cfg, ordering="window")
+    ref = PFOIndex(cfg, seed=0)
+
+    for i in range(40):
+        eng.insert(i, v[i])
+    # interleaved: query BEFORE the later insert/delete — window mode
+    # still answers it against the full window's updates
+    t_early = eng.query(v[41], k=3)
+    eng.insert(41, v[41])
+    eng.delete(0)
+    t_late = eng.query(v[41], k=3)
+    res = eng.flush()
+
+    ref.insert(np.arange(40, dtype=np.int32), v[:40])
+    ref.insert(np.asarray([41], np.int32), v[41:42])
+    ref.delete(np.asarray([0], np.int32))
+    rids, rd = ref.query(v[41:42], k=3)
+
+    for t in (t_early, t_late):
+        ids, d = res[t]
+        np.testing.assert_array_equal(ids, rids[0])
+        np.testing.assert_allclose(d, rd[0], atol=1e-6)
+        assert ids[0] == 41          # sees the later insert (same epoch)
+
+
+@pytest.mark.parametrize("n", [1, 7, 8, 9, 33, 100])
+def test_ragged_batch_bucket_padding(n):
+    """Ragged run sizes pad up to a power-of-two bucket without
+    corrupting results: every inserted id self-hits, none leak."""
+    cfg = small_pfo_config()
+    v = _vecs(n, cfg.dim, seed=2)
+    eng = _engine(cfg, max_batch=32, min_batch=8)
+    for i in range(n):
+        eng.insert(i, v[i])
+    tickets = [eng.query(v[i], k=3) for i in range(n)]
+    res = eng.flush()
+    for i, t in enumerate(tickets):
+        ids, d = res[t]
+        assert ids[0] == i and d[0] < 1e-5
+        live = ids[ids >= 0]
+        assert live.max(initial=-1) < n   # padding rows never surface
+    # chunks: updates ceil over max_batch, queries over query_max_batch
+    assert eng.n_batches == -(-n // 32) + -(-n // 16)
+
+
+def test_steady_state_round_single_scalar_sync():
+    """A warm steady-state round does exactly ONE host<->device sync —
+    the explicit packed-flag-word readback — and zero implicit
+    device->host transfers (enforced by the JAX transfer guard)."""
+    cfg = small_pfo_config()
+    v = _vecs(300, cfg.dim, seed=3)
+    eng = _engine(cfg, max_batch=64, min_batch=64, query_max_batch=64)
+    # warm up: compiles every (op, bucket) variant and seeds the flags
+    for i in range(64):
+        eng.insert(i, v[i])
+    eng.flush()
+    for i in range(64, 128):
+        eng.insert(i, v[i])
+    eng.flush()
+
+    # steady state: one 64-bucket insert batch, one round
+    for i in range(128, 192):
+        eng.insert(i, v[i])
+    before_sync = eng.index.sync_count
+    before_rounds = eng.n_rounds
+    with jax.transfer_guard_device_to_host("disallow"):
+        eng.flush()
+    rounds = eng.n_rounds - before_rounds
+    assert rounds >= 1
+    # exactly one sync — the flag word — per round, and nothing else
+    assert eng.index.sync_count - before_sync == rounds
+
+    # and the data actually landed
+    t = eng.query(v[130], k=3)
+    ids, d = eng.result(t)
+    assert ids[0] == 130 and d[0] < 1e-5
+
+
+def test_jit_cache_bounded_by_buckets():
+    """Compiled step-variant count grows with the bucket table, not with
+    traffic: mixed ragged batches may only add <= len(buckets) variants
+    per op."""
+    cfg = small_pfo_config()
+    v = _vecs(400, cfg.dim, seed=4)
+    eng = _engine(cfg, max_batch=64, min_batch=8)
+    ins_before = insert_step._cache_size()
+    del_before = delete_step._cache_size()
+    rng = np.random.default_rng(0)
+    nxt = 0
+    for _ in range(12):                       # ragged interleaved traffic
+        take = int(rng.integers(1, 70))
+        for i in range(nxt, min(nxt + take, 400)):
+            eng.insert(i, v[i])
+        nxt = min(nxt + take, 400)
+        for i in rng.integers(0, max(nxt, 1), 5):
+            eng.delete(int(i))
+        eng.flush()
+    n_buckets = len(eng.scfg.buckets)
+    assert insert_step._cache_size() - ins_before <= n_buckets
+    assert delete_step._cache_size() - del_before <= n_buckets
+
+
+@pytest.mark.parametrize("ordering", ["strict", "window"])
+def test_repeated_updates_of_same_id_keep_one_version(ordering):
+    """Consecutive updates of the same id must not leave the stale
+    version live (update chunks split on repeated ids)."""
+    cfg = small_pfo_config()
+    v = _vecs(4, cfg.dim, seed=8)
+    eng = _engine(cfg, ordering=ordering)
+    eng.insert(5, v[0])
+    eng.flush()
+    eng.update(5, v[1])
+    eng.update(5, v[2])           # same run/window
+    t_old = eng.query(v[1], k=2)
+    t_new = eng.query(v[2], k=2)
+    res = eng.flush()
+    ids, d = res[t_new]
+    assert ids[0] == 5 and d[0] < 1e-5
+    ids, d = res[t_old]
+    assert not (ids[0] == 5 and d[0] < 1e-5)   # stale version gone
+    assert eng.index.stats()["items_hot"] == 1
+
+
+def test_duplicate_deletes_in_one_window_do_not_corrupt_store():
+    """Two independently-submitted deletes of the same id coalesce into
+    one batch; the store must free the slot once, or later inserts
+    share a vector row (regression for the dense_free double-push)."""
+    cfg = small_pfo_config()
+    v = _vecs(60, cfg.dim, seed=7)
+    eng = _engine(cfg)
+    for i in range(50):
+        eng.insert(i, v[i])
+    eng.flush()
+    eng.delete(5)
+    eng.delete(5)                 # same window -> same delete batch
+    eng.flush()
+    eng.insert(100, v[50])
+    eng.insert(101, v[51])
+    tickets = [eng.query(v[50], k=3), eng.query(v[51], k=3)]
+    res = eng.flush()
+    for vid, t in zip((100, 101), tickets):
+        ids, d = res[t]
+        assert ids[0] == vid and d[0] < 1e-5, (vid, ids, d)
+
+
+def test_maintenance_runs_as_engine_events():
+    """With tiny arenas, sustained inserts force seal epochs through the
+    flag word; the engine records them and queries stay correct."""
+    cfg = small_pfo_config(max_leaves_per_tree=64, max_nodes_per_tree=32)
+    v = _vecs(600, cfg.dim, seed=5)
+    eng = _engine(cfg, max_batch=64, min_batch=8)
+    for i in range(600):
+        eng.insert(i, v[i])
+    eng.flush()
+    assert eng.stats()["seals"] >= 1
+    assert eng.index.stats()["overflow_events"] == 0
+    tickets = [eng.query(v[i], k=3) for i in (0, 299, 599)]
+    res = eng.flush()
+    for vid, t in zip((0, 299, 599), tickets):
+        ids, d = res[t]
+        assert ids[0] == vid and d[0] < 1e-5

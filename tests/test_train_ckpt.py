@@ -105,6 +105,26 @@ def test_checkpoint_reshard_roundtrip(tmp_path):
     assert extra["note"] == "x"
 
 
+def test_checkpoint_uncompressed_fallback(tmp_path, monkeypatch):
+    """Without the optional zstandard package, checkpoints round-trip
+    through the raw codec (and the manifest records it)."""
+    import json
+    from repro.checkpoint import ckpt as ckpt_mod
+    monkeypatch.setattr(ckpt_mod, "zstandard", None)
+    tree = {"a": jnp.arange(8, dtype=jnp.float32),
+            "b": {"c": jnp.ones((2, 3), jnp.bfloat16)}}
+    save_checkpoint(str(tmp_path), 3, tree, {"k": 1})
+    with open(tmp_path / "step_00000003" / "manifest.json") as f:
+        manifest = json.load(f)
+    assert all(e["codec"] == "raw" for e in manifest["leaves"])
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored, extra = restore_checkpoint(str(tmp_path), 3, like)
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+    assert extra["k"] == 1
+
+
 def test_checkpoint_atomicity(tmp_path):
     """A half-written checkpoint dir is never picked up."""
     tree = {"a": jnp.ones((2,))}
