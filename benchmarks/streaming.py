@@ -89,7 +89,8 @@ def main():
     ap.add_argument("--dim", type=int, default=64)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--max-batch", type=int, default=256)
-    ap.add_argument("--query-max-batch", type=int, default=8)
+    ap.add_argument("--query-max-batch", type=int, default=0,
+                    help="0 = auto (masked traversal: follow max-batch)")
     ap.add_argument("--flush-every", type=int, default=256)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes + assertions only (CI)")
@@ -105,7 +106,7 @@ def main():
 
     # ---- engine ------------------------------------------------------
     scfg = StreamConfig(max_batch=args.max_batch, min_batch=8,
-                        query_max_batch=args.query_max_batch,
+                        query_max_batch=args.query_max_batch or None,
                         default_k=args.k)
     eng = StreamEngine(PFOIndex(cfg, seed=0), scfg)
     ins_before = insert_step._cache_size()

@@ -43,6 +43,18 @@ class PFOConfig:
     max_candidates_per_probe: int = 32   # leaves collected per tree probe
     max_candidates_total: int = 512      # after union over L tables+snaps
 
+    # --- traversal discipline ----------------------------------------
+    # "masked" (default): fixed-trip descent + static-length chain
+    # gather; vmapped query rows run in lockstep so large query batches
+    # amortize.  "loop": the legacy data-dependent lax.while_loop walks,
+    # kept for differential testing (tests/test_traversal_equiv.py).
+    traversal: str = "masked"
+    # static chain-gather bound for the masked path; 0 means "use
+    # max_candidates_per_probe", which makes the masked path return
+    # bit-identical results to the loop path (a chain can never
+    # contribute more than max_candidates leaves to a probe).
+    max_chain: int = 0
+
     # --- hierarchical memory (sealed snapshot tier) -----------------
     seal_threshold: float = 0.85         # hot-tier fill fraction triggering seal
     max_snapshots: int = 8
@@ -90,6 +102,8 @@ class PFOConfig:
         return (self.M - self.main_m) // self.log2_l
 
     def __post_init__(self):
+        assert self.traversal in ("loop", "masked")
+        assert self.max_chain >= 0
         assert self.l & (self.l - 1) == 0, "l must be a power of two"
         assert self.M == 32, "uint32 compound keys"
         assert self.C + self.m <= 16

@@ -24,6 +24,43 @@ Leaf ``next`` uses the same "v>0 == leaf v-1, 0 == end" encoding, and
 doubles as the free-list link for reclaimed leaves (paper §3.2.1's
 RECLAIMED_LIST, single size class here — the size-classed variant lives
 in ``store.py`` where records really are variable-sized).
+
+Static-trip / masking discipline (read path)
+--------------------------------------------
+Two traversal modes exist for the read path (``TreeConfig.traversal``):
+
+``"loop"``
+    The original data-dependent ``lax.while_loop`` walks.  Correct, but
+    under ``vmap`` every query row is locked to the *slowest* chain
+    walk in the batch and each trip re-evaluates the convergence
+    predicate — per-row query cost grows with batch size.
+
+``"masked"`` (default)
+    Fixed trip counts everywhere: the directory descent unrolls to the
+    static ``max_depth`` bound (a descent can never legally be deeper —
+    spreads require ``depth + 1 < max_depth``), and chain walks become
+    a static ``max_chain``-step ``lax.scan`` that gathers the chain's
+    leaf indices densely and masks exhausted positions instead of
+    branching.  Every vmapped row executes the identical instruction
+    stream, so XLA emits plain batched gathers and large query batches
+    amortize instead of penalize.  ``max_chain`` bounds the walk: with
+    ``max_chain >= max_candidates`` (the default via
+    ``PFOConfig.max_chain = 0``) a chain can never contribute more
+    leaves than the loop path could collect before its cumulative
+    ``max_candidates`` cutoff, so both *query* modes return
+    bit-identical results (asserted differentially in
+    tests/test_traversal_equiv.py).  The exact-id *lookup* path has no
+    cumulative cutoff in the legacy walk, so there its equivalence
+    holds only while bucket chains stay within ``max_chain`` — a
+    chain can exceed it only when more than ``max_chain`` records
+    share every key bit the tree can consume, which for the MainTable
+    (distinct ids -> distinct fmix32 keys, a bijection) requires that
+    many ids colliding on the full consumed prefix: adversarial-only,
+    and the bounded-bucket spread discipline (§5.1) assumes it away.
+
+The write path (insert / delete / spread) keeps its while_loops: writes
+are applied sequentially within a tree by construction (the actor
+mailbox scan), so there is no lockstep batch to penalize.
 """
 from __future__ import annotations
 
@@ -50,6 +87,16 @@ class TreeConfig(NamedTuple):
     # landing node's sibling slots in Gray-adjacent order — a
     # multi-probe pass confined to one directory node.
     sibling_probe: bool = False
+    # read-path traversal mode: "masked" (fixed-trip, lockstep-friendly)
+    # or "loop" (legacy while_loop walks) — see the module docstring.
+    traversal: str = "masked"
+    # static chain-gather bound for the masked mode; 0 == max_candidates
+    # (the bit-identical-equivalence default).
+    max_chain: int = 0
+
+    @property
+    def max_chain_eff(self) -> int:
+        return self.max_chain or self.max_candidates
 
 
 class TreeState(NamedTuple):
@@ -124,6 +171,212 @@ def _chain_len(st: TreeState, head: jax.Array, cap: jax.Array) -> jax.Array:
 
     _, n = jax.lax.while_loop(cond, body, (head, jnp.int32(0)))
     return n
+
+
+# ----------------------------------------------------------------------
+# fixed-trip (masked) traversal — see module docstring
+# ----------------------------------------------------------------------
+def _descend_masked(st: TreeState, h: jax.Array, cfg: TreeConfig):
+    """Fixed-trip directory descent: exactly ``max_depth - 1`` steps.
+
+    Same contract as ``_descend`` — returns (node, depth, slot_idx,
+    slot_val) — but every step executes unconditionally and a step that
+    has already landed (slot_val >= 0) just carries its state forward,
+    so vmapped rows stay in lockstep.  A descent can never legally need
+    more steps: spreads require ``depth + 1 < max_depth``.
+    """
+    sl = key_bits(h, cfg.skip_bits, cfg.log2_l)
+    node = jnp.int32(0)
+    depth = jnp.int32(0)
+    v = st.slots[0, sl]
+    for d in range(1, cfg.max_depth):
+        go = v < 0
+        node = jnp.where(go, -v - 1, node)
+        sl = jnp.where(go, key_bits(h, cfg.skip_bits + d * cfg.log2_l,
+                                    cfg.log2_l), sl)
+        depth = depth + go.astype(jnp.int32)
+        v = jnp.where(go, st.slots[node, sl], v)
+    return node, depth, sl, v
+
+
+def _chain_slots_masked(st: TreeState, head: jax.Array,
+                        max_chain: int) -> jax.Array:
+    """Gather a leaf chain's indices densely: (max_chain,) i32, -1 pad.
+
+    A static-length ``lax.scan`` over the ``leaf_next`` links — the
+    fixed-trip replacement for the chain while_loops.  Position ``j``
+    holds the chain's j-th leaf index (newest first, since inserts
+    prepend) or -1 once the chain is exhausted.
+    """
+    def step(cur, _):
+        alive = cur > 0
+        leaf = jnp.where(alive, cur - 1, 0)
+        out = jnp.where(alive, leaf, -1)
+        nxt = jnp.where(alive, st.leaf_next[leaf], 0)
+        return nxt, out
+
+    _, idxs = jax.lax.scan(step, head, None, length=max_chain)
+    return idxs
+
+
+def _compact_candidates(st: TreeState, leaf_idx: jax.Array, cap: int):
+    """Masked stable compaction: dense leaf indices -> (ids, vals, n).
+
+    ``leaf_idx`` is a flat, order-significant block of leaf indices
+    (-1 == invalid).  Valid entries keep their relative order and are
+    packed to the front of a ``cap``-sized output; entries past ``cap``
+    are dropped — exactly the loop path's cumulative truncation.
+    """
+    valid = leaf_idx >= 0
+    safe = jnp.maximum(leaf_idx, 0)
+    ids_all = jnp.where(valid, st.leaf_id[safe], -1)
+    vals_all = jnp.where(valid, st.leaf_val[safe], -1)
+    pos = jnp.cumsum(valid.astype(jnp.int32)) - 1
+    tgt = jnp.where(valid, pos, cap)         # invalid / overflow -> dropped
+    ids = jnp.full((cap,), -1, jnp.int32).at[tgt].set(ids_all, mode="drop")
+    vals = jnp.full((cap,), -1, jnp.int32).at[tgt].set(vals_all, mode="drop")
+    n = jnp.minimum(jnp.sum(valid.astype(jnp.int32)), cap)
+    return ids, vals, n
+
+
+def tree_query_masked(st: TreeState, h: jax.Array, cfg: TreeConfig):
+    """Fixed-trip probe: (ids, vals, count) — identical to the loop path.
+
+    Gathers the landing bucket's chain (and, under ``sibling_probe``,
+    every sibling slot's chain in xor order) as one dense
+    ``[n_slots, max_chain]`` candidate block, then compacts the valid
+    entries in order.
+    """
+    node, _, sl, v = _descend_masked(st, h, cfg)
+    mc = cfg.max_chain_eff
+
+    if cfg.sibling_probe:
+        sls = sl ^ jnp.arange(cfg.l, dtype=jnp.int32)    # j=0 == landing
+        vs = st.slots[node, sls]
+        heads = jnp.where(vs > 0, vs, 0)
+        flat = jax.vmap(
+            lambda hd: _chain_slots_masked(st, hd, mc))(heads).reshape(-1)
+    else:
+        flat = _chain_slots_masked(st, jnp.where(v > 0, v, 0), mc)
+    return _compact_candidates(st, flat, cfg.max_candidates)
+
+
+def tree_lookup_masked(st: TreeState, h: jax.Array, vid: jax.Array,
+                       cfg: TreeConfig):
+    """Fixed-trip exact-id lookup; newest (first) match wins.
+
+    Scans the first ``max_chain_eff`` chain entries (newest-first) —
+    records buried deeper are missed; see the module docstring for why
+    that depth is adversarial-only under the spread discipline.
+    """
+    _, _, _, v = _descend_masked(st, h, cfg)
+    flat = _chain_slots_masked(st, jnp.where(v > 0, v, 0),
+                               cfg.max_chain_eff)
+    valid = flat >= 0
+    safe = jnp.maximum(flat, 0)
+    hit = valid & (st.leaf_id[safe] == vid)
+    found = jnp.any(hit)
+    first = jnp.argmax(hit)                  # first True == newest version
+    val = jnp.where(found, st.leaf_val[safe[first]], -1)
+    return val, found
+
+
+# ----------------------------------------------------------------------
+# forest-level masked traversal (flat batched indexing)
+#
+# The vmap-over-trees wrappers below slice one tree's whole arena per
+# row (``jax.tree.map(lambda a: a[tid], forest)``).  Under vmap that
+# slice lowers to a gather, and XLA cannot fuse a gather whose operand
+# is itself a gather's output — the per-row arena copies materialize,
+# and the read path's memory traffic grows with the probe count.  The
+# masked traversal needs no per-tree view: every step is a plain
+# batched gather ``array[tree_id, idx]`` into the *stacked* arenas, so
+# these flat implementations index the forest directly and touch only
+# the elements they read.
+# ----------------------------------------------------------------------
+def _forest_descend_masked(forest: TreeState, tids: jax.Array,
+                           hs: jax.Array, cfg: TreeConfig):
+    """Batched fixed-trip descent: tids/hs (N,) -> (node, sl, v) (N,)."""
+    sl = key_bits(hs, cfg.skip_bits, cfg.log2_l)
+    node = jnp.zeros_like(tids)
+    v = forest.slots[tids, node, sl]
+    for d in range(1, cfg.max_depth):
+        go = v < 0
+        node = jnp.where(go, -v - 1, node)
+        sl = jnp.where(go, key_bits(hs, cfg.skip_bits + d * cfg.log2_l,
+                                    cfg.log2_l), sl)
+        v = jnp.where(go, forest.slots[tids, node, sl], v)
+    return node, sl, v
+
+
+def _forest_chain_slots(forest: TreeState, tids: jax.Array,
+                        heads: jax.Array, max_chain: int) -> jax.Array:
+    """Batched chain gather: heads (...,) -> leaf indices (..., max_chain),
+    -1 pad.  ``tids`` broadcasts against ``heads``."""
+    tids = jnp.broadcast_to(tids, heads.shape)
+
+    def step(cur, _):
+        alive = cur > 0
+        leaf = jnp.where(alive, cur - 1, 0)
+        out = jnp.where(alive, leaf, -1)
+        nxt = jnp.where(alive, forest.leaf_next[tids, leaf], 0)
+        return nxt, out
+
+    _, idxs = jax.lax.scan(step, heads, None, length=max_chain)
+    return jnp.moveaxis(idxs, 0, -1)
+
+
+def forest_query_masked(forest: TreeState, tids: jax.Array, hs: jax.Array,
+                        cfg: TreeConfig):
+    """Batched fixed-trip probes: (N,) -> ids/vals (N, max_candidates), n
+    (N,).  Row-for-row identical to vmapping the single-tree query."""
+    n = tids.shape[0]
+    node, sl, v = _forest_descend_masked(forest, tids, hs, cfg)
+    mc = cfg.max_chain_eff
+    if cfg.sibling_probe:
+        sls = sl[:, None] ^ jnp.arange(cfg.l, dtype=jnp.int32)[None, :]
+        vs = forest.slots[tids[:, None], node[:, None], sls]     # (N, l)
+        heads = jnp.where(vs > 0, vs, 0)
+        chains = _forest_chain_slots(forest, tids[:, None], heads, mc)
+        flat = chains.reshape(n, -1)                     # (N, l*mc)
+        flat_tids = jnp.repeat(tids[:, None], cfg.l * mc, axis=1)
+    else:
+        heads = jnp.where(v > 0, v, 0)
+        flat = _forest_chain_slots(forest, tids, heads, mc)      # (N, mc)
+        flat_tids = jnp.broadcast_to(tids[:, None], flat.shape)
+
+    valid = flat >= 0
+    safe = jnp.maximum(flat, 0)
+    ids_all = jnp.where(valid, forest.leaf_id[flat_tids, safe], -1)
+    vals_all = jnp.where(valid, forest.leaf_val[flat_tids, safe], -1)
+
+    cap = cfg.max_candidates
+    pos = jnp.cumsum(valid.astype(jnp.int32), axis=1) - 1
+    tgt = jnp.where(valid, pos, cap)
+    rows = jnp.arange(n)[:, None]
+    ids = jnp.full((n, cap), -1, jnp.int32).at[rows, tgt].set(
+        ids_all, mode="drop")
+    vals = jnp.full((n, cap), -1, jnp.int32).at[rows, tgt].set(
+        vals_all, mode="drop")
+    cnt = jnp.minimum(jnp.sum(valid.astype(jnp.int32), axis=1), cap)
+    return ids, vals, cnt
+
+
+def forest_lookup_masked(forest: TreeState, tids: jax.Array, hs: jax.Array,
+                         vids: jax.Array, cfg: TreeConfig):
+    """Batched fixed-trip exact-id lookup: (N,) -> (val, found) (N,)."""
+    _, _, v = _forest_descend_masked(forest, tids, hs, cfg)
+    heads = jnp.where(v > 0, v, 0)
+    flat = _forest_chain_slots(forest, tids, heads, cfg.max_chain_eff)
+    valid = flat >= 0
+    safe = jnp.maximum(flat, 0)
+    flat_tids = jnp.broadcast_to(tids[:, None], flat.shape)
+    hit = valid & (forest.leaf_id[flat_tids, safe] == vids[:, None])
+    found = jnp.any(hit, axis=1)
+    first = jnp.argmax(hit, axis=1)          # first True == newest version
+    leaf = jnp.take_along_axis(safe, first[:, None], axis=1)[:, 0]
+    val = jnp.where(found, forest.leaf_val[tids, leaf], -1)
+    return val, found
 
 
 def _alloc_leaf(st: TreeState):
@@ -201,12 +454,13 @@ def tree_insert(st: TreeState, h: jax.Array, vid: jax.Array,
 # ----------------------------------------------------------------------
 # query (paper: same walk; returns the resident leaf chain as A(q))
 # ----------------------------------------------------------------------
-def tree_query(st: TreeState, h: jax.Array, cfg: TreeConfig):
-    """Probe with key ``h``: (ids, vals, count) — padded with -1.
+def tree_query_loop(st: TreeState, h: jax.Array, cfg: TreeConfig):
+    """Legacy while_loop probe: (ids, vals, count) — padded with -1.
 
     Lands on the bucket addressed by successive log2(l)-bit digits of
     ``h`` and returns its leaf chain (the paper's A(q) contribution from
-    this tree).
+    this tree).  Kept for differential testing against the masked path
+    (``TreeConfig.traversal``).
     """
     node, _, sl, v = _descend(st, h, cfg)
 
@@ -253,8 +507,20 @@ def tree_query(st: TreeState, h: jax.Array, cfg: TreeConfig):
     return ids, vals, n
 
 
-def tree_lookup(st: TreeState, h: jax.Array, vid: jax.Array, cfg: TreeConfig):
-    """Exact-id lookup within the bucket chain (MainTable read path).
+def tree_query(st: TreeState, h: jax.Array, cfg: TreeConfig):
+    """Probe with key ``h``: (ids, vals, count) — padded with -1.
+
+    Dispatches on ``cfg.traversal`` ("masked" fixed-trip default vs the
+    legacy "loop" walks); both modes return identical results.
+    """
+    if cfg.traversal == "masked":
+        return tree_query_masked(st, h, cfg)
+    return tree_query_loop(st, h, cfg)
+
+
+def tree_lookup_loop(st: TreeState, h: jax.Array, vid: jax.Array,
+                     cfg: TreeConfig):
+    """Legacy while_loop exact-id lookup (MainTable read path).
 
     Returns (val, found) for the *newest* record with leaf_id == vid.
     Newest wins because inserts prepend (paper §3.2.1 update semantics:
@@ -276,6 +542,16 @@ def tree_lookup(st: TreeState, h: jax.Array, vid: jax.Array, cfg: TreeConfig):
     _, val, found = jax.lax.while_loop(
         cond, body, (jnp.where(v > 0, v, 0), jnp.int32(-1), jnp.bool_(False)))
     return val, found
+
+
+def tree_lookup(st: TreeState, h: jax.Array, vid: jax.Array, cfg: TreeConfig):
+    """Exact-id lookup within the bucket chain; newest version wins.
+
+    Dispatches on ``cfg.traversal`` like :func:`tree_query`.
+    """
+    if cfg.traversal == "masked":
+        return tree_lookup_masked(st, h, vid, cfg)
+    return tree_lookup_loop(st, h, vid, cfg)
 
 
 # ----------------------------------------------------------------------
@@ -371,7 +647,15 @@ def forest_insert_dispatched(forest: TreeState, per_tree_h: jax.Array,
 
 def forest_query(forest: TreeState, tree_ids: jax.Array, hs: jax.Array,
                  cfg: TreeConfig):
-    """Fully-parallel probes: tree_ids/hs (N,) -> ids/vals (N, max_cand)."""
+    """Fully-parallel probes: tree_ids/hs (N,) -> ids/vals (N, max_cand).
+
+    Masked mode uses the flat batched traversal (direct indexing of the
+    stacked arenas); loop mode vmaps the per-tree walk over sliced
+    arena views (the legacy lockstep-penalized path).
+    """
+    if cfg.traversal == "masked":
+        return forest_query_masked(forest, tree_ids, hs, cfg)
+
     def one(tid, h):
         st = jax.tree.map(lambda a: a[tid], forest)
         return tree_query(st, h, cfg)
@@ -381,6 +665,9 @@ def forest_query(forest: TreeState, tree_ids: jax.Array, hs: jax.Array,
 
 def forest_lookup(forest: TreeState, tree_ids: jax.Array, hs: jax.Array,
                   vids: jax.Array, cfg: TreeConfig):
+    if cfg.traversal == "masked":
+        return forest_lookup_masked(forest, tree_ids, hs, vids, cfg)
+
     def one(tid, h, vid):
         st = jax.tree.map(lambda a: a[tid], forest)
         return tree_lookup(st, h, vid, cfg)

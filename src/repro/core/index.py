@@ -51,7 +51,8 @@ def lsh_tree_config(cfg: PFOConfig) -> TreeConfig:
         max_depth=cfg.max_depth, max_nodes=cfg.max_nodes_per_tree,
         max_leaves=cfg.max_leaves_per_tree,
         max_candidates=cfg.max_candidates_per_probe,
-        sibling_probe=cfg.sibling_probe)
+        sibling_probe=cfg.sibling_probe,
+        traversal=cfg.traversal, max_chain=cfg.max_chain)
 
 
 def main_tree_config(cfg: PFOConfig) -> TreeConfig:
@@ -59,7 +60,8 @@ def main_tree_config(cfg: PFOConfig) -> TreeConfig:
         skip_bits=cfg.main_m, log2_l=cfg.log2_l, l=cfg.l, t=cfg.t,
         max_depth=cfg.main_max_depth, max_nodes=cfg.main_max_nodes_per_tree,
         max_leaves=cfg.main_max_leaves_per_tree,
-        max_candidates=cfg.max_candidates_per_probe)
+        max_candidates=cfg.max_candidates_per_probe,
+        traversal=cfg.traversal, max_chain=cfg.max_chain)
 
 
 class PFOState(NamedTuple):
@@ -312,16 +314,15 @@ def query_step(state: PFOState, qvecs: jax.Array, cfg: PFOConfig, k: int):
     uniq = uniq[:, :cfg.max_candidates_total]                    # (Q, Ct)
     cids = jnp.where(uniq == INT_MAX, -1, uniq)
 
-    # MainTable fetch
+    # MainTable fetch + exact re-rank: the fused gather+rank+top-k
+    # kernel path reads candidate vectors straight out of the store by
+    # slot id — no (Q, Ct, d) candidate block is ever materialized.
     slot, found = jax.vmap(lambda r: _main_lookup(state, r, cfg))(cids)
     valid = (cids >= 0) & found & (slot >= 0)
-    vecs = dense_read(state.store, jnp.where(valid, slot, 0))    # (Q,Ct,d)
-
-    # exact re-rank (Pallas kernel path)
-    dists = kops.pairwise_rank(qvecs, vecs, valid, cfg.metric)   # (Q, Ct)
-    neg, idx = jax.lax.top_k(-dists, k)
+    idx, top_d = kops.gather_rank_topk(qvecs, state.store.data,
+                                       jnp.where(valid, slot, 0), valid,
+                                       k, cfg.metric)
     top_ids = jnp.take_along_axis(cids, idx, axis=1)
-    top_d = -neg
     top_ids = jnp.where(jnp.isfinite(top_d), top_ids, -1)
     return top_ids, top_d
 

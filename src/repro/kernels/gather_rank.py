@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: fused candidate gather + exact re-rank (§3.1).
+
+The masked bucket traversal (core/hash_tree.py) hands query_step a
+dense ``(Q, C)`` block of store *slot ids* plus a validity mask.  This
+kernel finishes the read path in one pass: per query block it gathers
+the candidate vectors straight out of the ``(N, d)`` store by slot id,
+contracts them against the query rows, converts to the metric's
+distance, and masks invalid slots to +inf — the ``(Q, C, d)``
+candidate tensor the old path materialized through ``dense_read``
+never leaves the kernel.
+
+Grid: (Q/bq,) — one program per query block; each does one
+``(bq*C,)``-index row gather and one batched (bq, C, d) x (bq, d)
+contraction, so interpret mode (the CPU validation path) executes a
+single XLA gather + dot per step rather than a per-candidate copy
+loop.  On a real TPU the full-store input block would live in HBM with
+the row gather issued as a DMA loop; the whole-array BlockSpec used
+here matches the repo's other kernels and is exact in interpret mode.
+
+ops.py adds the masked top-k epilogue (``gather_rank_topk``) so
+callers see one fused call, and falls back to kernels/ref.py when
+Pallas is off.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, store_ref, slots_ref, valid_ref, out_ref, *,
+            n_rows: int, angular: bool):
+    q = q_ref[...].astype(jnp.float32)                   # (bq, d)
+    slots = slots_ref[...]                               # (bq, C)
+    bq, c = slots.shape
+    idx = jnp.clip(slots, 0, n_rows - 1).reshape(-1)
+    x = jnp.take(store_ref[...], idx, axis=0,
+                 indices_are_sorted=False, unique_indices=False)
+    x = x.astype(jnp.float32).reshape(bq, c, -1)         # (bq, C, d)
+    dots = jax.lax.dot_general(
+        x, q, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)              # (bq, C)
+    if angular:
+        # queries arrive pre-normalized (ops.py); normalize the rows
+        nrm = jnp.sqrt(jnp.sum(x * x, axis=-1))
+        d = 1.0 - dots / jnp.maximum(nrm, 1e-9)
+    else:
+        qs = jnp.sum(q * q, axis=-1)[:, None]
+        xs = jnp.sum(x * x, axis=-1)
+        d = jnp.maximum(qs + xs - 2.0 * dots, 0.0)
+    live = valid_ref[...] != 0
+    out_ref[...] = jnp.where(live, d, jnp.inf)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bq", "angular", "interpret"))
+def gather_rank_pallas(q: jax.Array, store: jax.Array, slots: jax.Array,
+                       valid: jax.Array, *, bq: int = 8,
+                       angular: bool = True,
+                       interpret: bool = False) -> jax.Array:
+    """(Q, d) f32, (N, d) f32, (Q, C) i32, (Q, C) i32 -> (Q, C) f32.
+
+    Distances of each query against the store rows named by its slot
+    ids; invalid (mask == 0) positions come back +inf.
+    """
+    nq, dim = q.shape
+    n_rows, dim2 = store.shape
+    nq2, c = slots.shape
+    assert dim == dim2 and nq == nq2 and slots.shape == valid.shape
+    assert nq % bq == 0
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_rows=n_rows, angular=angular),
+        grid=(nq // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, dim), lambda i: (i, 0)),
+            pl.BlockSpec((n_rows, dim), lambda i: (0, 0)),
+            pl.BlockSpec((bq, c), lambda i: (i, 0)),
+            pl.BlockSpec((bq, c), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nq, c), jnp.float32),
+        interpret=interpret,
+    )(q, store, slots, valid)

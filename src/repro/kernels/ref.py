@@ -35,6 +35,29 @@ def ref_pair_dist(q: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
     return jnp.maximum(qs + xs - 2.0 * (q @ x.T), 0.0)
 
 
+def ref_gather_rank(q: jnp.ndarray, store: jnp.ndarray, slots: jnp.ndarray,
+                    valid: jnp.ndarray, metric: str) -> jnp.ndarray:
+    """(Q, d) f32, (N, d) f32, (Q, C) i32, (Q, C) bool -> (Q, C) f32.
+
+    Gather store rows by slot id (clipped; masked rows may carry any
+    slot, including duplicates) and exact-rank against each query;
+    invalid positions are +inf.  Matches ``ops.pairwise_rank`` over the
+    explicitly gathered candidate block.
+    """
+    q = q.astype(jnp.float32)
+    x = store[jnp.clip(slots, 0, store.shape[0] - 1)].astype(jnp.float32)
+    if metric == "angular":
+        qn = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
+        xn = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-9)
+        d = 1.0 - jnp.einsum("qd,qcd->qc", qn, xn)
+    else:
+        dots = jnp.einsum("qd,qcd->qc", q, x)
+        qs = jnp.sum(q * q, axis=-1)[:, None]
+        xs = jnp.sum(x * x, axis=-1)
+        d = jnp.maximum(qs + xs - 2.0 * dots, 0.0)
+    return jnp.where(valid, d, jnp.inf)
+
+
 def ref_hamming(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     """(Q, W) u32 x (N, W) u32 -> (Q, N) i32 total bit differences."""
     x = a[:, None, :].astype(jnp.uint32) ^ b[None, :, :].astype(jnp.uint32)

@@ -73,15 +73,22 @@ def _pow2_buckets(lo: int, hi: int) -> tuple[int, ...]:
     return tuple(out)
 
 
+#: legacy query cap applied when the index runs the "loop" traversal
+#: (vmapped while-loop walks penalize large query batches — ROADMAP).
+LOOP_QUERY_MAX_BATCH = 16
+
+
 @dataclasses.dataclass(frozen=True)
 class StreamConfig:
     max_batch: int = 256          # largest update micro-batch (power of two)
     min_batch: int = 8            # smallest size bucket (power of two)
-    # Queries chunk to their own (smaller) cap: an update round's cost
-    # is set by mailbox capacity, not rows, so updates want the biggest
-    # bucket; a query's per-row cost *grows* with batch on lockstepped
-    # while-loop backends (CPU), so queries stay in the flat region.
-    query_max_batch: int = 16
+    # Query chunk cap.  ``None`` (default) lets the engine decide from
+    # the index's traversal mode: the fixed-trip masked traversal runs
+    # query rows in lockstep over identical trip counts, so big query
+    # buckets amortize and queries follow ``max_batch``; the legacy
+    # "loop" traversal serializes to the slowest chain walk, so queries
+    # stay capped at LOOP_QUERY_MAX_BATCH (the old workaround).
+    query_max_batch: int | None = None
     default_k: int = 10           # top-k for queries submitted without k
     ordering: str = "window"      # "window" (round epochs) | "strict"
     # results already returned by flush() are retained for result()
@@ -90,10 +97,12 @@ class StreamConfig:
     max_retained_results: int = 4096
 
     def __post_init__(self):
-        for v in (self.max_batch, self.min_batch, self.query_max_batch):
+        qmb = (self.max_batch if self.query_max_batch is None
+               else self.query_max_batch)
+        for v in (self.max_batch, self.min_batch, qmb):
             assert v & (v - 1) == 0, "buckets must be powers of two"
         assert self.min_batch <= self.max_batch
-        assert self.min_batch <= self.query_max_batch, \
+        assert self.min_batch <= qmb, \
             "query_max_batch below min_batch would dispatch off-bucket " \
             "shapes warmup never compiled"
         assert self.ordering in ("window", "strict")
@@ -102,10 +111,14 @@ class StreamConfig:
     def buckets(self) -> tuple[int, ...]:
         return _pow2_buckets(self.min_batch, self.max_batch)
 
-    def cap_for(self, kind: str) -> int:
-        if kind == QUERY:
+    def query_cap(self, traversal: str) -> int:
+        """Resolved query chunk cap for an index's traversal mode."""
+        if self.query_max_batch is not None:
             return min(self.query_max_batch, self.max_batch)
-        return self.max_batch
+        if traversal == "masked":
+            return self.max_batch
+        return min(max(LOOP_QUERY_MAX_BATCH, self.min_batch),
+                   self.max_batch)
 
 
 class StreamEngine:
@@ -128,6 +141,10 @@ class StreamEngine:
                       for b in self.scfg.buckets}
         mb = self.scfg.max_batch
         self._flags_caps = self._caps[mb]     # worst case: one carried word
+        # query chunk cap resolved against the index's traversal mode
+        # (masked traversal: queries follow max_batch — no lockstep
+        # penalty left to work around)
+        self._query_cap = self.scfg.query_cap(cfg.traversal)
         self._queue: list[tuple[int, str, Any]] = []   # (ticket, kind, payload)
         self._results: dict[int, Any] = {}
         self._next_ticket = 0
@@ -147,7 +164,7 @@ class StreamEngine:
         batches (state untouched) and a scratch state for seal/merge."""
         idx, cfg = self.index, self.index.cfg
         fm, fl = self._flags_caps
-        qcap = self.scfg.cap_for(QUERY)
+        qcap = self._query_cap
         for b in self.scfg.buckets:
             mcap, lcap = self._caps[b]
             ids = jnp.zeros((b,), jnp.int32)
@@ -300,8 +317,11 @@ class StreamEngine:
         else:
             self._run_chunks(run, kind, out)
 
+    def _cap_for(self, kind: str) -> int:
+        return self._query_cap if kind == QUERY else self.scfg.max_batch
+
     def _run_chunks(self, run: list, kind: str, out: dict) -> None:
-        for chunk, bucket in self._chunks(run, self.scfg.cap_for(kind)):
+        for chunk, bucket in self._chunks(run, self._cap_for(kind)):
             if kind == QUERY:
                 self._query_batch(chunk, bucket, out)
             elif kind == INSERT:

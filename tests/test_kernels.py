@@ -66,6 +66,61 @@ def test_hamming_identity_is_zero():
     assert (np.diag(d) == 0).all()
 
 
+@pytest.mark.parametrize("q,c,n,d", [
+    (1, 1, 1, 8), (3, 7, 13, 5), (8, 128, 100, 64), (5, 130, 41, 17),
+])
+@pytest.mark.parametrize("metric", ["angular", "l2"])
+def test_gather_rank_matches_ref(q, c, n, d, metric):
+    qq = jax.random.normal(_k(q + 31), (q, d))
+    store = jax.random.normal(_k(q + 37), (n, d))
+    slots = jax.random.randint(_k(q + 41), (q, c), 0, n, dtype=jnp.int32)
+    valid = jax.random.bernoulli(_k(q + 43), 0.7, (q, c))
+    got = ops.gather_rank(qq, store, slots, valid, metric)
+    want = ref.ref_gather_rank(qq, store, slots, valid, metric)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_gather_rank_all_masked_rows_are_inf():
+    qq = jax.random.normal(_k(61), (4, 9))
+    store = jax.random.normal(_k(62), (11, 9))
+    slots = jnp.zeros((4, 6), jnp.int32)
+    valid = jnp.zeros((4, 6), bool).at[1].set(True)   # rows 0,2,3 all-masked
+    d = np.asarray(ops.gather_rank(qq, store, slots, valid, "angular"))
+    assert np.isinf(d[[0, 2, 3]]).all()
+    assert np.isfinite(d[1]).all()
+
+
+def test_gather_rank_duplicate_slot_ids():
+    """Duplicate slot ids within one row gather the same store row —
+    equal distances, and top-k surfaces the duplicates adjacently."""
+    qq = jax.random.normal(_k(71), (2, 12))
+    store = jax.random.normal(_k(72), (20, 12))
+    slots = jnp.asarray([[3, 3, 3, 7], [0, 19, 0, 19]], jnp.int32)
+    valid = jnp.ones((2, 4), bool)
+    d = np.asarray(ops.gather_rank(qq, store, slots, valid, "l2"))
+    assert d[0, 0] == d[0, 1] == d[0, 2]
+    assert d[1, 0] == d[1, 2] and d[1, 1] == d[1, 3]
+    idx, topd = ops.gather_rank_topk(qq, store, slots, valid, 3, "l2")
+    np.testing.assert_allclose(np.sort(np.asarray(topd), axis=1),
+                               np.asarray(topd), atol=0)
+
+
+def test_gather_rank_topk_matches_dense_path():
+    """The fused gather+rank+top-k equals materializing the candidate
+    block and running pairwise_rank + lax.top_k (the old read path)."""
+    qq = jax.random.normal(_k(81), (5, 16))
+    store = jax.random.normal(_k(82), (64, 16))
+    slots = jax.random.randint(_k(83), (5, 24), 0, 64, dtype=jnp.int32)
+    valid = jax.random.bernoulli(_k(84), 0.8, (5, 24))
+    for metric in ("angular", "l2"):
+        idx, d = ops.gather_rank_topk(qq, store, slots, valid, 4, metric)
+        dense = ops.pairwise_rank(qq, store[slots], valid, metric)
+        neg, widx = jax.lax.top_k(-dense, 4)
+        np.testing.assert_allclose(np.asarray(d), -np.asarray(neg),
+                                   rtol=2e-5, atol=2e-5)
+
+
 def test_brute_force_topk_exact():
     x = jax.random.normal(_k(50), (200, 32))
     q = x[:5] + 0.001

@@ -111,8 +111,48 @@ def test_ragged_batch_bucket_padding(n):
         assert ids[0] == i and d[0] < 1e-5
         live = ids[ids >= 0]
         assert live.max(initial=-1) < n   # padding rows never surface
-    # chunks: updates ceil over max_batch, queries over query_max_batch
-    assert eng.n_batches == -(-n // 32) + -(-n // 16)
+    # chunks: with the masked traversal queries follow max_batch too
+    assert eng.n_batches == 2 * -(-n // 32)
+
+
+def test_masked_query_burst_dispatches_one_bucket():
+    """With the masked traversal (default) the legacy query_max_batch
+    cap is retired: a Q=64 burst under max_batch=64 dispatches as ONE
+    query bucket, not five 16-row chunks."""
+    cfg = small_pfo_config()
+    assert cfg.traversal == "masked"
+    v = _vecs(80, cfg.dim, seed=9)
+    eng = _engine(cfg, max_batch=64, min_batch=8)
+    assert eng._query_cap == 64
+    for i in range(64):
+        eng.insert(i, v[i])
+    eng.flush()
+    before = eng.n_batches
+    tickets = [eng.query(v[i], k=3) for i in range(64)]
+    res = eng.flush()
+    assert eng.n_batches - before == 1            # one 64-row bucket
+    for i, t in enumerate(tickets):
+        ids, d = res[t]
+        assert ids[0] == i and d[0] < 1e-5
+
+
+def test_loop_traversal_keeps_query_cap():
+    """The legacy loop traversal still chunks queries at the old
+    workaround cap (16) when query_max_batch is left unset."""
+    cfg = small_pfo_config(traversal="loop")
+    v = _vecs(40, cfg.dim, seed=10)
+    eng = _engine(cfg, max_batch=64, min_batch=8)
+    assert eng._query_cap == 16
+    for i in range(32):
+        eng.insert(i, v[i])
+    eng.flush()
+    before = eng.n_batches
+    tickets = [eng.query(v[i], k=3) for i in range(32)]
+    res = eng.flush()
+    assert eng.n_batches - before == 2            # two 16-row chunks
+    for i, t in enumerate(tickets):
+        ids, _ = res[t]
+        assert ids[0] == i
 
 
 def test_steady_state_round_single_scalar_sync():

@@ -1,0 +1,207 @@
+"""Differential property harness: fixed-trip masked traversal vs the
+legacy while_loop path (``PFOConfig.traversal = "masked" | "loop"``).
+
+Two layers:
+
+* tree level — random insert/delete workloads, then every probe kind
+  (query, exact-id lookup, with and without sibling_probe) must return
+  identical (ids, values, counts) under both traversal modes;
+* system level — random *interleaved* insert/delete/update/query
+  sequences driven through two ``PFOIndex`` instances that differ only
+  in ``traversal`` must answer every query identically (ids exactly,
+  distances bitwise-close), across seal/merge epochs included.
+
+Plus the recall-quality gate: masked-traversal kNN on a clustered
+dataset stays within the seed LSH tests' tolerance of the brute-force
+oracle for Q in {1, 16, 64}.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # optional dep: deterministic fallback
+    from _prop import given, settings, strategies as st
+
+from conftest import small_pfo_config
+from repro.core import PFOIndex
+from repro.core.hash_tree import (TreeConfig, init_tree, tree_delete,
+                                  tree_insert, tree_lookup_loop,
+                                  tree_lookup_masked, tree_query_loop,
+                                  tree_query_masked)
+from repro.kernels import ops
+
+
+def _tree_cfg(sibling_probe=False):
+    return TreeConfig(skip_bits=2, log2_l=4, l=16, t=3, max_depth=7,
+                      max_nodes=128, max_leaves=512, max_candidates=64,
+                      sibling_probe=sibling_probe)
+
+
+# ======================================================================
+# tree level
+# ======================================================================
+@settings(max_examples=6, deadline=None)
+@given(st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=24),
+       st.data())
+def test_property_tree_query_modes_identical(keys, data):
+    """After a random insert/delete workload (duplicate keys allowed —
+    they grow chains at max depth), both traversal modes return the
+    same (ids, vals, count) for hit and miss probes alike."""
+    for sib in (False, True):
+        cfg = _tree_cfg(sibling_probe=sib)
+        stt = init_tree(cfg)
+        for i, k in enumerate(keys):
+            stt = tree_insert(stt, jnp.uint32(k), jnp.int32(i),
+                              jnp.int32(i), cfg)
+        n_del = data.draw(st.integers(0, max(len(keys) // 2, 1)))
+        for _ in range(n_del):
+            v = data.draw(st.integers(0, len(keys) - 1))
+            stt, _ = tree_delete(stt, jnp.uint32(keys[v]), jnp.int32(v), cfg)
+        probes = keys[:8] + [data.draw(st.integers(0, 2**32 - 1))
+                             for _ in range(4)]
+        for k in probes:
+            a = tree_query_loop(stt, jnp.uint32(k), cfg)
+            b = tree_query_masked(stt, jnp.uint32(k), cfg)
+            for x, y in zip(a, b):
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        for i, k in enumerate(keys):
+            va, fa = tree_lookup_loop(stt, jnp.uint32(k), jnp.int32(i), cfg)
+            vb, fb = tree_lookup_masked(stt, jnp.uint32(k), jnp.int32(i),
+                                        cfg)
+            assert bool(fa) == bool(fb)
+            assert int(va) == int(vb)
+
+
+def test_adversarial_identical_keys_chain_at_max_depth():
+    """40 identical keys chain past t at max depth; the masked gather
+    (max_chain defaults to max_candidates) must still match the loop
+    path's cumulative truncation exactly."""
+    cfg = _tree_cfg()
+    stt = init_tree(cfg)
+    for i in range(40):
+        stt = tree_insert(stt, jnp.uint32(0xFFFFFFFF), jnp.int32(i),
+                          jnp.int32(i), cfg)
+    a = tree_query_loop(stt, jnp.uint32(0xFFFFFFFF), cfg)
+    b = tree_query_masked(stt, jnp.uint32(0xFFFFFFFF), cfg)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert int(b[2]) == 40
+
+
+# ======================================================================
+# system level
+# ======================================================================
+def _op_stream(data, n_ops: int, id_domain: int, dim: int):
+    """Draw a random interleaved op stream; vectors are derived
+    deterministically from the drawn (op, id, version) tuples so both
+    indexes replay the identical stream."""
+    rng = np.random.default_rng(1234)
+    ops_out = []
+    live: set[int] = set()
+    for _ in range(n_ops):
+        kind = data.draw(st.integers(0, 3))
+        vid = data.draw(st.integers(0, id_domain - 1))
+        vec = rng.normal(size=(1, dim)).astype(np.float32)
+        vec /= np.linalg.norm(vec)
+        if kind == 0:
+            ops_out.append(("insert", vid, vec))
+            live.add(vid)
+        elif kind == 1 and live:
+            ops_out.append(("delete", vid, None))
+            live.discard(vid)
+        elif kind == 2 and live:
+            ops_out.append(("update", vid, vec))
+            live.add(vid)
+        else:
+            ops_out.append(("query", vid, vec))
+    return ops_out
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.data())
+def test_property_index_interleaved_streams_identical(data):
+    """Random interleaved insert/delete/update/query sequences: the two
+    traversal modes must produce identical query answers throughout
+    (single-row ops keep every jitted shape stable)."""
+    dim = 16
+    loop_idx = PFOIndex(small_pfo_config(traversal="loop"), seed=0)
+    mask_idx = PFOIndex(small_pfo_config(traversal="masked"), seed=0)
+    for kind, vid, vec in _op_stream(data, n_ops=24, id_domain=12, dim=dim):
+        ids = np.asarray([vid], np.int32)
+        if kind == "insert":
+            loop_idx.insert(ids, vec)
+            mask_idx.insert(ids, vec)
+        elif kind == "delete":
+            loop_idx.delete(ids)
+            mask_idx.delete(ids)
+        elif kind == "update":
+            loop_idx.update(ids, vec)
+            mask_idx.update(ids, vec)
+        else:
+            li, ld = loop_idx.query(vec, k=5)
+            mi, md = mask_idx.query(vec, k=5)
+            np.testing.assert_array_equal(li, mi)
+            np.testing.assert_allclose(ld, md, atol=1e-6)
+
+
+def test_index_modes_identical_across_seal_and_batch():
+    """Batched inserts past the seal threshold (hot + sealed tiers both
+    populated), then batched queries: identical answers, Q up to 64."""
+    cfg_l = small_pfo_config(traversal="loop")
+    cfg_m = small_pfo_config(traversal="masked")
+    rng = np.random.default_rng(5)
+    n = 700
+    vecs = rng.normal(size=(n, cfg_l.dim)).astype(np.float32)
+    vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
+    a, b = PFOIndex(cfg_l, seed=0), PFOIndex(cfg_m, seed=0)
+    for s in range(0, n, 350):
+        a.insert(np.arange(s, s + 350, dtype=np.int32), vecs[s:s + 350])
+        b.insert(np.arange(s, s + 350, dtype=np.int32), vecs[s:s + 350])
+    a.delete(np.arange(20, dtype=np.int32))
+    b.delete(np.arange(20, dtype=np.int32))
+    for q in (1, 16, 64):
+        qv = vecs[100:100 + q] + rng.normal(
+            size=(q, cfg_l.dim)).astype(np.float32) * 0.02
+        li, ld = a.query(qv, k=10)
+        mi, md = b.query(qv, k=10)
+        np.testing.assert_array_equal(li, mi)
+        np.testing.assert_allclose(ld, md, atol=1e-6)
+
+
+# ======================================================================
+# recall quality (masked path vs brute force)
+# ======================================================================
+@pytest.fixture(scope="module")
+def clustered_index():
+    cfg = small_pfo_config()                 # traversal="masked" default
+    rng = np.random.default_rng(2)
+    n, n_clusters = 800, 24
+    centers = rng.normal(size=(n_clusters, cfg.dim)).astype(np.float32)
+    vecs = (centers[rng.integers(0, n_clusters, n)]
+            + rng.normal(size=(n, cfg.dim)).astype(np.float32) * 0.15)
+    vecs = (vecs / np.linalg.norm(vecs, axis=1, keepdims=True)).astype(
+        np.float32)
+    idx = PFOIndex(cfg, seed=0)
+    for s in range(0, n, 400):
+        idx.insert(np.arange(s, s + 400, dtype=np.int32), vecs[s:s + 400])
+    return idx, vecs
+
+
+@pytest.mark.parametrize("q", [1, 16, 64])
+def test_masked_recall_matches_bruteforce(clustered_index, q):
+    """Masked-traversal kNN recall@10 on clustered data stays within
+    the seed LSH tests' tolerance of the brute-force oracle (the
+    test_recall_beats_random threshold), for Q in {1, 16, 64}."""
+    idx, vecs = clustered_index
+    rng = np.random.default_rng(3)
+    base = vecs[rng.integers(0, vecs.shape[0], q)]
+    qv = base + rng.normal(size=(q, vecs.shape[1])).astype(np.float32) * 0.05
+    ids, _ = idx.query(qv, k=10)
+    oid, _ = ops.brute_force_topk(jnp.asarray(qv), jnp.asarray(vecs), 10,
+                                  "angular")
+    oid = np.asarray(oid)
+    recall = np.mean([len(set(ids[i]) & set(oid[i])) / 10
+                      for i in range(q)])
+    assert recall > 0.15      # same tolerance as the seed recall gate
