@@ -96,6 +96,26 @@ def get_mesh():
     return _AMBIENT_MESH[-1] if _AMBIENT_MESH else None
 
 
+def make_mesh(shape: tuple, axis_names: tuple, devices=None):
+    """Version-agnostic mesh construction.
+
+    New JAX exposes ``jax.make_mesh(shape, axis_names)``; older
+    releases build meshes from ``mesh_utils.create_device_mesh``.  An
+    explicit ``devices`` list (e.g. a prefix of the host-platform
+    virtual devices) bypasses both and reshapes directly.
+    """
+    from jax.sharding import Mesh
+    import numpy as np
+
+    if devices is not None:
+        return Mesh(np.asarray(devices).reshape(shape), axis_names)
+    fn = getattr(jax, "make_mesh", None)
+    if fn is not None:
+        return fn(shape, axis_names)
+    from jax.experimental import mesh_utils
+    return Mesh(mesh_utils.create_device_mesh(shape), axis_names)
+
+
 def tree_flatten_with_path(tree):
     """``jax.tree.flatten_with_path`` (new) / ``jax.tree_util`` (old)."""
     fn = getattr(jax.tree, "flatten_with_path", None)

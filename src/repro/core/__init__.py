@@ -15,7 +15,9 @@ from .index import (PFOIndex, PFOState, init_state, insert_step, query_step,
 from .dispatch import (FLAG_ANY_PENDING, FLAG_NEED_SEAL, FLAG_SNAPS_FULL,
                        FLAG_TOMBS_FULL, pack_round_flags)
 from .distributed import (DistConfig, dist_init_state, make_dist_query,
-                          make_dist_insert)
+                          make_dist_insert, make_dist_insert_round,
+                          make_dist_delete_round, make_dist_seal,
+                          make_dist_merge, make_dist_round_flags)
 
 __all__ = [
     "PFOConfig", "PFOIndex", "PFOState", "init_state", "insert_step",
@@ -23,4 +25,6 @@ __all__ = [
     "FLAG_ANY_PENDING", "FLAG_NEED_SEAL", "FLAG_SNAPS_FULL",
     "FLAG_TOMBS_FULL", "pack_round_flags",
     "DistConfig", "dist_init_state", "make_dist_query", "make_dist_insert",
+    "make_dist_insert_round", "make_dist_delete_round", "make_dist_seal",
+    "make_dist_merge", "make_dist_round_flags",
 ]

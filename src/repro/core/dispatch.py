@@ -100,6 +100,51 @@ def mailbox_ids(mailbox_src: jax.Array, ids: jax.Array) -> jax.Array:
 
 
 # ----------------------------------------------------------------------
+# multi-client ingestion (paper §4.2's router thread, host-side)
+#
+# K client request queues merge into ONE stream round.  Every client
+# owns a disjoint ticket space (client id in the high bits), so tickets
+# stay globally unique without cross-client coordination, and the merge
+# is a fair round-robin that preserves each client's FIFO order — the
+# router never reorders a single client's requests, mirroring the
+# actor mailbox guarantee one level up.
+# ----------------------------------------------------------------------
+TICKET_CLIENT_SHIFT = 40          # tickets: (client_id << 40) | sequence
+
+
+def client_ticket(client_id: int, seq: int) -> int:
+    """Globally-unique ticket from a per-client sequence number."""
+    assert 0 <= seq < (1 << TICKET_CLIENT_SHIFT)
+    return (client_id << TICKET_CLIENT_SHIFT) | seq
+
+
+def ticket_client(ticket: int) -> int:
+    """Client id a ticket belongs to."""
+    return ticket >> TICKET_CLIENT_SHIFT
+
+
+def merge_client_queues(queues: list) -> list:
+    """Round-robin merge of per-client request queues into one round.
+
+    Each queue is a list of (ticket, kind, payload) tuples in that
+    client's submission order.  The merged round interleaves clients
+    fairly (one request per client per turn) while keeping every
+    client's own order intact; the stream engine's ordering modes then
+    apply to the merged round as if it came from one client.
+    """
+    out: list = []
+    cursors = [0] * len(queues)
+    remaining = sum(len(q) for q in queues)
+    while remaining:
+        for ci, q in enumerate(queues):
+            if cursors[ci] < len(q):
+                out.append(q[cursors[ci]])
+                cursors[ci] += 1
+                remaining -= 1
+    return out
+
+
+# ----------------------------------------------------------------------
 # distributed routing: trees sharded over a mesh axis
 # ----------------------------------------------------------------------
 def owner_of_tree(tree_ids: jax.Array, n_trees: int, n_shards: int) -> jax.Array:

@@ -8,27 +8,36 @@ Placement (mesh axes ``(pod, data, model)`` or ``(data, model)``):
 * the **MainTable** (id -> slot, vectors) shards over ``model`` by
   murmur owner — every id has exactly one home chip (single-copy
   invariant of §3.1);
-* **queries/updates** shard over ``(pod, data)`` — the online request
-  stream.
+* **queries** shard over ``(pod, data)`` — the online read stream —
+  while the state is replicated over the batch axes, so **updates**
+  enter replicated over ``(pod, data)`` and every data shard applies
+  the identical round (state replicas can never diverge).
 
 Query protocol (collectives over ``model`` only):
-  1. every chip hashes its local queries (replicated projections);
-  2. ``all_gather`` the (h, tree) request set across ``model`` — each
-     chip sees the row's full requests but probes only trees it owns
-     (ownership mask == the actor single-writer guarantee);
-  3. chips probe local hot trees + local sealed snapshots; candidate
-     ids route by one ``all_to_all`` to their murmur owner, which
-     looks up the vector and exact-ranks against the gathered query;
-  4. (id, dist) partials route back and ``all_gather`` over ``model``;
-     each chip keeps the deduped global top-k for its query slice.
+  1. every chip hashes the queries (replicated projections);
+  2. chips probe the hot trees *they own* plus their local sealed
+     snapshots (ownership mask == the actor single-writer guarantee);
+  3. candidate ids route by one ``all_to_all`` to their murmur owner,
+     which looks up the vector and exact-ranks against the query;
+  4. (id, dist) partials ``all_gather`` over ``model``; every chip
+     keeps the deduped global top-k.
 
-Update protocol: one ``all_to_all`` routes (h, id) to tree-owner
-chips; one more routes (id, vec) to murmur owners.  Receive-side
-mailboxes are sized ``n_model * capacity`` so a routed request can
-never be dropped locally — overflow exists only at the send-side
-dispatch, where the host retries rounds exactly like the single-chip
-path.  Cross-chip synchronization is *structurally* absent: every tree
-and every id has one writer per round.
+Update protocol (the stream-round steps): senders partition the batch
+rows into contiguous per-chip blocks (so the per-tree apply order is
+exactly the batch order — the property the differential stream tests
+assert), route (h, id) to tree-owner chips and (id, vec) to murmur
+owners with one ``all_to_all`` each, and receivers re-dispatch into
+per-tree mailboxes at single-chip capacity.  Overflow at either hop is
+*acked back* to the sending chip (one reverse ``all_to_all`` of bools)
+and re-submitted by the host next round — the same bounded-inbox retry
+protocol as the single-chip path, with zero extra readbacks: every
+round step returns ONE packed i32 flag word
+(``core.dispatch.pack_round_flags``) whose headroom terms are combined
+across chips with ``pmax`` on device.  Seal and merge run as
+shard-local epochs (each chip seals its own tree block into its own
+snapshot segment set), so cross-chip synchronization stays
+*structurally* absent: every tree and every id has one writer per
+round.
 
 The same routing substrate carries MoE expert dispatch in
 ``repro.models.moe`` — see DESIGN.md §3.
@@ -43,11 +52,15 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import snapshots as snap_mod
 from .config import PFOConfig
-from .dispatch import dispatch_to_trees, gather_mailbox, mailbox_ids
-from .hash_tree import forest_insert_dispatched, forest_lookup, forest_query, init_forest
-from .index import PFOState, init_state, lsh_tree_config, main_tree_config
+from .dispatch import dispatch_to_trees, gather_mailbox, mailbox_ids, \
+    pack_round_flags
+from .hash_tree import (forest_delete_dispatched, forest_headroom,
+                        forest_insert_dispatched, forest_lookup,
+                        forest_query, init_forest)
+from .index import (PFOState, _tombs_threshold, lsh_tree_config,
+                    main_tree_config)
 from .lsh import main_table_keys, make_projections, region_ids
-from .store import dense_alloc, dense_init, dense_read
+from .store import dense_alloc, dense_free, dense_init, dense_read
 from repro import compat
 from repro.kernels import ops as kops
 
@@ -169,10 +182,110 @@ def _dedup_topk(pid: jax.Array, pd: jax.Array, k: int):
 
 
 # ======================================================================
+# routing primitives (inside shard_map, over the model axis)
+# ======================================================================
+def _psum_bool(x: jax.Array, axis: str) -> jax.Array:
+    """OR-combine per-shard boolean contributions (disjoint owners)."""
+    return jax.lax.psum(x.astype(jnp.int32), axis) > 0
+
+
+def _block_mine(n: int, n_shards: int, me: jax.Array) -> jax.Array:
+    """Contiguous-block row partition: rows [me*per, (me+1)*per).
+
+    Block (not strided) so the receive-side apply order — sender-major,
+    then slot order — equals global batch order: stable per-tree
+    semantics match the single-chip dispatch exactly.
+    """
+    per = -(-n // n_shards)
+    return (jnp.arange(n, dtype=jnp.int32) // per) == me
+
+
+def _route_acked(payload: jax.Array, dest: jax.Array, n_shards: int,
+                 capacity: int, axis: str, marker_col: int = 0):
+    """Route payload rows to destination shards with a reverse-ack
+    channel, ONE ``all_to_all`` each way.
+
+    dest: (N,) i32 destination shard, -1 inactive.  The payload's
+    ``marker_col`` must be an id-like column: it is rewritten to -1 in
+    empty mailbox slots before the exchange, so receivers identify
+    padding from the payload itself — no separate validity collective.
+    Returns (recv (S*K, C) sender-major, send_ovf, ack) where
+    ``ack(fail)`` maps a receiver-side (S*K,) failure mask back onto
+    the sender's (N,) rows with one reverse ``all_to_all`` — two-hop
+    overflow surfaces as ordinary send-side pending instead of
+    silently dropping routed requests.
+    """
+    mbox, send_ovf = dispatch_to_trees(dest, n_shards, capacity)
+    (buf,) = gather_mailbox(mbox, payload)
+    mark = jnp.where(mbox >= 0, buf[..., marker_col],
+                     jnp.asarray(-1, buf.dtype))
+    buf = buf.at[..., marker_col].set(mark)
+    recv = jax.lax.all_to_all(buf, axis, split_axis=0, concat_axis=0,
+                              tiled=True).reshape(n_shards * capacity,
+                                                  payload.shape[1])
+
+    n = dest.shape[0]
+
+    def ack(fail: jax.Array) -> jax.Array:
+        back = jax.lax.all_to_all(fail.reshape(n_shards, capacity), axis,
+                                  split_axis=0, concat_axis=0, tiled=True)
+        flat = mbox.reshape(-1)
+        safe = jnp.where(flat >= 0, flat, n)
+        return jnp.zeros((n,), bool).at[safe].set(
+            jnp.where(flat >= 0, back.reshape(-1), False), mode="drop")
+
+    return recv, send_ovf, ack
+
+
+def _dist_round_flags(state: PFOState, dcfg: DistConfig, fm: int, fl: int,
+                      any_pending: jax.Array, mdl: str) -> jax.Array:
+    """Packed maintenance word over the shard-local state (inside
+    shard_map): worst-tree headroom combines with ``pmax`` so the word
+    is replicated and the host reads ONE scalar — and the thresholds
+    mirror ``index._round_flags`` exactly, so a distributed engine
+    seals/merges at the same rounds as a single-chip one fed the same
+    trace (the differential tests rely on this).
+    """
+    cfg = dcfg.pfo
+    leaf_head, node_head = forest_headroom(state.lsh_forest)
+    mleaf, mnode = forest_headroom(state.main_forest)
+    leaf_head = jax.lax.pmax(leaf_head, mdl)
+    node_head = jax.lax.pmax(node_head, mdl)
+    mleaf = jax.lax.pmax(mleaf, mdl)
+    mnode = jax.lax.pmax(mnode, mdl)
+    need_seal = (
+        (leaf_head + fl > cfg.max_leaves_per_tree)
+        | (node_head + fl > cfg.max_nodes_per_tree)
+        | (mleaf + fm > cfg.main_max_leaves_per_tree)
+        | (mnode + fm > cfg.main_max_nodes_per_tree)
+        | (leaf_head >= jnp.int32(
+            int(cfg.seal_threshold * cfg.max_leaves_per_tree))))
+    snaps_full = jax.lax.pmax(state.lsh_snaps.n_snaps[0], mdl) \
+        >= cfg.max_snapshots - 1
+    tombs_full = state.n_tombstones >= _tombs_threshold(cfg)
+    return pack_round_flags(jnp.asarray(any_pending), need_seal,
+                            snaps_full, tombs_full)
+
+
+# ======================================================================
 # query
 # ======================================================================
-def make_dist_query(dcfg: DistConfig, mesh: Mesh, k: int):
-    """Jitted distributed query: (Q_global, d) -> ids/dists (Q_global, k)."""
+def make_dist_query(dcfg: DistConfig, mesh: Mesh, k: int,
+                    with_drop_count: bool = False):
+    """Jitted distributed query: (Q_global, d) -> ids/dists (Q_global, k).
+
+    Queries shard over the batch axes; every model shard probes only
+    the trees and sealed segments it owns, candidates route to their
+    murmur owner for the vector lookup + exact rank, and the (id, dist)
+    partials ``all_gather`` so each chip keeps the deduped global
+    top-k.  Tombstoned ids are filtered exactly like the single-chip
+    read path (sealed copies of deleted ids must not resurface).
+
+    ``with_drop_count`` adds a third output: a replicated i32 scalar
+    counting candidates dropped by owner-mailbox skew overflow (queries
+    have no retry round) — the stream backend accumulates it on device
+    and surfaces it through ``stats()``.
+    """
     cfg = dcfg.pfo
     mdl = dcfg.model_axis
     tcfg = lsh_tree_config(cfg)
@@ -191,32 +304,32 @@ def make_dist_query(dcfg: DistConfig, mesh: Mesh, k: int):
         off = jnp.arange(cfg.L, dtype=jnp.int32)[None] * cfg.n_trees
         gtree = region + off
 
-        h_all = jax.lax.all_gather(h, mdl, tiled=True)              # (Qr, L)
-        t_all = jax.lax.all_gather(gtree, mdl, tiled=True)
-        q_all = jax.lax.all_gather(qvecs, mdl, tiled=True)          # (Qr, d)
-        qr = h_all.shape[0]
-
-        # --- probe owned hot trees --------------------------------
-        flat_t = t_all.reshape(-1)
-        flat_h = h_all.reshape(-1)
+        # --- probe owned hot trees (queries replicated over model) ---
+        flat_t = gtree.reshape(-1)
+        flat_h = h.reshape(-1)
         mine = (flat_t >= me * tps) & (flat_t < (me + 1) * tps)
         local_t = jnp.where(mine, flat_t - me * tps, 0)
         ids, _, _ = forest_query(state.lsh_forest, local_t, flat_h, tcfg)
-        hot = jnp.where(mine[:, None], ids, -1).reshape(qr, -1)
+        hot = jnp.where(mine[:, None], ids, -1).reshape(ql, -1)
 
         # --- probe local sealed segments ---------------------------
+        # a chip's segments mix entries from every LSH table (one set
+        # per chip, not per table); the seal stores the table id in
+        # ``vals`` so cross-table bucket-prefix collisions filter out —
+        # the candidate set stays identical to the single-chip tier
         snaps = jax.tree.map(lambda a: a[0], state.lsh_snaps)
         scands = []
         for tl in range(cfg.L):
-            s, _ = snap_mod.probe(snaps, h_all[:, tl], snap_cfg)
-            scands.append(s)
+            s, sv = snap_mod.probe(snaps, h[:, tl], snap_cfg)
+            scands.append(jnp.where(sv == tl, s, -1))
         sealed = jnp.concatenate(scands, axis=1)
         cand = jnp.concatenate([hot, sealed], axis=1)
 
-        # --- dedupe, truncate to per-shard budget -------------------
-        skey = jnp.where(cand >= 0, cand, INT_MAX)
+        # --- tombstone filter, dedupe, truncate to per-shard budget --
+        dead = jnp.isin(cand, state.tombstones) & (cand >= 0)
+        skey = jnp.where((cand >= 0) & ~dead, cand, INT_MAX)
         skey = jnp.sort(skey, axis=1)
-        dup = jnp.concatenate([jnp.zeros((qr, 1), bool),
+        dup = jnp.concatenate([jnp.zeros((ql, 1), bool),
                                skey[:, 1:] == skey[:, :-1]], axis=1)
         uniq = jnp.sort(jnp.where(dup, INT_MAX, skey), axis=1)
         budget = min(max(cfg.max_candidates_total // S, k), uniq.shape[1])
@@ -226,18 +339,18 @@ def make_dist_query(dcfg: DistConfig, mesh: Mesh, k: int):
         flat_c = cids.reshape(-1)
         _, mtree = main_table_keys(flat_c, cfg)
         owner = jnp.where(flat_c >= 0, mtree // mtps, -1)
-        qidx = jnp.repeat(jnp.arange(qr, dtype=jnp.int32), budget)
+        qidx = jnp.repeat(jnp.arange(ql, dtype=jnp.int32), budget)
         payload = jnp.stack([flat_c, qidx], axis=1)
-        K = flat_c.shape[0] // S + budget
-        mbox, _ = dispatch_to_trees(owner, S, K)
-        (buf,) = gather_mailbox(mbox, payload)                      # (S,K,2)
-        valid = mbox >= 0
-        recv = jax.lax.all_to_all(buf, mdl, split_axis=0, concat_axis=0,
-                                  tiled=True).reshape(-1, 2)
-        rvalid = jax.lax.all_to_all(valid, mdl, split_axis=0, concat_axis=0,
-                                    tiled=True).reshape(-1)
-        rid = jnp.where(rvalid, recv[:, 0], -1)
-        rq = jnp.clip(recv[:, 1], 0, qr - 1)
+        # per-owner send capacity: 2x the even spread + slack.  A query
+        # has no retry round, so skew beyond this DROPS candidates —
+        # counted into the returned scalar (surfaced via engine stats;
+        # the differential tests assert it stays zero) rather than
+        # silently degrading recall.
+        K = 2 * (flat_c.shape[0] // S) + budget
+        recv, send_ovf, _ = _route_acked(payload, owner, S, K, mdl)
+        dropped = jax.lax.psum(jnp.sum(send_ovf.astype(jnp.int32)), mdl)
+        rid = recv[:, 0]
+        rq = jnp.clip(recv[:, 1], 0, ql - 1)
 
         # --- owner-side lookup + rank --------------------------------
         rh, rtree = main_table_keys(rid, cfg)
@@ -248,45 +361,82 @@ def make_dist_query(dcfg: DistConfig, mesh: Mesh, k: int):
             lambda hh, ii: snap_mod.lookup_exact(msnaps, hh, ii,
                                                  msnap_cfg))(rh, rid)
         slot = jnp.where(found, slot, jnp.where(sfound, sval, -1))
-        ok = rvalid & (rid >= 0) & (slot >= 0)
+        ok = (rid >= 0) & (slot >= 0)
         store_l = jax.tree.map(lambda a: a[0], state.store)
         vecs = dense_read(store_l, jnp.where(ok, slot, 0))
-        d = kops.pairwise_rank(q_all[rq], vecs[:, None, :], ok[:, None],
-                               cfg.metric)[:, 0]
+        # exact rank inline: each routed row pairs ONE candidate with
+        # its query — the fused rank kernels want wide per-query
+        # candidate blocks and pad a C=1 row out to a full block
+        # (measured ~1000x slower here); same formula as kernels.ref
+        qv = qvecs[rq]
+        if cfg.metric == "angular":
+            qn = qv / jnp.maximum(
+                jnp.linalg.norm(qv, axis=-1, keepdims=True), 1e-9)
+            xn = vecs / jnp.maximum(
+                jnp.linalg.norm(vecs, axis=-1, keepdims=True), 1e-9)
+            d = 1.0 - jnp.sum(qn * xn, axis=-1)
+        else:
+            d = jnp.maximum(jnp.sum((qv - vecs) ** 2, axis=-1), 0.0)
+        d = jnp.where(ok, d, jnp.inf)
 
-        # --- return partials, combine row-wide -----------------------
-        back = jnp.stack([rid.astype(jnp.float32),
+        # --- gather partials row-wide, keep the global top-k ---------
+        # ids ride the f32 partial rows BITCAST (a value cast rounds
+        # ids above 2^24; -1 padding survives the round trip exactly)
+        part = jnp.stack([jax.lax.bitcast_convert_type(rid, jnp.float32),
                           rq.astype(jnp.float32), d], axis=1)
-        part = jax.lax.all_to_all(back.reshape(S, -1, 3), mdl,
-                                  split_axis=0, concat_axis=0,
-                                  tiled=True).reshape(-1, 3)
         allp = jax.lax.all_gather(part, mdl, tiled=True)
-        pid = allp[:, 0].astype(jnp.int32)
+        pid = jax.lax.bitcast_convert_type(allp[:, 0], jnp.int32)
         pq = allp[:, 1].astype(jnp.int32)
         pd = jnp.where(jnp.isfinite(allp[:, 2]) & (pid >= 0),
                        allp[:, 2], jnp.inf)
 
-        my_rows = me * ql + jnp.arange(ql)
+        # group partials by query row first (dispatch primitive with
+        # row == tree): every (row, shard) pair contributes at most
+        # ``budget`` partials, so a (ql, S*budget) dense table is exact
+        # and the per-row top-k runs over S*budget entries instead of
+        # the whole flattened partial set
+        rbox, _ = dispatch_to_trees(
+            jnp.where(jnp.isfinite(pd), pq, -1), ql, S * budget)
+        pid_r = mailbox_ids(rbox, pid)
+        (pd_g,) = gather_mailbox(rbox, pd)
+        pd_r = jnp.where(rbox >= 0, pd_g, jnp.inf)
+        out_ids, out_d = jax.vmap(
+            lambda ii, dd: _dedup_topk(ii, dd, k))(pid_r, pd_r)
+        if with_drop_count:
+            return out_ids, out_d, dropped
+        return out_ids, out_d
 
-        def topk_for(row):
-            dd = jnp.where(pq == row, pd, jnp.inf)
-            return _dedup_topk(pid, dd, k)
-
-        return jax.vmap(topk_for)(my_rows)
-
+    bspec = _batch_spec(dcfg)
+    out_specs = (bspec, bspec, P()) if with_drop_count else (bspec, bspec)
     fn = compat.shard_map(local_fn, mesh=mesh,
-                          in_specs=(state_pspecs(dcfg), _batch_spec(dcfg)),
-                          out_specs=(_batch_spec(dcfg), _batch_spec(dcfg)),
-                          check_vma=False)
+                          in_specs=(state_pspecs(dcfg), bspec),
+                          out_specs=out_specs, check_vma=False)
     return jax.jit(fn)
 
 
 # ======================================================================
-# insert
+# insert (stream round)
 # ======================================================================
-def make_dist_insert(dcfg: DistConfig, mesh: Mesh, capacity: int):
-    """Jitted distributed insert round: (state, ids, vecs, active) ->
-    (state, pending)."""
+def make_dist_insert_round(dcfg: DistConfig, mesh: Mesh, *,
+                           route_main: int, tree_main: int,
+                           route_lsh: int, tree_lsh: int,
+                           flags_main: int, flags_lsh: int):
+    """Jitted distributed insert round returning the packed flag word.
+
+    fn(state, ids, vecs, main_active, lsh_active) ->
+        (state, main_pending, lsh_pending, flags)
+
+    ids/vecs enter replicated over the batch axes (every data shard
+    applies the identical round, keeping the state replicas
+    consistent); sender-side rows partition into contiguous per-chip
+    blocks over ``model``.  ``route_*`` size the per-destination-shard
+    send mailboxes, ``tree_*`` the receive-side per-tree mailboxes
+    (single-chip capacities — the per-tree scan stays short);
+    ``flags_*`` are the capacities the next-round headroom check is
+    computed against (the stream engine passes its worst-case bucket).
+    Pending tracks main rows and LSH entries separately so retry rounds
+    never double-insert what already landed.
+    """
     cfg = dcfg.pfo
     mdl = dcfg.model_axis
     tcfg = lsh_tree_config(cfg)
@@ -296,73 +446,311 @@ def make_dist_insert(dcfg: DistConfig, mesh: Mesh, capacity: int):
     S = dcfg.n_model
 
     def local_fn(state: PFOState, ids: jax.Array, vecs: jax.Array,
-                 active: jax.Array):
+                 main_active: jax.Array, lsh_active: jax.Array):
         n = ids.shape[0]
+        me = jax.lax.axis_index(mdl)
+        mine_row = _block_mine(n, S, me)
+
+        # re-inserting a previously-deleted id revokes its tombstone
+        # (computed identically on every shard: batch is replicated)
+        revived = jnp.isin(state.tombstones,
+                           jnp.where(main_active, ids, -1))
+        state = state._replace(
+            tombstones=jnp.where(revived, -1, state.tombstones))
+
         h = kops.lsh_hash(vecs, state.proj["table_proj"], cfg.M)
         region = region_ids(h, state.proj["part_proj"], cfg)
         off = jnp.arange(cfg.L, dtype=jnp.int32)[None] * cfg.n_trees
         gtree = region + off
 
-        # --- LSH entries -> tree owners ------------------------------
-        flat_t = jnp.where(jnp.repeat(active, cfg.L), gtree.reshape(-1), -1)
-        flat_h = h.reshape(-1)
-        flat_id = jnp.repeat(ids, cfg.L)
-        dest = jnp.where(flat_t >= 0, flat_t // tps, -1)
-        payload = jnp.stack([flat_h.astype(jnp.int32), flat_id,
-                             jnp.where(flat_t >= 0, flat_t % tps, -1)],
-                            axis=1)
-        mbox, ovf = dispatch_to_trees(dest, S, capacity)
-        (buf,) = gather_mailbox(mbox, payload)
-        valid = mbox >= 0
-        recv = jax.lax.all_to_all(buf, mdl, split_axis=0, concat_axis=0,
-                                  tiled=True).reshape(-1, 3)
-        rvalid = jax.lax.all_to_all(valid, mdl, split_axis=0,
-                                    concat_axis=0, tiled=True).reshape(-1)
-        rh = recv[:, 0].astype(jnp.uint32)
-        rid = jnp.where(rvalid, recv[:, 1], -1)
-        rtree = jnp.where(rvalid, recv[:, 2], -1)
+        # --- MainTable rows -> murmur owners --------------------------
+        mh, mtree = main_table_keys(ids, cfg)
+        msend = main_active & mine_row
+        mdest = jnp.where(msend, mtree // mtps, -1)
+        # ids ride the f32 vec payload BITCAST, not value-cast: a value
+        # cast silently rounds ids above 2^24.  The route's -1 padding
+        # marker (f32 -1.0) bitcasts back to a negative i32, so the
+        # rids >= 0 validity checks still hold.
+        idbits = jax.lax.bitcast_convert_type(ids, jnp.float32)
+        mpay = jnp.concatenate([idbits[:, None], vecs], axis=1)
+        mrecv, m_send_ovf, mack = _route_acked(mpay, mdest, S, route_main,
+                                               mdl)
+        rids = jax.lax.bitcast_convert_type(mrecv[:, 0], jnp.int32)
+        rvecs = mrecv[:, 1:]
+        store_l = jax.tree.map(lambda a: a[0], state.store)
+        store_l, slots, alloc_ok = dense_alloc(store_l, rvecs, rids >= 0)
+        rh2, rtree2 = main_table_keys(rids, cfg)
+        rlocal = jnp.where((rids >= 0) & alloc_ok, rtree2 % mtps, -1)
+        mbox_l, m_recv_ovf = dispatch_to_trees(rlocal, mtps, tree_main)
+        (mh_g,) = gather_mailbox(mbox_l, rh2)
+        mid_g = mailbox_ids(mbox_l, rids)
+        (mval_g,) = gather_mailbox(mbox_l, slots)
+        main_forest = forest_insert_dispatched(state.main_forest, mh_g,
+                                               mid_g, mval_g, mcfg)
+        # rows whose local dispatch overflowed never stored a reference
+        # to their slot — reclaim it so the retry cannot leak the store
+        store_l = dense_free(store_l, slots,
+                             (rids >= 0) & alloc_ok & m_recv_ovf)
+        store = jax.tree.map(lambda a: a[None, ...], store_l)
+        m_fail = mack((rids >= 0) & (~alloc_ok | m_recv_ovf))
+        main_pending = _psum_bool(msend & (m_send_ovf | m_fail), mdl)
+        main_pending = main_pending & main_active
 
-        # receive-side mailboxes sized so nothing routed can drop
-        lbox, _ = dispatch_to_trees(rtree, tps, S * capacity)
+        # --- LSH entries -> tree owners ------------------------------
+        ent_mine = jnp.repeat(mine_row, cfg.L)
+        lsend = lsh_active & ent_mine
+        gflat = gtree.reshape(-1)
+        ldest = jnp.where(lsend, gflat // tps, -1)
+        lpay = jnp.stack([h.reshape(-1).astype(jnp.int32),
+                          jnp.repeat(ids, cfg.L),
+                          gflat % tps], axis=1)
+        lrecv, l_send_ovf, lack = _route_acked(lpay, ldest, S, route_lsh,
+                                               mdl, marker_col=1)
+        rh = lrecv[:, 0].astype(jnp.uint32)
+        rid = lrecv[:, 1]
+        rlt = lrecv[:, 2]
+        lbox, l_recv_ovf = dispatch_to_trees(
+            jnp.where(rid >= 0, rlt, -1), tps, tree_lsh)
         (lh_g,) = gather_mailbox(lbox, rh)
         lid_g = mailbox_ids(lbox, rid)
         lsh_forest = forest_insert_dispatched(state.lsh_forest, lh_g,
                                               lid_g, lid_g, tcfg)
-
-        # --- MainTable rows -> murmur owners --------------------------
-        mh, mtree = main_table_keys(ids, cfg)
-        mdest = jnp.where(active, mtree // mtps, -1)
-        mpay = jnp.concatenate([ids[:, None].astype(jnp.float32), vecs],
-                               axis=1)
-        mbox2, movf = dispatch_to_trees(mdest, S, capacity)
-        (mbuf,) = gather_mailbox(mbox2, mpay)
-        mvalid = mbox2 >= 0
-        mrecv = jax.lax.all_to_all(mbuf, mdl, split_axis=0, concat_axis=0,
-                                   tiled=True).reshape(-1, 1 + cfg.dim)
-        mrv = jax.lax.all_to_all(mvalid, mdl, split_axis=0, concat_axis=0,
-                                 tiled=True).reshape(-1)
-        rids = jnp.where(mrv, mrecv[:, 0].astype(jnp.int32), -1)
-        rvecs = mrecv[:, 1:]
-        store_l = jax.tree.map(lambda a: a[0], state.store)
-        store_l, slots, _ = dense_alloc(store_l, rvecs, rids >= 0)
-        store = jax.tree.map(lambda a: a[None, ...], store_l)
-        rh2, rtree2 = main_table_keys(rids, cfg)
-        rlocal2 = jnp.where(rids >= 0, rtree2 % mtps, -1)
-        mbox3, _ = dispatch_to_trees(rlocal2, mtps, S * capacity)
-        (mh_g,) = gather_mailbox(mbox3, rh2)
-        mid_g = mailbox_ids(mbox3, rids)
-        (mval_g,) = gather_mailbox(mbox3, slots)
-        main_forest = forest_insert_dispatched(state.main_forest, mh_g,
-                                               mid_g, mval_g, mcfg)
+        l_fail = lack((rid >= 0) & l_recv_ovf)
+        lsh_pending = _psum_bool(lsend & (l_send_ovf | l_fail), mdl)
+        lsh_pending = lsh_pending & lsh_active
 
         state = state._replace(lsh_forest=lsh_forest,
                                main_forest=main_forest, store=store)
-        pending = active & (jnp.any(ovf.reshape(n, cfg.L), axis=1) | movf)
-        return state, pending
+        any_pending = jnp.any(main_pending) | jnp.any(lsh_pending)
+        flags = _dist_round_flags(state, dcfg, flags_main, flags_lsh,
+                                  any_pending, mdl)
+        return state, main_pending, lsh_pending, flags
 
     fn = compat.shard_map(local_fn, mesh=mesh,
-                          in_specs=(state_pspecs(dcfg), _batch_spec(dcfg),
-                                    _batch_spec(dcfg), _batch_spec(dcfg)),
-                          out_specs=(state_pspecs(dcfg), _batch_spec(dcfg)),
+                          in_specs=(state_pspecs(dcfg), P(), P(), P(), P()),
+                          out_specs=(state_pspecs(dcfg), P(), P(), P()),
                           check_vma=False)
+    return jax.jit(fn)
+
+
+def make_dist_insert(dcfg: DistConfig, mesh: Mesh, capacity: int):
+    """Legacy batch-insert entry point: (state, ids, vecs, active) ->
+    (state, pending).  A jitted (``.lower()``-able — launch/dryrun
+    relies on it) wrapper over the stream round step with every mailbox
+    sized to ``capacity``."""
+    cfg = dcfg.pfo
+    step = make_dist_insert_round(
+        dcfg, mesh, route_main=capacity, tree_main=capacity,
+        route_lsh=capacity, tree_lsh=capacity,
+        flags_main=capacity, flags_lsh=capacity)
+
+    def run(state, ids, vecs, active):
+        state, mp, lp, _ = step(state, ids, vecs, active,
+                                jnp.repeat(active, cfg.L))
+        pending = mp | jnp.any(lp.reshape(-1, cfg.L), axis=1)
+        return state, pending
+
+    return jax.jit(run)
+
+
+# ======================================================================
+# delete (stream round)
+# ======================================================================
+def make_dist_delete_round(dcfg: DistConfig, mesh: Mesh, *,
+                           tree_main: int, route_lsh: int, tree_lsh: int,
+                           flags_main: int, flags_lsh: int):
+    """Jitted distributed delete round returning the packed flag word.
+
+    fn(state, ids, active) -> (state, pending, flags)
+
+    Every murmur owner unlinks the hot MainTable entry for the ids it
+    owns, frees the store slot, re-derives the LSH keys from the stored
+    vector and routes the (h, id) unlink requests to tree owners.
+    Tombstones stay replicated: the global per-row success mask is
+    psum-combined so every shard appends the identical id sequence
+    (same order, same overflow behaviour as the single-chip
+    ``delete_step``, including the retry-after-merge protocol for
+    tombstone-buffer overflow).
+    """
+    cfg = dcfg.pfo
+    mdl = dcfg.model_axis
+    tcfg = lsh_tree_config(cfg)
+    mcfg = main_tree_config(cfg)
+    tps = dcfg.trees_per_shard
+    mtps = dcfg.main_trees_per_shard
+    snap_cfg = shard_main_snap_cfg(dcfg)
+    S = dcfg.n_model
+
+    def local_fn(state: PFOState, ids: jax.Array, active: jax.Array):
+        me = jax.lax.axis_index(mdl)
+        mh, mtree = main_table_keys(ids, cfg)
+        own = active & (mtree // mtps == me)
+        ltree = jnp.where(own, mtree % mtps, 0)
+        slot, found = forest_lookup(state.main_forest, ltree, mh, ids, mcfg)
+        msnaps = jax.tree.map(lambda a: a[0], state.main_snaps)
+        sval, sfound = jax.vmap(
+            lambda hh, ii: snap_mod.lookup_exact(msnaps, hh, ii,
+                                                 snap_cfg))(mh, ids)
+        slot = jnp.where(found, slot, jnp.where(sfound, sval, -1))
+        ok = own & (found | sfound) & (slot >= 0)
+        ok_all = _psum_bool(ok, mdl)
+
+        # re-derive LSH keys from the stored vector (owner-side)
+        store_l = jax.tree.map(lambda a: a[0], state.store)
+        vecs = dense_read(store_l, jnp.where(ok, slot, 0))
+        h = kops.lsh_hash(vecs, state.proj["table_proj"], cfg.M)
+        region = region_ids(h, state.proj["part_proj"], cfg)
+        off = jnp.arange(cfg.L, dtype=jnp.int32)[None] * cfg.n_trees
+        gflat = (region + off).reshape(-1)
+        lsend = jnp.repeat(ok, cfg.L)
+        ldest = jnp.where(lsend, gflat // tps, -1)
+        lpay = jnp.stack([h.reshape(-1).astype(jnp.int32),
+                          jnp.repeat(ids, cfg.L),
+                          gflat % tps], axis=1)
+        lrecv, l_send_ovf, lack = _route_acked(lpay, ldest, S, route_lsh,
+                                               mdl, marker_col=1)
+        rh = lrecv[:, 0].astype(jnp.uint32)
+        rid = lrecv[:, 1]
+        rlt = lrecv[:, 2]
+        lbox, l_recv_ovf = dispatch_to_trees(
+            jnp.where(rid >= 0, rlt, -1), tps, tree_lsh)
+        (lh_g,) = gather_mailbox(lbox, rh)
+        lid_g = mailbox_ids(lbox, rid)
+        lsh_forest = forest_delete_dispatched(state.lsh_forest, lh_g,
+                                              lid_g, tcfg)
+        l_fail = lack((rid >= 0) & l_recv_ovf)
+        l_ent = lsend & (l_send_ovf | l_fail)
+        l_row = _psum_bool(jnp.any(l_ent.reshape(-1, cfg.L), axis=1), mdl)
+
+        # hot MainTable unlink + store reclaim, owner-local
+        mbox, m_ovf = dispatch_to_trees(jnp.where(ok, ltree, -1), mtps,
+                                        tree_main)
+        (mh_g,) = gather_mailbox(mbox, mh)
+        mid_g = mailbox_ids(mbox, ids)
+        main_forest = forest_delete_dispatched(state.main_forest, mh_g,
+                                               mid_g, mcfg)
+        m_row = _psum_bool(ok & m_ovf, mdl)
+        store_l = dense_free(store_l, slot, ok)
+        store = jax.tree.map(lambda a: a[None, ...], store_l)
+
+        # tombstones (replicated; identical append on every shard —
+        # overflow parks out of bounds, exactly like the single-chip
+        # scatter, and the row stays pending until a merge drains it)
+        want = ok_all.astype(jnp.int32)
+        rank = jnp.cumsum(want) - want
+        pos = state.n_tombstones + rank
+        fits = ok_all & (pos < cfg.max_tombstones)
+        safe = jnp.where(fits, pos, cfg.max_tombstones)
+        tombs = state.tombstones.at[safe].set(ids, mode="drop")
+        n_t = jnp.minimum(
+            state.n_tombstones + jnp.sum(fits.astype(jnp.int32)),
+            cfg.max_tombstones)
+
+        state = state._replace(lsh_forest=lsh_forest,
+                               main_forest=main_forest, store=store,
+                               tombstones=tombs, n_tombstones=n_t)
+        tomb_ovf = ok_all & ~fits
+        pending = (ok_all & (l_row | m_row)) | tomb_ovf
+        flags = _dist_round_flags(state, dcfg, flags_main, flags_lsh,
+                                  jnp.any(pending), mdl)
+        return state, pending, flags
+
+    fn = compat.shard_map(local_fn, mesh=mesh,
+                          in_specs=(state_pspecs(dcfg), P(), P()),
+                          out_specs=(state_pspecs(dcfg), P(), P()),
+                          check_vma=False)
+    return jax.jit(fn)
+
+
+# ======================================================================
+# maintenance epochs + cold-start flags (shard-local, no collectives
+# beyond the pmax folded into the flag word)
+# ======================================================================
+def make_dist_seal(dcfg: DistConfig, mesh: Mesh):
+    """Jitted distributed seal: every chip seals its own tree block into
+    its own snapshot segment set and resets its hot forests."""
+    cfg = dcfg.pfo
+    tcfg = lsh_tree_config(cfg)
+    mcfg = main_tree_config(cfg)
+    snap_cfg = shard_snap_cfg(dcfg)
+    msnap_cfg = shard_main_snap_cfg(dcfg)
+    tps = dcfg.trees_per_shard
+    mtps = dcfg.main_trees_per_shard
+
+    mdl = dcfg.model_axis
+
+    def local_fn(state: PFOState):
+        stamp = state.stamp + 1
+        me = jax.lax.axis_index(mdl)
+        lf = state.lsh_forest
+        # LSH leaf vals are redundant (val == id); store the table id
+        # instead so mixed-table segments probe and merge per table
+        table = (me * tps + jnp.arange(tps, dtype=jnp.int32)) \
+            // cfg.n_trees
+        ltag = jnp.broadcast_to(table[:, None],
+                                lf.leaf_id.shape).reshape(-1)
+        lsnap = snap_mod.seal(
+            jax.tree.map(lambda a: a[0], state.lsh_snaps),
+            lf.leaf_key.reshape(-1), lf.leaf_id.reshape(-1),
+            ltag, lf.leaf_id.reshape(-1) >= 0,
+            stamp, snap_cfg)
+        mf = state.main_forest
+        msnap = snap_mod.seal(
+            jax.tree.map(lambda a: a[0], state.main_snaps),
+            mf.leaf_key.reshape(-1), mf.leaf_id.reshape(-1),
+            mf.leaf_val.reshape(-1), mf.leaf_id.reshape(-1) >= 0,
+            stamp, msnap_cfg)
+        return state._replace(
+            lsh_forest=init_forest(tcfg, tps),
+            main_forest=init_forest(mcfg, mtps),
+            lsh_snaps=jax.tree.map(lambda a: a[None, ...], lsnap),
+            main_snaps=jax.tree.map(lambda a: a[None, ...], msnap),
+            stamp=stamp)
+
+    fn = compat.shard_map(local_fn, mesh=mesh,
+                          in_specs=(state_pspecs(dcfg),),
+                          out_specs=state_pspecs(dcfg), check_vma=False)
+    return jax.jit(fn)
+
+
+def make_dist_merge(dcfg: DistConfig, mesh: Mesh):
+    """Jitted distributed merge: shard-local snapshot compaction with
+    the replicated tombstone buffer, then drain the buffer."""
+    cfg = dcfg.pfo
+    snap_cfg = shard_snap_cfg(dcfg)
+    msnap_cfg = shard_main_snap_cfg(dcfg)
+
+    def local_fn(state: PFOState):
+        tombs = state.tombstones
+        lsnap = snap_mod.merge(
+            jax.tree.map(lambda a: a[0], state.lsh_snaps), snap_cfg, tombs,
+            group_by_val=True)
+        msnap = snap_mod.merge(
+            jax.tree.map(lambda a: a[0], state.main_snaps), msnap_cfg,
+            tombs)
+        return state._replace(
+            lsh_snaps=jax.tree.map(lambda a: a[None, ...], lsnap),
+            main_snaps=jax.tree.map(lambda a: a[None, ...], msnap),
+            tombstones=jnp.full_like(state.tombstones, -1),
+            n_tombstones=jnp.int32(0))
+
+    fn = compat.shard_map(local_fn, mesh=mesh,
+                          in_specs=(state_pspecs(dcfg),),
+                          out_specs=state_pspecs(dcfg), check_vma=False)
+    return jax.jit(fn)
+
+
+def make_dist_round_flags(dcfg: DistConfig, mesh: Mesh, flags_main: int,
+                          flags_lsh: int):
+    """Cold-start flag probe (capacity change / first round only —
+    steady-state rounds get their flags from the step itself)."""
+    mdl = dcfg.model_axis
+
+    def local_fn(state: PFOState):
+        return _dist_round_flags(state, dcfg, flags_main, flags_lsh,
+                                 jnp.bool_(False), mdl)
+
+    fn = compat.shard_map(local_fn, mesh=mesh,
+                          in_specs=(state_pspecs(dcfg),),
+                          out_specs=P(), check_vma=False)
     return jax.jit(fn)

@@ -147,10 +147,17 @@ def lookup_exact(snaps: SnapshotSet, h: jax.Array, vid: jax.Array,
 
 
 def merge(snaps: SnapshotSet, cfg: PFOConfig,
-          deleted_ids: jax.Array | None = None) -> SnapshotSet:
+          deleted_ids: jax.Array | None = None,
+          group_by_val: bool = False) -> SnapshotSet:
     """Merge compaction (paper's periodic maintenance): fold all segments
     into one, newest version of each (key_prefix, id) wins, deleted ids
     dropped.  Returns a fresh set with a single segment.
+
+    ``group_by_val`` dedupes by (val, id) instead of id alone — the
+    distributed tier seals all of a chip's trees into ONE mixed segment
+    set with the LSH table id stored in ``vals``, and an id must
+    survive once per table there, not once overall.  Tombstones still
+    match by raw id.
     """
     S, cap = snaps.keys.shape
     seg_rank = jnp.broadcast_to(snaps.stamps[:, None], (S, cap))
@@ -164,10 +171,14 @@ def merge(snaps: SnapshotSet, cfg: PFOConfig,
         live = live & ~dead
 
     # newest (highest stamp) version of an id wins
-    order = jnp.lexsort((-rank, jnp.where(live, ids, jnp.int32(2**31 - 1))))
+    ikey = jnp.where(live, ids, jnp.int32(2**31 - 1))
+    gkey = jnp.where(live, vals, 0) if group_by_val else jnp.zeros_like(ids)
+    order = jnp.lexsort((-rank, ikey, gkey))
     sids = jnp.where(live[order], ids[order], -1)
+    sgrp = gkey[order]
     first_of_id = jnp.concatenate(
-        [jnp.array([True]), sids[1:] != sids[:-1]]) & (sids >= 0)
+        [jnp.array([True]),
+         (sids[1:] != sids[:-1]) | (sgrp[1:] != sgrp[:-1])]) & (sids >= 0)
 
     keep_keys = jnp.where(first_of_id, keys[order], _PAD_KEY)
     keep_ids = jnp.where(first_of_id, sids, -1)

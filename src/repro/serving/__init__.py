@@ -1,6 +1,9 @@
 from .engine import (ServeConfig, ServingEngine, make_decode_step,
                      make_prefill_step)
-from .stream import StreamConfig, StreamEngine, drive
+from .stream import (DistBackend, DistStreamEngine, LocalBackend,
+                     StreamClient, StreamConfig, StreamEngine, drive)
 
 __all__ = ["ServeConfig", "ServingEngine", "make_prefill_step",
-           "make_decode_step", "StreamConfig", "StreamEngine", "drive"]
+           "make_decode_step", "StreamConfig", "StreamEngine",
+           "DistStreamEngine", "StreamClient", "LocalBackend",
+           "DistBackend", "drive"]

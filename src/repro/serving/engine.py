@@ -81,6 +81,9 @@ class ServingEngine:
         if pfo_stream is None and pfo_index is not None:
             pfo_stream = StreamEngine(pfo_index)
         self.stream = pfo_stream
+        # .index is None for distributed backends — gate the kNN paths
+        # on the stream itself, never on .pfo (DistStreamEngine would
+        # otherwise silently disable the datastore)
         self.pfo = pfo_stream.index if pfo_stream is not None else None
         # datastore value -> token id mapping (np array indexed by id)
         self.knn_vocab_map = knn_vocab_map
@@ -110,7 +113,7 @@ class ServingEngine:
     def _next_token(self, logits: np.ndarray, hidden: np.ndarray | None):
         lam = self.scfg.knn_lambda
         logp = jax.nn.log_softmax(jnp.asarray(logits), axis=-1)
-        if self.pfo is not None and hidden is not None and lam > 0:
+        if self.stream is not None and hidden is not None and lam > 0:
             knn = self._knn_logits(hidden, logits.shape[-1])
             knn_logp = jax.nn.log_softmax(jnp.asarray(knn), axis=-1)
             logp = jnp.logaddexp(jnp.log1p(-lam) + logp,
@@ -151,10 +154,10 @@ class ServingEngine:
             tok = self._next_token(np.asarray(logits[:, 0]), None)
         stats = {"prompt_len": prompt_len, "generated": max_new}
 
-        if insert_online and self.pfo is not None:
+        if insert_online and self.stream is not None:
             # the paper's online-update half: store this request's
             # (hidden -> produced token) memories via the stream engine
-            base = self.pfo.n_inserted
+            base = self.stream.backend.n_inserted
             ids = np.arange(base, base + b, dtype=np.int32)
             for r in range(b):
                 self.stream.insert(int(ids[r]), mem_h[0][r])
@@ -165,5 +168,5 @@ class ServingEngine:
                     self.knn_vocab_map = np.resize(self.knn_vocab_map,
                                                    need + 1024)
                 self.knn_vocab_map[ids] = mem_t[0]
-            stats["datastore_size"] = self.pfo.n_inserted
+            stats["datastore_size"] = self.stream.backend.n_inserted
         return out, stats

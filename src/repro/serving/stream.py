@@ -16,6 +16,48 @@ Paper terminology -> this module:
   explicit engine events, exactly when the flag word asks, never via
   ad-hoc device readbacks.
 
+Backend interface
+-----------------
+The bucket/ordering/flag-word machinery is device-topology agnostic:
+:class:`StreamEngine` drives an abstract backend that owns the device
+state and the jitted steps.  Two backends implement the contract:
+
+* :class:`LocalBackend` — wraps a single-chip :class:`PFOIndex`
+  (``core.index`` steps, the PR-2 engine unchanged);
+* :class:`DistBackend` — a mesh-sharded ``PFOState`` driven through
+  the ``core.distributed`` shard_map rounds (trees + MainTable over
+  ``model``, query rows over the batch axes).
+  :class:`DistStreamEngine` is the one-line assembly of engine +
+  distributed backend.
+
+A backend supplies: per-bucket dispatch capacities, one jitted
+insert/delete round per bucket returning the packed flag word, a
+query step, forced/flagged seal + merge epochs, and the carried-flag
+bookkeeping (``ensure_flags`` / ``read_flags`` — ``sync_count`` counts
+every explicit scalar readback, asserted one-per-round in tests).  The
+engine never touches device state directly, so both topologies share
+the exact window/strict semantics below — the distributed engine is
+trace-differential-equal to the single-chip one
+(``tests/test_dist_stream.py``).
+
+Async double-buffered rounds: while the device executes micro-batch
+``t``, the host packs micro-batch ``t+1`` (the ``overlap`` hook fires
+between the round's dispatch and its flag-word readback), so host
+batch building hides under device execution; results block only at
+pickup (``StreamConfig.async_rounds``).
+
+Multi-client ingestion
+----------------------
+:meth:`StreamEngine.client` opens a :class:`StreamClient` with its own
+**ticket space**: tickets are ``(client_id << 40) | seq``
+(``core.dispatch.client_ticket``), so K independent submitters never
+coordinate on ticket allocation.  At flush time the per-client queues
+merge into ONE round via ``core.dispatch.merge_client_queues`` — fair
+round-robin across clients, FIFO *within* each client (the router
+thread of §4.2).  The ordering contract below then applies to the
+merged round: per-client submission order is always respected;
+cross-client order is the deterministic round-robin interleave.
+
 The engine coalesces an *interleaved* stream of query / insert /
 delete / update requests into fixed-shape micro-batches.  Batch shapes
 are drawn from a small set of power-of-two **size buckets** and the
@@ -57,7 +99,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dispatch import FLAG_ANY_PENDING
+from repro.core.dispatch import (FLAG_ANY_PENDING, FLAG_NEED_SEAL,
+                                 FLAG_SNAPS_FULL, FLAG_TOMBS_FULL,
+                                 client_ticket, merge_client_queues)
 from repro.core.index import (PFOIndex, delete_step, init_state, insert_step,
                               merge_step, query_step, round_flags, seal_step)
 
@@ -95,6 +139,9 @@ class StreamConfig:
     # lookups up to this many tickets, then evicted oldest-first —
     # bounds engine memory in a long-running serving loop.
     max_retained_results: int = 4096
+    # double-buffered rounds: pack micro-batch t+1 on the host while
+    # the device executes micro-batch t (see module docstring)
+    async_rounds: bool = True
 
     def __post_init__(self):
         qmb = (self.max_batch if self.query_max_batch is None
@@ -121,54 +168,97 @@ class StreamConfig:
                    self.max_batch)
 
 
-class StreamEngine:
-    """Online query/update front-end over a :class:`PFOIndex`.
+# ======================================================================
+# backends — the device contract the engine drives
+# ======================================================================
+class LocalBackend:
+    """Single-chip backend: a :class:`PFOIndex` and the ``core.index``
+    jitted steps (the original engine's device path, verbatim)."""
 
-    Submission enqueues and returns a ticket immediately; :meth:`flush`
-    drains the stream in order and materializes results.  ``stats()``
-    exposes round/sync/maintenance counters for benchmarks and tests.
-    """
-
-    MAX_ROUNDS = PFOIndex.MAX_ROUNDS
-
-    def __init__(self, index: PFOIndex, scfg: StreamConfig | None = None):
+    def __init__(self, index: PFOIndex):
         self.index = index
-        self.scfg = scfg or StreamConfig()
-        cfg = index.cfg
-        # per-bucket dispatch capacities, precomputed once: the static
-        # (batch, capacity) jit keys are drawn from this fixed table.
-        self._caps = {b: (index._main_capacity(b), index._lsh_capacity(b))
-                      for b in self.scfg.buckets}
-        mb = self.scfg.max_batch
-        self._flags_caps = self._caps[mb]     # worst case: one carried word
-        # query chunk cap resolved against the index's traversal mode
-        # (masked traversal: queries follow max_batch — no lockstep
-        # penalty left to work around)
-        self._query_cap = self.scfg.query_cap(cfg.traversal)
-        self._queue: list[tuple[int, str, Any]] = []   # (ticket, kind, payload)
-        self._results: dict[int, Any] = {}
-        self._next_ticket = 0
-        self.events: list[tuple[str, int]] = []        # (epoch kind, flush#)
-        self.n_flushes = 0
-        self.n_batches = 0
-        self.n_rounds = 0
-        self.n_requests = 0
-        self._dim = cfg.dim
+        self.cfg = index.cfg
+        self._cap_cache: dict[int, tuple[int, int]] = {}
+        self._flags_caps = (0, 0)
 
-    # ------------------------------------------------------------------
-    # warmup: precompile every (op, bucket) variant + maintenance steps
-    # ------------------------------------------------------------------
-    def warmup(self) -> None:
-        """Compile all step variants the engine can ever dispatch, so no
-        jit compile lands inside a serving round.  Uses all-inactive
-        batches (state untouched) and a scratch state for seal/merge."""
-        idx, cfg = self.index, self.index.cfg
+    # -- capacities / flags --------------------------------------------
+    def capacities(self, bucket: int) -> tuple[int, int]:
+        """(main_capacity, lsh_capacity) for a bucket size."""
+        if bucket not in self._cap_cache:
+            self._cap_cache[bucket] = (self.index._main_capacity(bucket),
+                                       self.index._lsh_capacity(bucket))
+        return self._cap_cache[bucket]
+
+    def set_flags_caps(self, fm: int, fl: int) -> None:
+        self._flags_caps = (fm, fl)
+
+    @property
+    def sync_count(self) -> int:
+        return self.index.sync_count
+
+    @property
+    def maintenance_log(self) -> list:
+        return self.index.maintenance_log
+
+    def ensure_flags(self) -> int:
         fm, fl = self._flags_caps
-        qcap = self._query_cap
-        for b in self.scfg.buckets:
-            mcap, lcap = self._caps[b]
+        return self.index._ensure_flags(fm, fl)
+
+    def read_flags(self, fw) -> int:
+        return self.index._read_flags(fw, self._flags_caps)
+
+    def maintain(self, flags: int) -> None:
+        self.index._maintain(flags)
+
+    # -- rounds ---------------------------------------------------------
+    def query_rows(self, qvecs, k: int):
+        return query_step(self.index.state, qvecs, self.cfg, k)
+
+    def insert_begin(self, bucket: int):
+        return jnp.full((bucket,), -2, jnp.int32)   # slots: unallocated
+
+    def insert_round(self, ids, vecs, carry, main_active, lsh_active,
+                     bucket: int):
+        mcap, lcap = self.capacities(bucket)
+        fm, fl = self._flags_caps
+        st, slots, ma, la, fw = insert_step(
+            self.index.state, ids, vecs, carry, main_active, lsh_active,
+            self.cfg, mcap, lcap, fm, fl)
+        self.index.state = st
+        return slots, ma, la, fw
+
+    def delete_round(self, ids, active, bucket: int):
+        mcap, lcap = self.capacities(bucket)
+        fm, fl = self._flags_caps
+        st, pending, fw = delete_step(self.index.state, ids, active,
+                                      self.cfg, mcap, lcap, fm, fl)
+        self.index.state = st
+        return pending, fw
+
+    def count_insert(self, n: int) -> None:
+        self.index.n_inserted += n
+
+    @property
+    def n_inserted(self) -> int:
+        return self.index.n_inserted
+
+    # -- epochs ---------------------------------------------------------
+    def force_seal(self) -> None:
+        self.index.state = seal_step(self.index.state, self.cfg)
+        self.index._flags = None
+
+    def force_merge(self) -> None:
+        self.index.state = merge_step(self.index.state, self.cfg)
+        self.index._flags = None
+
+    # -- warmup ---------------------------------------------------------
+    def warmup(self, buckets, qcap: int, default_k: int) -> None:
+        idx, cfg = self.index, self.cfg
+        fm, fl = self._flags_caps
+        for b in buckets:
+            mcap, lcap = self.capacities(b)
             ids = jnp.zeros((b,), jnp.int32)
-            vecs = jnp.zeros((b, self._dim), jnp.float32)
+            vecs = jnp.zeros((b, cfg.dim), jnp.float32)
             off = jnp.zeros((b,), bool)
             r = insert_step(idx.state, ids, vecs,
                             jnp.full((b,), -2, jnp.int32), off,
@@ -179,42 +269,338 @@ class StreamEngine:
             jax.block_until_ready(r[-1])
             if b <= qcap:
                 jax.block_until_ready(
-                    query_step(idx.state, vecs, cfg, self.scfg.default_k))
+                    query_step(idx.state, vecs, cfg, default_k))
         jax.block_until_ready(round_flags(idx.state, cfg, fm, fl))
         scratch = init_state(cfg, jax.random.PRNGKey(0))
         jax.block_until_ready(merge_step(seal_step(scratch, cfg), cfg))
 
-    # ------------------------------------------------------------------
-    # submission (the request stream)
-    # ------------------------------------------------------------------
+
+class DistBackend:
+    """Mesh-sharded backend: a distributed ``PFOState`` driven through
+    the ``core.distributed`` shard_map stream rounds.
+
+    Jitted-variant bookkeeping matches the single-chip path: one
+    insert/delete round per bucket (static mailbox capacities derive
+    from the bucket), one query program per k, one seal/merge/flags
+    program — the jit cache is bounded by the bucket table, never by
+    traffic.  The flag-word thresholds are computed against the same
+    worst-case-bucket capacities as :class:`LocalBackend`, so seal and
+    merge epochs fire at the same rounds for the same trace (the
+    differential tests assert this end to end).
+    """
+
+    #: jitted programs memoized per (dcfg, mesh, variant) so a second
+    #: engine over the same topology reuses compiles (mirrors the
+    #: process-global jit cache the single-chip steps get for free)
+    _FN_CACHE: dict = {}
+
+    def __init__(self, dcfg, mesh, seed: int = 0):
+        from repro.core import distributed as dist
+
+        self._dist = dist
+        self.dcfg = dcfg
+        self.mesh = mesh
+        self.cfg = dcfg.pfo
+        self.state = dist.dist_init_state(dcfg, jax.random.PRNGKey(seed),
+                                          mesh)
+        self.sync_count = 0
+        self.maintenance_log: list[str] = []
+        self.n_inserted = 0
+        # device-resident accumulator of query candidates dropped by
+        # owner-mailbox skew overflow (queries have no retry round);
+        # read back only when stats() is asked for
+        self._query_drops = jnp.int32(0)
+        self._flags: int | None = None
+        self._flags_caps = (0, 0)
+        self._ins: dict[int, Any] = {}
+        self._del: dict[int, Any] = {}
+        self._qry: dict[int, Any] = {}
+        self._seal_fn = self._cached(("seal",),
+                                     lambda: dist.make_dist_seal(dcfg, mesh))
+        self._merge_fn = self._cached(
+            ("merge",), lambda: dist.make_dist_merge(dcfg, mesh))
+        self._flags_fn = None
+
+    #: FIFO bound so a process cycling meshes/configs cannot pin every
+    #: compiled program (and its Mesh key) forever
+    _FN_CACHE_MAX = 256
+
+    def _cached(self, key: tuple, builder):
+        full = (self.dcfg, self.mesh) + key
+        fn = DistBackend._FN_CACHE.get(full)
+        if fn is None:
+            cache = DistBackend._FN_CACHE
+            while len(cache) >= self._FN_CACHE_MAX:
+                cache.pop(next(iter(cache)))
+            fn = cache[full] = builder()
+        return fn
+
+    # -- capacities / flags --------------------------------------------
+    def capacities(self, bucket: int) -> tuple[int, int]:
+        """Receive-side per-tree capacities == single-chip formulas, so
+        the per-tree mailbox scan stays as short as on one chip."""
+        cfg = self.cfg
+        total = cfg.L * cfg.n_trees
+        lsh = int(max(8, 2 * -(-bucket * cfg.L // total)))
+        main = int(max(8, 2 * -(-bucket // cfg.main_n_trees)))
+        return main, lsh
+
+    def route_capacities(self, bucket: int) -> tuple[int, int]:
+        """Per-destination-shard send mailboxes: sized for ~2x the even
+        spread; skew overflows surface as pending and retry."""
+        S = self.dcfg.n_model
+        rmain = int(max(8, 2 * -(-bucket // (S * S))))
+        rlsh = int(max(8, 2 * -(-bucket * self.cfg.L // (S * S))))
+        return rmain, rlsh
+
+    def set_flags_caps(self, fm: int, fl: int) -> None:
+        self._flags_caps = (fm, fl)
+        self._flags_fn = self._cached(
+            ("flags", fm, fl),
+            lambda: self._dist.make_dist_round_flags(self.dcfg, self.mesh,
+                                                     fm, fl))
+
+    def ensure_flags(self) -> int:
+        if self._flags is not None:
+            return self._flags
+        self.sync_count += 1
+        self._flags = int(jax.device_get(self._flags_fn(self.state)))
+        return self._flags
+
+    def read_flags(self, fw) -> int:
+        self.sync_count += 1
+        self._flags = int(jax.device_get(fw))
+        return self._flags
+
+    def maintain(self, flags: int) -> None:
+        if flags & FLAG_NEED_SEAL:
+            if flags & FLAG_SNAPS_FULL:
+                self.state = self._merge_fn(self.state)
+                self.maintenance_log.append("merge")
+            self.state = self._seal_fn(self.state)
+            self.maintenance_log.append("seal")
+        if flags & FLAG_TOMBS_FULL:
+            self.state = self._merge_fn(self.state)
+            self.maintenance_log.append("merge")
+        if flags & (FLAG_NEED_SEAL | FLAG_TOMBS_FULL):
+            self._flags = None       # state changed; carried word stale
+
+    # -- rounds ---------------------------------------------------------
+    def _insert_fn(self, bucket: int):
+        if bucket not in self._ins:
+            tm, tl = self.capacities(bucket)
+            rm, rl = self.route_capacities(bucket)
+            fm, fl = self._flags_caps
+            self._ins[bucket] = self._cached(
+                ("insert", rm, tm, rl, tl, fm, fl),
+                lambda: self._dist.make_dist_insert_round(
+                    self.dcfg, self.mesh, route_main=rm, tree_main=tm,
+                    route_lsh=rl, tree_lsh=tl, flags_main=fm, flags_lsh=fl))
+        return self._ins[bucket]
+
+    def _delete_fn(self, bucket: int):
+        if bucket not in self._del:
+            tm, tl = self.capacities(bucket)
+            _, rl = self.route_capacities(bucket)
+            fm, fl = self._flags_caps
+            self._del[bucket] = self._cached(
+                ("delete", tm, rl, tl, fm, fl),
+                lambda: self._dist.make_dist_delete_round(
+                    self.dcfg, self.mesh, tree_main=tm, route_lsh=rl,
+                    tree_lsh=tl, flags_main=fm, flags_lsh=fl))
+        return self._del[bucket]
+
+    def query_rows(self, qvecs, k: int):
+        if k not in self._qry:
+            self._qry[k] = self._cached(
+                ("query", k),
+                lambda: self._dist.make_dist_query(self.dcfg, self.mesh, k,
+                                                   with_drop_count=True))
+        ids, dists, dropped = self._qry[k](self.state, qvecs)
+        self._query_drops = self._query_drops + dropped   # stays on device
+        return ids, dists
+
+    def insert_begin(self, bucket: int):
+        return None                       # slots live at the owner shard
+
+    def insert_round(self, ids, vecs, carry, main_active, lsh_active,
+                     bucket: int):
+        self.state, ma, la, fw = self._insert_fn(bucket)(
+            self.state, ids, vecs, main_active, lsh_active)
+        return carry, ma, la, fw
+
+    def delete_round(self, ids, active, bucket: int):
+        self.state, pending, fw = self._delete_fn(bucket)(self.state, ids,
+                                                          active)
+        return pending, fw
+
+    def count_insert(self, n: int) -> None:
+        self.n_inserted += n
+
+    # -- epochs ---------------------------------------------------------
+    def force_seal(self) -> None:
+        self.state = self._seal_fn(self.state)
+        self._flags = None
+
+    def force_merge(self) -> None:
+        self.state = self._merge_fn(self.state)
+        self._flags = None
+
+    # -- warmup ---------------------------------------------------------
+    def warmup(self, buckets, qcap: int, default_k: int) -> None:
+        cfg = self.cfg
+        for b in buckets:
+            ids = jnp.zeros((b,), jnp.int32)
+            vecs = jnp.zeros((b, cfg.dim), jnp.float32)
+            off = jnp.zeros((b,), bool)
+            r = self._insert_fn(b)(self.state, ids, vecs, off,
+                                   jnp.zeros((b * cfg.L,), bool))
+            jax.block_until_ready(r[-1])           # state discarded
+            r = self._delete_fn(b)(self.state, ids, off)
+            jax.block_until_ready(r[-1])
+            if b <= qcap:
+                jax.block_until_ready(self.query_rows(vecs, default_k))
+        jax.block_until_ready(self._flags_fn(self.state))
+        scratch = self._dist.dist_init_state(self.dcfg,
+                                             jax.random.PRNGKey(0),
+                                             self.mesh)
+        jax.block_until_ready(self._merge_fn(self._seal_fn(scratch)))
+
+    def stats(self) -> dict:
+        st = self.state
+        return {
+            "items_hot": int(np.asarray(st.main_forest.n_items).sum()),
+            "lsh_leaves": int(np.asarray(st.lsh_forest.n_items).sum()),
+            "snapshots": int(np.asarray(st.main_snaps.n_snaps).max()),
+            "tombstones": int(st.n_tombstones),
+            "store_free": int(np.asarray(st.store.free_top).sum()),
+            "overflow_events": int(np.asarray(st.lsh_forest.overflow).sum()),
+            "query_candidate_drops": int(jax.device_get(self._query_drops)),
+            "stamp": int(st.stamp),
+        }
+
+
+# ======================================================================
+# multi-client handles (per-client ticket spaces — module docstring)
+# ======================================================================
+class StreamClient:
+    """A submitter handle with its own FIFO queue and ticket space."""
+
+    def __init__(self, engine: "StreamEngine", cid: int):
+        self._engine = engine
+        self.cid = cid
+        self._buf: list[tuple[int, str, Any]] = []
+        self._seq = 0
+
     def _enqueue(self, kind: str, payload) -> int:
-        t = self._next_ticket
-        self._next_ticket += 1
-        self._queue.append((t, kind, payload))
-        self.n_requests += 1
+        t = client_ticket(self.cid, self._seq)
+        self._seq += 1
+        self._buf.append((t, kind, payload))
+        self._engine.n_requests += 1
         return t
 
     def query(self, vec, k: int | None = None) -> int:
-        vec = np.asarray(vec, np.float32).reshape(self._dim)
-        return self._enqueue(QUERY, (vec, int(k or self.scfg.default_k)))
+        e = self._engine
+        vec = np.asarray(vec, np.float32).reshape(e._dim)
+        return self._enqueue(QUERY, (vec, int(k or e.scfg.default_k)))
 
     def insert(self, vid: int, vec) -> int:
-        vec = np.asarray(vec, np.float32).reshape(self._dim)
+        vec = np.asarray(vec, np.float32).reshape(self._engine._dim)
         return self._enqueue(INSERT, (int(vid), vec))
 
     def delete(self, vid: int) -> int:
         return self._enqueue(DELETE, int(vid))
 
     def update(self, vid: int, vec) -> int:
-        """Online update (paper §5): new version written, old reclaimed."""
-        vec = np.asarray(vec, np.float32).reshape(self._dim)
+        vec = np.asarray(vec, np.float32).reshape(self._engine._dim)
         return self._enqueue(UPDATE, (int(vid), vec))
+
+    def pending(self) -> int:
+        return len(self._buf)
+
+    def result(self, ticket: int):
+        return self._engine.result(ticket)
+
+
+# ======================================================================
+# the engine
+# ======================================================================
+class StreamEngine:
+    """Online query/update front-end over a backend (see module doc).
+
+    Submission enqueues and returns a ticket immediately; :meth:`flush`
+    drains the stream in order and materializes results.  ``stats()``
+    exposes round/readback/maintenance counters — including per-kind
+    round counts and readbacks-per-round, so the one-readback-per-round
+    invariant is assertable from tests.
+    """
+
+    MAX_ROUNDS = PFOIndex.MAX_ROUNDS
+
+    def __init__(self, index, scfg: StreamConfig | None = None):
+        self.backend = index if hasattr(index, "insert_round") \
+            else LocalBackend(index)
+        self.index = getattr(self.backend, "index", None)
+        self.scfg = scfg or StreamConfig()
+        cfg = self.backend.cfg
+        mb = self.scfg.max_batch
+        # flag-word headroom is computed against the worst-case bucket
+        # so one carried word stays valid across bucket sizes
+        self.backend.set_flags_caps(*self.backend.capacities(mb))
+        # query chunk cap resolved against the index's traversal mode
+        # (masked traversal: queries follow max_batch — no lockstep
+        # penalty left to work around)
+        self._query_cap = self.scfg.query_cap(cfg.traversal)
+        self._clients: list[StreamClient] = []
+        self._self_client = StreamClient(self, 0)
+        self._results: dict[int, Any] = {}
+        self.events: list[tuple[str, int]] = []        # (epoch kind, flush#)
+        self.n_flushes = 0
+        self.n_batches = 0
+        self.n_rounds = 0
+        self.n_requests = 0
+        self.n_rounds_by_kind = {QUERY: 0, INSERT: 0, DELETE: 0, UPDATE: 0}
+        self._dim = cfg.dim
+
+    # ------------------------------------------------------------------
+    # warmup: precompile every (op, bucket) variant + maintenance steps
+    # ------------------------------------------------------------------
+    def warmup(self) -> None:
+        """Compile all step variants the engine can ever dispatch, so no
+        jit compile lands inside a serving round.  Uses all-inactive
+        batches (state untouched) and a scratch state for seal/merge."""
+        self.backend.warmup(self.scfg.buckets, self._query_cap,
+                            self.scfg.default_k)
+
+    # ------------------------------------------------------------------
+    # submission (the request stream)
+    # ------------------------------------------------------------------
+    def client(self) -> StreamClient:
+        """Open a new client handle with its own ticket space (see the
+        multi-client contract in the module docstring)."""
+        c = StreamClient(self, len(self._clients) + 1)
+        self._clients.append(c)
+        return c
+
+    def query(self, vec, k: int | None = None) -> int:
+        return self._self_client.query(vec, k)
+
+    def insert(self, vid: int, vec) -> int:
+        return self._self_client.insert(vid, vec)
+
+    def delete(self, vid: int) -> int:
+        return self._self_client.delete(vid)
+
+    def update(self, vid: int, vec) -> int:
+        """Online update (paper §5): new version written, old reclaimed."""
+        return self._self_client.update(vid, vec)
 
     # ------------------------------------------------------------------
     # draining
     # ------------------------------------------------------------------
     def pending(self) -> int:
-        return len(self._queue)
+        return (len(self._self_client._buf)
+                + sum(len(c._buf) for c in self._clients))
 
     def result(self, ticket: int):
         """Result for ``ticket`` (flushes if still queued)."""
@@ -222,12 +608,22 @@ class StreamEngine:
             self.flush()
         return self._results.pop(ticket)
 
+    def _ingest(self) -> list:
+        """Merge the per-client queues into this flush's round."""
+        queues = [self._self_client._buf] + [c._buf for c in self._clients]
+        live = [q for q in queues if q]
+        merged = list(live[0]) if len(live) == 1 \
+            else merge_client_queues(live)
+        for q in queues:
+            q.clear()
+        return merged
+
     def flush(self) -> dict[int, Any]:
         """Drain the queue; returns {ticket: result} for every request
         processed by this flush.  ``window`` ordering applies the
         window's updates first (in order), then all queries; ``strict``
         keeps exact submission order (see module docstring)."""
-        queue, self._queue = self._queue, []
+        queue = self._ingest()
         out: dict[int, Any] = {}
         if self.scfg.ordering == "window":
             updates = [r for r in queue if r[1] != QUERY]
@@ -321,89 +717,124 @@ class StreamEngine:
         return self._query_cap if kind == QUERY else self.scfg.max_batch
 
     def _run_chunks(self, run: list, kind: str, out: dict) -> None:
-        for chunk, bucket in self._chunks(run, self._cap_for(kind)):
+        chunks = list(self._chunks(run, self._cap_for(kind)))
+        if not chunks:
+            return
+        packed = self._pack(kind, *chunks[0])
+        for i, (chunk, bucket) in enumerate(chunks):
+            # double-buffer hook: the batch methods call this between
+            # their first device dispatch and the first (blocking)
+            # flag/result readback, so batch t+1's host packing hides
+            # under batch t's device execution
+            hold: dict = {}
+            overlap = None
+            if self.scfg.async_rounds and i + 1 < len(chunks):
+                nxt = chunks[i + 1]
+
+                def overlap(nxt=nxt, hold=hold):
+                    hold["p"] = self._pack(kind, *nxt)
+
             if kind == QUERY:
-                self._query_batch(chunk, bucket, out)
+                self._query_batch(packed, chunk, bucket, out, overlap)
             elif kind == INSERT:
-                self._insert_batch(chunk, bucket, out)
+                self._insert_batch(packed, chunk, bucket, out,
+                                   INSERT, overlap)
             elif kind == DELETE:
-                self._delete_batch(chunk, bucket, out)
+                self._delete_batch(packed, chunk, bucket, out,
+                                   DELETE, overlap)
             else:                                           # UPDATE
-                self._delete_batch(chunk, bucket, None)
-                self._insert_batch(chunk, bucket, out)
+                self._delete_batch(packed["del"], chunk, bucket, None,
+                                   UPDATE, overlap)
+                self._insert_batch(packed["ins"], chunk, bucket, out,
+                                   UPDATE, None)
             self.n_batches += 1
+            if i + 1 < len(chunks):
+                packed = hold.get("p") or self._pack(kind, *chunks[i + 1])
+
+    # ------------------------------------------------------------------
+    # host-side batch packing (the half that double-buffers)
+    # ------------------------------------------------------------------
+    def _pack(self, kind: str, chunk: list, bucket: int):
+        if kind == QUERY:
+            q = np.zeros((bucket, self._dim), np.float32)
+            for r, (_, _, (vec, _)) in enumerate(chunk):
+                q[r] = vec
+            return (jnp.asarray(q), chunk[0][2][1])
+        if kind == INSERT or kind == UPDATE:
+            ids = np.zeros((bucket,), np.int32)
+            vecs = np.zeros((bucket, self._dim), np.float32)
+            mask = np.zeros((bucket,), bool)
+            for r, (_, _, (vid, vec)) in enumerate(chunk):
+                ids[r], vecs[r], mask[r] = vid, vec, True
+            ins = (jnp.asarray(ids), jnp.asarray(vecs), jnp.asarray(mask))
+            if kind == INSERT:
+                return ins
+            return {"del": (ins[0], ins[2]), "ins": ins}
+        # DELETE
+        ids = np.zeros((bucket,), np.int32)
+        mask = np.zeros((bucket,), bool)
+        for r, (_, rkind, payload) in enumerate(chunk):
+            ids[r] = payload if rkind == DELETE else payload[0]
+            mask[r] = True
+        return (jnp.asarray(ids), jnp.asarray(mask))
 
     # ------------------------------------------------------------------
     # device rounds (all flag-word driven; see module docstring)
     # ------------------------------------------------------------------
     def _maintain(self, flags: int) -> None:
-        before = len(self.index.maintenance_log)
-        self.index._maintain(flags)
-        for ev in self.index.maintenance_log[before:]:
+        before = len(self.backend.maintenance_log)
+        self.backend.maintain(flags)
+        for ev in self.backend.maintenance_log[before:]:
             self.events.append((ev, self.n_flushes))
 
-    def _ensure_flags(self) -> int:
-        fm, fl = self._flags_caps
-        return self.index._ensure_flags(fm, fl)
-
-    def _query_batch(self, chunk: list, bucket: int, out: dict) -> None:
-        idx = self.index
-        k = chunk[0][2][1]
-        q = np.zeros((bucket, self._dim), np.float32)
-        for r, (_, _, (vec, _)) in enumerate(chunk):
-            q[r] = vec
-        ids, dists = query_step(idx.state, jnp.asarray(q), idx.cfg, k)
+    def _query_batch(self, packed, chunk: list, bucket: int, out: dict,
+                     overlap=None) -> None:
+        q_d, k = packed
+        ids, dists = self.backend.query_rows(q_d, k)
+        self.n_rounds_by_kind[QUERY] += 1
+        if overlap is not None:
+            overlap()
         ids, dists = jax.device_get((ids, dists))
         for r, (ticket, _, _) in enumerate(chunk):
             out[ticket] = (ids[r], dists[r])
 
-    def _insert_batch(self, chunk: list, bucket: int, out) -> None:
-        idx, cfg = self.index, self.index.cfg
-        mcap, lcap = self._caps[bucket]
-        fm, fl = self._flags_caps
-        ids = np.zeros((bucket,), np.int32)
-        vecs = np.zeros((bucket, self._dim), np.float32)
-        mask = np.zeros((bucket,), bool)
-        for r, (_, _, (vid, vec)) in enumerate(chunk):
-            ids[r], vecs[r], mask[r] = vid, vec, True
-        ids_d = jnp.asarray(ids)
-        vecs_d = jnp.asarray(vecs)
-        slots = jnp.full((bucket,), -2, jnp.int32)
-        main_active = jnp.asarray(mask)
-        lsh_active = jnp.repeat(main_active, cfg.L)
-        flags = self._ensure_flags()
-        for _ in range(self.MAX_ROUNDS):
+    def _insert_batch(self, packed, chunk: list, bucket: int, out,
+                      stat_kind: str = INSERT, overlap=None) -> None:
+        be = self.backend
+        ids_d, vecs_d, mask = packed
+        carry = be.insert_begin(bucket)
+        main_active = mask
+        lsh_active = jnp.repeat(mask, be.cfg.L)
+        flags = be.ensure_flags()
+        for r in range(self.MAX_ROUNDS):
             self._maintain(flags)
-            idx.state, slots, main_active, lsh_active, fw = insert_step(
-                idx.state, ids_d, vecs_d, slots, main_active, lsh_active,
-                cfg, mcap, lcap, fm, fl)
+            carry, main_active, lsh_active, fw = be.insert_round(
+                ids_d, vecs_d, carry, main_active, lsh_active, bucket)
             self.n_rounds += 1
-            flags = idx._read_flags(fw, (fm, fl))
+            self.n_rounds_by_kind[stat_kind] += 1
+            if r == 0 and overlap is not None:
+                overlap()
+            flags = be.read_flags(fw)
             if not flags & FLAG_ANY_PENDING:
                 break
-        idx.n_inserted += len(chunk)
+        be.count_insert(len(chunk))
         if out is not None:
             for ticket, _, _ in chunk:
                 out[ticket] = "ok"
 
-    def _delete_batch(self, chunk: list, bucket: int, out) -> None:
-        idx, cfg = self.index, self.index.cfg
-        mcap, lcap = self._caps[bucket]
-        fm, fl = self._flags_caps
-        ids = np.zeros((bucket,), np.int32)
-        mask = np.zeros((bucket,), bool)
-        for r, (_, kind, payload) in enumerate(chunk):
-            ids[r] = payload if kind == DELETE else payload[0]
-            mask[r] = True
-        ids_d = jnp.asarray(ids)
-        active = jnp.asarray(mask)
-        flags = self._ensure_flags()
-        for _ in range(self.MAX_ROUNDS):
+    def _delete_batch(self, packed, chunk: list, bucket: int, out,
+                      stat_kind: str = DELETE, overlap=None) -> None:
+        be = self.backend
+        ids_d, active = packed
+        flags = be.ensure_flags()
+        for r in range(self.MAX_ROUNDS):
             self._maintain(flags)
-            idx.state, pending, fw = delete_step(
-                idx.state, ids_d, active, cfg, mcap, lcap, fm, fl)
+            pending, fw = be.delete_round(ids_d, active, bucket)
             self.n_rounds += 1
-            flags = idx._read_flags(fw, (fm, fl))
+            self.n_rounds_by_kind[stat_kind] += 1
+            if r == 0 and overlap is not None:
+                overlap()
+            flags = be.read_flags(fw)
             if not flags & FLAG_ANY_PENDING:
                 break
             active = pending
@@ -416,27 +847,55 @@ class StreamEngine:
     # ------------------------------------------------------------------
     def seal(self) -> None:
         """Force a seal epoch (hot tier -> sealed snapshots)."""
-        self.index.state = seal_step(self.index.state, self.index.cfg)
-        self.index._flags = None
+        self.backend.force_seal()
         self.events.append(("seal", self.n_flushes))
 
     def merge(self) -> None:
         """Force a merge epoch (compaction + tombstone drain)."""
-        self.index.state = merge_step(self.index.state, self.index.cfg)
-        self.index._flags = None
+        self.backend.force_merge()
         self.events.append(("merge", self.n_flushes))
 
     def stats(self) -> dict:
+        update_rounds = self.n_rounds
+        readbacks = self.backend.sync_count
         return {
             "requests": self.n_requests,
             "flushes": self.n_flushes,
             "batches": self.n_batches,
             "rounds": self.n_rounds,
-            "syncs": self.index.sync_count,
+            "rounds_by_kind": dict(self.n_rounds_by_kind),
+            "readbacks": readbacks,
+            # steady state this is exactly 1.0; warmup/capacity-growth
+            # flag probes can push it epsilon above (assert on deltas)
+            "readbacks_per_round": round(readbacks / update_rounds, 4)
+            if update_rounds else 0.0,
+            "syncs": readbacks,
             "seals": sum(1 for e, _ in self.events if e == "seal"),
             "merges": sum(1 for e, _ in self.events if e == "merge"),
             "buckets": list(self.scfg.buckets),
+            "clients": 1 + len(self._clients),
         }
+
+
+class DistStreamEngine(StreamEngine):
+    """Distributed stream engine: the same bucket/ordering/flag-word
+    machinery serving an interleaved stream against a mesh-sharded
+    ``PFOState`` (see the backend-interface section of the module
+    docstring).  Construct with a ``core.distributed.DistConfig`` and a
+    ``(data, model)`` mesh (``sharding.policy.stream_mesh`` builds one
+    on host-platform virtual devices for tests/CI)."""
+
+    def __init__(self, dcfg, mesh=None, scfg: StreamConfig | None = None,
+                 seed: int = 0):
+        if mesh is None:
+            from repro.sharding.policy import stream_mesh
+            mesh = stream_mesh(dcfg.n_model)
+        scfg = scfg or StreamConfig()
+        n_data = int(np.prod([mesh.devices.shape[mesh.axis_names.index(a)]
+                              for a in dcfg.batch_axes]))
+        assert scfg.min_batch % n_data == 0, \
+            "query buckets must divide across the batch axes"
+        super().__init__(DistBackend(dcfg, mesh, seed=seed), scfg)
 
 
 # ======================================================================

@@ -108,6 +108,30 @@ def _batch_axes(mesh: Mesh) -> tuple:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
+def stream_mesh(n_model: int, n_data: int = 1,
+                axis_names: tuple = ("data", "model")) -> Mesh:
+    """(data, model) mesh for the distributed stream engine.
+
+    Built through :func:`repro.compat.make_mesh` so it works on real
+    accelerator meshes and on host-platform virtual devices alike
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=N`` — the CI
+    lane the distributed stream tests run under).  Raises with the
+    exact flag to set when the platform exposes too few devices.
+    """
+    from repro import compat
+
+    need = n_model * n_data
+    have = jax.device_count()
+    if have < need:
+        raise RuntimeError(
+            f"stream_mesh({n_data}x{n_model}) needs {need} devices, "
+            f"platform has {have}; on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need} before "
+            "importing jax")
+    return compat.make_mesh((n_data, n_model), axis_names,
+                            devices=jax.devices()[:need])
+
+
 def estimate_param_bytes(spec_tree, bytes_per: int = 2) -> int:
     total = 0
     for s in jax.tree.leaves(

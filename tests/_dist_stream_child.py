@@ -1,0 +1,153 @@
+"""Differential dist-stream driver, run in a SUBPROCESS with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the flag must
+be set before jax initializes, which the main pytest process already
+did on one device — see ``tests/test_dist_stream.py``).
+
+Replays identical interleaved query/insert/delete/update traces —
+with duplicate ids, delete-then-reinsert, update storms and forced
+seal/merge epochs — through a single-chip :class:`StreamEngine` and a
+:class:`DistStreamEngine` on a (data=2, model=4) mesh, and requires
+every ticket's result to match exactly (query neighbor ids, distances
+to 1e-5, update acks).  Also asserts the distributed steady-state
+one-readback-per-round invariant under the JAX transfer guard.
+
+Prints one JSON line; exit code 0 == all assertions held.
+"""
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from conftest import unit_vec as _unit          # noqa: E402
+
+
+def run_trace(ordering: str, n_ops: int, seed: int):
+    import jax
+    from conftest import small_pfo_config
+    from repro.core import DistConfig, PFOIndex
+    from repro.serving import DistStreamEngine, StreamConfig, StreamEngine
+    from repro.sharding.policy import stream_mesh
+
+    dim = 16
+    # tiny arenas so sustained inserts force seal epochs through the
+    # flag word; small tombstone buffer so deletes force merges; budgets
+    # generous enough that no candidate truncation binds (exactness)
+    cfg = small_pfo_config(
+        dim=dim, L=2, C=1, m=2, main_m=2,
+        max_leaves_per_tree=24, max_nodes_per_tree=32,
+        main_max_leaves_per_tree=256, store_capacity=4096,
+        max_candidates_per_probe=32, max_candidates_total=256,
+        snap_budget_per_probe=32, max_snapshots=6, max_tombstones=48)
+    mesh = stream_mesh(4, n_data=2)
+    dcfg = DistConfig(pfo=cfg, batch_axes=("data",), n_model=4)
+    scfg = StreamConfig(max_batch=16, min_batch=16, default_k=5,
+                        ordering=ordering)
+    deng = DistStreamEngine(dcfg, mesh, scfg, seed=0)
+    seng = StreamEngine(PFOIndex(cfg, seed=0), scfg)
+    deng.warmup()
+    seng.warmup()
+
+    rng = np.random.default_rng(seed)
+    ver: dict[int, int] = {}
+    live: set[int] = set()
+    pairs: list[tuple[int, int]] = []
+    for step in range(n_ops):
+        kind = rng.choice(5, p=[.3, .3, .15, .15, .1])
+        i = int(rng.integers(0, 96))
+        if kind == 0 and live:
+            j = sorted(live)[int(rng.integers(0, len(live)))]
+            q = _unit(j, ver[j], dim) \
+                + rng.normal(size=(dim,)).astype(np.float32) * 0.05
+            pairs.append((deng.query(q, k=5), seng.query(q, k=5)))
+        elif kind == 1:
+            ver[i] = ver.get(i, 0) + 1        # duplicate-id re-inserts
+            x = _unit(i, ver[i], dim)
+            pairs.append((deng.insert(i, x), seng.insert(i, x)))
+            live.add(i)
+        elif kind == 2 and live:
+            j = sorted(live)[int(rng.integers(0, len(live)))]
+            pairs.append((deng.delete(j), seng.delete(j)))
+            live.discard(j)                   # delete-then-reinsert later
+        elif kind == 3 and live:
+            j = sorted(live)[int(rng.integers(0, len(live)))]
+            for _ in range(int(rng.integers(1, 4))):   # update storms
+                ver[j] += 1
+                x = _unit(j, ver[j], dim)
+                pairs.append((deng.update(j, x), seng.update(j, x)))
+        elif kind == 4:
+            # forced maintenance epochs mid-stream, applied to both
+            deng.flush(), seng.flush()
+            if rng.random() < 0.5:
+                deng.seal(), seng.seal()
+            else:
+                deng.merge(), seng.merge()
+        if rng.random() < 0.12:
+            deng.flush(), seng.flush()
+    deng.flush(), seng.flush()
+
+    mism = 0
+    for td, ts in pairs:
+        a, b = deng.result(td), seng.result(ts)
+        if isinstance(b, str):
+            assert a == b, (td, a, b)
+        elif not (np.array_equal(a[0], b[0])
+                  and np.allclose(a[1], b[1], atol=1e-5)):
+            mism += 1
+    dst, sst = deng.stats(), seng.stats()
+    # the exact-equality assertion is only meaningful if no candidate
+    # was dropped by owner-mailbox skew overflow
+    drops = deng.backend.stats()["query_candidate_drops"]
+    return {
+        "ordering": ordering, "ops": n_ops, "checked": len(pairs),
+        "mismatches": mism, "query_candidate_drops": drops,
+        "dist_seals": dst["seals"], "dist_merges": dst["merges"],
+        "single_seals": sst["seals"], "single_merges": sst["merges"],
+        "dist_rounds_by_kind": dst["rounds_by_kind"],
+    }, deng
+
+
+def steady_state_readbacks(deng) -> dict:
+    """Warm engine: one explicit scalar readback per round, nothing
+    implicit (transfer guard)."""
+    import jax
+
+    dim = deng.backend.cfg.dim
+    for i in range(16):
+        deng.insert(3000 + i, _unit(3000 + i, 1, dim))
+    deng.flush()
+    for i in range(16):
+        deng.insert(3100 + i, _unit(3100 + i, 1, dim))
+    st0 = deng.stats()
+    with jax.transfer_guard_device_to_host("disallow"):
+        deng.flush()
+    st1 = deng.stats()
+    return {"rounds": st1["rounds"] - st0["rounds"],
+            "readbacks": st1["readbacks"] - st0["readbacks"]}
+
+
+def main():
+    sys.path.insert(0, os.path.dirname(__file__))
+    import jax
+
+    assert jax.device_count() >= 8, \
+        f"child needs 8 virtual devices, got {jax.device_count()}"
+    orderings = sys.argv[1:] or ["window", "strict"]
+    out = {}
+    deng = None
+    for ordering in orderings:
+        rec, deng = run_trace(ordering, n_ops=220, seed=11)
+        assert rec["mismatches"] == 0, rec
+        assert rec["query_candidate_drops"] == 0, rec
+        assert rec["dist_seals"] == rec["single_seals"] >= 1, rec
+        assert rec["dist_merges"] == rec["single_merges"] >= 1, rec
+        out[ordering] = rec
+    rb = steady_state_readbacks(deng)
+    assert rb["rounds"] >= 1 and rb["readbacks"] == rb["rounds"], rb
+    out["steady_state"] = rb
+    print("DIST_STREAM_RESULT " + json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,15 @@ def integers(min_value: int, max_value: int) -> _Strategy:
     return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
 
 
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def sampled_from(seq) -> _Strategy:
+    items = list(seq)
+    return _Strategy(lambda rng: items[int(rng.integers(0, len(items)))])
+
+
 def lists(elem: _Strategy, min_size: int = 0, max_size: int = 10,
           unique: bool = False) -> _Strategy:
     # clamp: fallback examples run eagerly (no hypothesis shrinking or
@@ -91,4 +100,6 @@ def given(*strategies: _Strategy):
     return deco
 
 
-strategies = types.SimpleNamespace(integers=integers, lists=lists, data=data)
+strategies = types.SimpleNamespace(integers=integers, lists=lists, data=data,
+                                   booleans=booleans,
+                                   sampled_from=sampled_from)

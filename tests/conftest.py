@@ -9,6 +9,18 @@ def rng():
     return np.random.default_rng(0)
 
 
+def unit_vec(i: int, ver: int, dim: int,
+             salt: int = 7_000_003) -> np.ndarray:
+    """Deterministic per-(id, version) unit vector, shared by the
+    differential/property harnesses (and their subprocess children) so
+    oracle and engines always replay identical traces; distinct
+    (i, ver) pairs give distinct vectors, so exact distance ties cannot
+    make top-k order ambiguous."""
+    r = np.random.default_rng(salt * i + ver)
+    x = r.normal(size=(dim,)).astype(np.float32)
+    return x / np.linalg.norm(x)
+
+
 def small_pfo_config(**kw):
     from repro.core import PFOConfig
     base = dict(dim=16, L=3, C=2, m=2, l=16, t=4,

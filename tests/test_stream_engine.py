@@ -1,13 +1,19 @@
 """Stream engine tests: interleaved-stream equivalence vs. sequential
 PFOIndex calls, ragged-bucket padding, device-resident rounds (single
-explicit scalar sync, no implicit device->host transfers), and the
-bounded jit cache."""
+explicit scalar sync, no implicit device->host transfers), the bounded
+jit cache, and a property-based stream-semantics harness checked
+against a brute-force dict+linear-scan oracle (runs under the
+no-hypothesis deterministic fallback in ``tests/_prop.py``)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # optional dep: deterministic fallback
+    from _prop import given, settings, strategies as st
 
-from conftest import small_pfo_config
+from conftest import small_pfo_config, unit_vec
 from repro.core import PFOIndex
 from repro.core.index import delete_step, insert_step
 from repro.serving import StreamConfig, StreamEngine
@@ -253,6 +259,188 @@ def test_duplicate_deletes_in_one_window_do_not_corrupt_store():
     for vid, t in zip((100, 101), tickets):
         ids, d = res[t]
         assert ids[0] == vid and d[0] < 1e-5, (vid, ids, d)
+
+
+def test_stats_report_per_kind_rounds_and_readbacks():
+    """stats() exposes per-kind round counts and readbacks, and a warm
+    steady-state flush does exactly one readback per round — assertable
+    from the engine alone (previously only via PFOIndex.sync_count)."""
+    cfg = small_pfo_config()
+    v = _vecs(200, cfg.dim, seed=11)
+    eng = _engine(cfg, max_batch=64, min_batch=64, query_max_batch=64)
+    for i in range(64):
+        eng.insert(i, v[i])
+    eng.flush()
+    for i in range(10):
+        eng.query(v[i], k=3)
+    for i in range(3):
+        eng.delete(i)
+    for i in range(3, 6):
+        eng.update(i, v[100 + i])
+    eng.flush()
+    st = eng.stats()
+    rbk = st["rounds_by_kind"]
+    assert rbk["insert"] >= 1 and rbk["delete"] >= 1
+    assert rbk["update"] >= 2            # delete half + insert half
+    assert rbk["query"] >= 1
+    assert st["rounds"] == rbk["insert"] + rbk["delete"] + rbk["update"]
+    assert st["readbacks"] == eng.index.sync_count
+    # steady state: readbacks-per-round is exactly 1 on the deltas
+    for i in range(64, 128):
+        eng.insert(i, v[i])
+    before = eng.stats()
+    eng.flush()
+    after = eng.stats()
+    d_rounds = after["rounds"] - before["rounds"]
+    assert d_rounds >= 1
+    assert after["readbacks"] - before["readbacks"] == d_rounds
+
+
+# ======================================================================
+# property-based stream semantics vs a brute-force dict oracle
+# ======================================================================
+def _uvec(i: int, ver: int, dim: int) -> np.ndarray:
+    return unit_vec(i, ver, dim, salt=9_000_011)
+
+
+def _angular(q: np.ndarray, x: np.ndarray) -> float:
+    qn = q / max(np.linalg.norm(q), 1e-9)
+    xn = x / max(np.linalg.norm(x), 1e-9)
+    return float(1.0 - qn @ xn)
+
+
+def _check_query(res_ids, res_d, q, store: dict, exact_id):
+    """Oracle checks for one query result against the dict snapshot:
+    only live ids surface, every reported distance equals the true
+    distance to that id's *current* version (linear-scan oracle),
+    distances are sorted, and an exact self-probe ranks its id first
+    at distance ~0."""
+    live = res_ids >= 0
+    ids = res_ids[live]
+    assert len(ids) == len(set(ids.tolist()))          # no duplicates
+    for vid, dist in zip(ids, res_d[live]):
+        assert int(vid) in store, f"ghost id {vid} (deleted or never live)"
+        true = _angular(q, store[int(vid)])
+        assert abs(float(dist) - true) < 1e-4, \
+            f"id {vid}: reported {dist} vs oracle {true} (stale version?)"
+    dd = res_d[live]
+    assert np.all(np.diff(dd) >= -1e-6)                # sorted by distance
+    if exact_id is not None and exact_id in store \
+            and np.allclose(q, store[exact_id]):
+        # q is (still) the exact stored vector: its id must rank first
+        assert int(res_ids[0]) == exact_id and float(res_d[0]) < 1e-5
+
+
+def _property_trace(data, ordering: str):
+    cfg = small_pfo_config(max_tombstones=48)
+    eng = _engine(cfg, max_batch=16, min_batch=8, default_k=5,
+                  ordering=ordering)
+    dim = cfg.dim
+    strict = ordering == "strict"
+    store: dict[int, np.ndarray] = {}      # the dict+linear-scan oracle
+    win_updates: list = []                 # window mode: applied at flush
+    win_queries: list = []                 # (ticket, q, exact_id, snapshot)
+    ver: dict[int, int] = {}
+    acks: list[int] = []
+
+    def apply(kind, vid):
+        if kind == "delete":
+            store.pop(vid, None)
+        else:
+            store[vid] = _uvec(vid, ver[vid], dim)
+
+    def submit_update(kind, vid):
+        # strict: a query sees exactly its submission-point prefix, so
+        # the oracle applies immediately; window: the whole window's
+        # updates apply before any of its queries -> buffer until flush
+        if strict:
+            apply(kind, vid)
+        else:
+            win_updates.append((kind, vid))
+
+    def flush_and_check():
+        res = eng.flush()
+        for kind, vid in win_updates:
+            apply(kind, vid)
+        win_updates.clear()
+        for ticket, q, exact, snap in win_queries:
+            ids, d = res[ticket]
+            _check_query(ids, d, q, snap if strict else store, exact)
+        win_queries.clear()
+        for t in acks:
+            assert res[t] == "ok"
+        acks.clear()
+
+    n_ops = data.draw(st.integers(16, 28))
+    for _ in range(n_ops):
+        op = data.draw(st.sampled_from(
+            ["insert", "insert", "query", "query", "delete", "update",
+             "update", "reinsert", "epoch", "flush"]))
+        vid = data.draw(st.integers(0, 11))     # small domain: duplicates
+        visible = sorted(set(store)
+                         | {v for k, v in win_updates if k != "delete"})
+        if op in ("insert", "reinsert"):        # incl. delete-then-reinsert
+            ver[vid] = ver.get(vid, 0) + 1
+            if vid in visible:
+                # replacing a live id goes through update (delete +
+                # insert): a bare duplicate insert leaves two same-id
+                # copies whose order a same-stamp seal cannot preserve
+                acks.append(eng.update(vid, _uvec(vid, ver[vid], dim)))
+            else:
+                acks.append(eng.insert(vid, _uvec(vid, ver[vid], dim)))
+            submit_update("upsert", vid)
+        elif op == "query" and visible:
+            if data.draw(st.booleans()):
+                j = visible[data.draw(st.integers(0, len(visible) - 1))]
+                q, exact_id = _uvec(j, ver[j], dim), j
+            else:
+                q = _uvec(900 + vid, 1, dim) \
+                    + np.float32(0.05) * _uvec(901 + vid, 2, dim)
+                exact_id = None
+            snap = dict(store) if strict else None
+            win_queries.append((eng.query(q, k=5), q, exact_id, snap))
+        elif op == "delete" and visible:
+            j = visible[data.draw(st.integers(0, len(visible) - 1))]
+            acks.append(eng.delete(j))
+            submit_update("delete", j)
+        elif op == "update" and visible:
+            j = visible[data.draw(st.integers(0, len(visible) - 1))]
+            for _ in range(data.draw(st.integers(1, 3))):   # update storm
+                ver[j] += 1
+                acks.append(eng.update(j, _uvec(j, ver[j], dim)))
+            submit_update("upsert", j)
+        elif op == "epoch":
+            flush_and_check()               # epochs land between rounds
+            if data.draw(st.booleans()):
+                eng.seal()
+            else:
+                eng.merge()
+        elif op == "flush":
+            flush_and_check()
+    flush_and_check()
+    # invariant sweep: every surviving id still answers a self-probe
+    for j in sorted(store)[:4]:
+        t = eng.query(_uvec(j, ver[j], dim), k=5)
+        res = eng.flush()
+        ids, d = res[t]
+        assert int(ids[0]) == j and float(d[0]) < 1e-5
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.data())
+def test_property_stream_vs_oracle_window(data):
+    """Hypothesis-generated interleaved traces (duplicate ids,
+    delete-then-reinsert, update storms, forced seal/merge mid-stream)
+    against the dict+linear-scan oracle, window ordering."""
+    _property_trace(data, "window")
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.data())
+def test_property_stream_vs_oracle_strict(data):
+    """Same trace family under strict ordering: each query is checked
+    against the oracle snapshot at its submission point."""
+    _property_trace(data, "strict")
 
 
 def test_maintenance_runs_as_engine_events():

@@ -189,6 +189,75 @@ def clustered_index():
     return idx, vecs
 
 
+# ======================================================================
+# recall under churn (streaming insert/delete across seal+merge epochs)
+# ======================================================================
+@pytest.fixture(scope="module")
+def churned_index():
+    """Sustained insert/delete cycling: 6 waves of 120 clustered
+    inserts, each deleting half of the wave before last — driving the
+    index through >= 2 natural seal epochs and a merge (tiny arenas;
+    asserted on the maintenance log)."""
+    cfg = small_pfo_config(max_leaves_per_tree=48, max_nodes_per_tree=48,
+                           max_candidates_per_probe=32,
+                           max_candidates_total=384,
+                           snap_budget_per_probe=32, max_snapshots=6,
+                           max_tombstones=128)
+    rng = np.random.default_rng(2)
+    centers = rng.normal(size=(30, cfg.dim)).astype(np.float32)
+
+    def make(n, seed):
+        r = np.random.default_rng(seed)
+        v = centers[r.integers(0, 30, n)] \
+            + r.normal(size=(n, cfg.dim)).astype(np.float32) * 0.10
+        return (v / np.linalg.norm(v, axis=1, keepdims=True)).astype(
+            np.float32)
+
+    idx = PFOIndex(cfg, seed=0)
+    live: dict[int, np.ndarray] = {}
+    nxt = 0
+    for wave in range(6):
+        ids = np.arange(nxt, nxt + 120, dtype=np.int32)
+        vecs = make(120, 100 + wave)
+        idx.insert(ids, vecs)
+        for i, vec in zip(ids, vecs):
+            live[int(i)] = vec
+        nxt += 120
+        if wave >= 1:
+            dead = np.arange(nxt - 240, nxt - 180, dtype=np.int32)
+            idx.delete(dead)
+            for i in dead:
+                live.pop(int(i), None)
+    assert idx.maintenance_log.count("seal") >= 2
+    assert idx.maintenance_log.count("merge") >= 1
+    return idx, live
+
+
+@pytest.mark.parametrize("q", [1, 64])
+def test_recall_under_churn(churned_index, q):
+    """Streaming churn gate: after sustained insert/delete cycling
+    across >= 2 seal epochs and a merge, recall@10 vs exact brute force
+    over the live set stays >= 0.9 for Q in {1, 64}."""
+    idx, live = churned_index
+    lid = np.array(sorted(live))
+    lv = np.stack([live[int(i)] for i in lid])
+    rng = np.random.default_rng(7)
+    pick = rng.integers(0, len(lid), q)
+    qv = lv[pick] + rng.normal(size=(q, lv.shape[1])).astype(
+        np.float32) * 0.02
+    ids, _ = idx.query(qv, k=10)
+    oidx, _ = ops.brute_force_topk(jnp.asarray(qv), jnp.asarray(lv), 10,
+                                   "angular")
+    oid = lid[np.asarray(oidx)]
+    recall = np.mean([len(set(ids[i]) & set(oid[i])) / 10
+                      for i in range(q)])
+    assert recall >= 0.9, recall
+    # deleted ids never resurface through the sealed tier
+    deleted = set(range(0, 360)) - set(int(i) for i in lid)
+    hits = set(int(x) for row in ids for x in row if x >= 0)
+    assert not (hits & deleted)
+
+
 @pytest.mark.parametrize("q", [1, 16, 64])
 def test_masked_recall_matches_bruteforce(clustered_index, q):
     """Masked-traversal kNN recall@10 on clustered data stays within
