@@ -1,3 +1,5 @@
-from .ckpt import save_checkpoint, restore_checkpoint, latest_step
+from .ckpt import (save_checkpoint, restore_checkpoint, latest_step,
+                   save_index_checkpoint, load_index_checkpoint)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "save_index_checkpoint", "load_index_checkpoint"]

@@ -63,7 +63,10 @@ def _flatten_with_paths(tree):
 
 
 def save_checkpoint(ckpt_dir: str, step: int, tree, extra: dict | None
-                    = None) -> str:
+                    = None, write_extra=None) -> str:
+    """``write_extra(tmp_dir)``, when given, runs before the atomic
+    publish — side files it writes (e.g. cold-tier segment hardlinks)
+    appear in the checkpoint all-or-nothing with the manifest."""
     paths, leaves, _ = _flatten_with_paths(tree)
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     os.makedirs(ckpt_dir, exist_ok=True)
@@ -78,6 +81,8 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, extra: dict | None
         manifest["leaves"].append({
             "path": p, "file": fn, "shape": list(arr.shape),
             "dtype": str(arr.dtype), "codec": codec})
+    if write_extra is not None:
+        write_extra(tmp)
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):
@@ -95,6 +100,71 @@ def latest_step(ckpt_dir: str) -> int | None:
                 os.path.join(ckpt_dir, d, "manifest.json")):
             steps.append(int(d[len("step_"):]))
     return max(steps) if steps else None
+
+
+# ======================================================================
+# PFO index checkpoints: hot state + cold-segment manifest
+#
+# Cold-tier segments are immutable write-once files, so an index
+# checkpoint does not re-dump them: the hot ``PFOState`` (forests,
+# ring, routing table, cache) goes through the leaf dump above, while
+# the cold segments are *referenced* — hardlinked into the checkpoint
+# directory (zero-copy on the same filesystem; RAM-backed stores fall
+# back to a real write) with their metadata recorded in ``extra``.
+# ======================================================================
+def save_index_checkpoint(ckpt_dir: str, step: int, index) -> str:
+    """Checkpoint a ``repro.core.PFOIndex`` (cold tier included)."""
+    extra = {"kind": "pfo_index", "n_inserted": index.n_inserted}
+    write_extra = None
+    if index.cold is not None:
+        man = index.cold.manifest()
+        extra["cold_manifest"] = man
+
+        def write_extra(tmp):
+            seg_dir = os.path.join(tmp, "segments")
+            os.makedirs(seg_dir, exist_ok=True)
+            gids = [e["gid"] for row in man["lsh"] for e in row] \
+                + [e["gid"] for e in man["main"]]
+            for gid in gids:
+                index.cold.store.export(
+                    gid, os.path.join(seg_dir, f"seg_{gid:08d}.npy"))
+
+    return save_checkpoint(ckpt_dir, step, index.state, extra=extra,
+                           write_extra=write_extra)
+
+
+def load_index_checkpoint(ckpt_dir: str, step: int, cfg, seed: int = 0,
+                          cold_dir: str | None = None):
+    """Restore a :func:`save_index_checkpoint` into a fresh PFOIndex.
+
+    ``cfg`` must match the checkpointed one (it sizes every leaf).
+    Cold segments are adopted into the new index's own store
+    (``cold_dir`` selects its backing); the device segment cache
+    restarts empty — residency rebuilds on first touch.
+    """
+    from repro.core.index import PFOIndex
+
+    idx = PFOIndex(cfg, seed=seed, cold_dir=cold_dir)
+    state, extra = restore_checkpoint(ckpt_dir, step, idx.state)
+    idx.n_inserted = extra.get("n_inserted", 0)
+    man = extra.get("cold_manifest")
+    if idx.cold is not None and man is not None:
+        src = os.path.join(ckpt_dir, f"step_{step:08d}", "segments")
+        paths = {e["gid"]: os.path.join(src, f"seg_{e['gid']:08d}.npy")
+                 for row in man["lsh"] for e in row}
+        paths.update({e["gid"]: os.path.join(src, f"seg_{e['gid']:08d}.npy")
+                      for e in man["main"]})
+        idx.cold.adopt_manifest(man, paths)
+        # cache restarts cold: host LRU mirrors and device tags agree
+        from repro.core import coldtier
+        from repro.core.index import _snap_cfg_lsh, _snap_cfg_main
+        state = state._replace(cold=state.cold._replace(
+            lsh_cache=coldtier._empty_cache(cfg, _snap_cfg_lsh(cfg)
+                                            .snapshot_capacity),
+            main_cache=coldtier._empty_cache(cfg, _snap_cfg_main(cfg)
+                                             .snapshot_capacity)))
+    idx.state = state
+    return idx
 
 
 def restore_checkpoint(ckpt_dir: str, step: int, like, shardings=None):

@@ -11,8 +11,11 @@ Public API:
 """
 from .config import PFOConfig
 from .index import (PFOIndex, PFOState, init_state, insert_step, query_step,
-                    delete_step, seal_step, merge_step, round_flags)
-from .dispatch import (FLAG_ANY_PENDING, FLAG_NEED_SEAL, FLAG_SNAPS_FULL,
+                    query_step_cold, delete_step, delete_step_cold,
+                    seal_step, merge_step, round_flags)
+from .coldtier import ColdManager, ColdState
+from .dispatch import (FLAG_ANY_PENDING, FLAG_COLD_FULL, FLAG_COLD_MISS,
+                       FLAG_COLD_SPILL, FLAG_NEED_SEAL, FLAG_SNAPS_FULL,
                        FLAG_TOMBS_FULL, pack_round_flags)
 from .distributed import (DistConfig, dist_init_state, make_dist_query,
                           make_dist_insert, make_dist_insert_round,
@@ -21,9 +24,12 @@ from .distributed import (DistConfig, dist_init_state, make_dist_query,
 
 __all__ = [
     "PFOConfig", "PFOIndex", "PFOState", "init_state", "insert_step",
-    "query_step", "delete_step", "seal_step", "merge_step", "round_flags",
+    "query_step", "query_step_cold", "delete_step", "delete_step_cold",
+    "seal_step", "merge_step", "round_flags",
+    "ColdManager", "ColdState",
     "FLAG_ANY_PENDING", "FLAG_NEED_SEAL", "FLAG_SNAPS_FULL",
-    "FLAG_TOMBS_FULL", "pack_round_flags",
+    "FLAG_TOMBS_FULL", "FLAG_COLD_SPILL", "FLAG_COLD_FULL",
+    "FLAG_COLD_MISS", "pack_round_flags",
     "DistConfig", "dist_init_state", "make_dist_query", "make_dist_insert",
     "make_dist_insert_round", "make_dist_delete_round", "make_dist_seal",
     "make_dist_merge", "make_dist_round_flags",

@@ -62,8 +62,28 @@ class PFOConfig:
     snapshot_capacity: int = 65536       # entries per sealed segment
     snap_prefix_bits: int = 12           # bucket-prefix resolution of snapshot probes
     snap_budget_per_probe: int = 32      # candidates gathered per snapshot probe
-    bloom_bits: int = 1 << 16
-    bloom_hashes: int = 4
+    # sealed/cold-tier multi-probe: prefixes probed per (row, table) in
+    # xor-adjacent order (p=0 == the landing prefix; fixed-trip, so the
+    # probe shape is static).  1 == the paper's single-bucket probe.
+    snap_probes: int = 1
+    # Bloom sizing: 0 (default) auto-derives from the segment's expected
+    # distinct-prefix count and ``bloom_fp_target`` (the classic
+    # m = -n ln p / (ln 2)^2, k = (m/n) ln 2 formulas); an explicit
+    # value pins it (the pre-auto-sizing behavior).
+    bloom_bits: int = 0
+    bloom_hashes: int = 0
+    bloom_fp_target: float = 0.01
+
+    # --- cold tier (host/flash-resident sealed segments) -------------
+    # cold_segments > 0 enables the cold tier: when the device snapshot
+    # ring fills, the oldest sealed segment of every table spills to a
+    # host-resident SegmentStore while its Bloom filter/stamp/count stay
+    # device-resident in a compact routing table.  Queries probe all
+    # filters (hot + cold) in one shot and fetch only matched cold
+    # segments into a small device-resident LRU cache.
+    cold_segments: int = 0               # routing-table slots per tier (0 = off)
+    cold_cache_slots: int = 2            # device LRU cache entries per tier kind
+    cold_fetch_rounds: int = 4           # max fetch/re-probe rounds per query
 
     # --- metric ------------------------------------------------------
     metric: str = "angular"              # "angular" | "l2"
@@ -101,6 +121,38 @@ class PFOConfig:
     def main_max_depth(self) -> int:
         return (self.M - self.main_m) // self.log2_l
 
+    @property
+    def cold_enabled(self) -> bool:
+        return self.cold_segments > 0
+
+    @property
+    def bloom_keys_expected(self) -> int:
+        """Distinct Bloom keys a full segment can contribute: occupied
+        bucket prefixes, bounded by both the segment fill and the prefix
+        space."""
+        return max(1, min(self.snapshot_capacity, 1 << self.snap_prefix_bits))
+
+    @property
+    def bloom_bits_eff(self) -> int:
+        """Filter size in bits: explicit value, else auto-derived from
+        ``bloom_keys_expected`` and ``bloom_fp_target`` (rounded up to a
+        whole number of u32 words)."""
+        if self.bloom_bits:
+            return self.bloom_bits
+        n = self.bloom_keys_expected
+        bits = math.ceil(-n * math.log(self.bloom_fp_target)
+                         / (math.log(2) ** 2))
+        return max(64, ((bits + 31) // 32) * 32)
+
+    @property
+    def bloom_hashes_eff(self) -> int:
+        """Hash count: explicit value, else the optimal (m/n) ln 2."""
+        if self.bloom_hashes:
+            return self.bloom_hashes
+        k = round(self.bloom_bits_eff / self.bloom_keys_expected
+                  * math.log(2))
+        return max(1, min(8, k))
+
     def __post_init__(self):
         assert self.traversal in ("loop", "masked")
         assert self.max_chain >= 0
@@ -108,3 +160,10 @@ class PFOConfig:
         assert self.M == 32, "uint32 compound keys"
         assert self.C + self.m <= 16
         assert self.max_depth >= 1, "need at least one directory level"
+        assert self.snap_probes >= 1
+        assert self.snap_probes <= (1 << self.snap_prefix_bits)
+        assert 0.0 < self.bloom_fp_target < 1.0
+        assert self.bloom_bits % 32 == 0
+        if self.cold_enabled:
+            assert self.cold_cache_slots >= 1
+            assert self.cold_fetch_rounds >= 1

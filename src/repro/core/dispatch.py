@@ -29,20 +29,43 @@ import jax.numpy as jnp
 #   NEED_SEAL   — an arena could exhaust next round: seal hot -> flash;
 #   SNAPS_FULL  — the snapshot set is full: merge before sealing;
 #   TOMBS_FULL  — the tombstone buffer is (nearly) full: merge to drain.
+#
+# Cold-tier bits (set only when PFOConfig.cold_segments > 0):
+#   COLD_SPILL  — the device ring is full: spill its oldest segment to
+#                 the host segment store instead of merging;
+#   COLD_FULL   — the cold routing table nears capacity: start the
+#                 background host compaction;
+#   COLD_MISS   — this round's MainTable cold probe Bloom-hit a segment
+#                 not resident in the device cache (delete path): the
+#                 host must fetch and retry the pending rows.
 # ----------------------------------------------------------------------
 FLAG_ANY_PENDING = 1
 FLAG_NEED_SEAL = 2
 FLAG_SNAPS_FULL = 4
 FLAG_TOMBS_FULL = 8
+FLAG_COLD_SPILL = 16
+FLAG_COLD_FULL = 32
+FLAG_COLD_MISS = 64
 
 
 def pack_round_flags(any_pending: jax.Array, need_seal: jax.Array,
-                     snaps_full: jax.Array, tombs_full: jax.Array) -> jax.Array:
-    """Pack four booleans into the round's i32 flag word (device-side)."""
-    return (any_pending.astype(jnp.int32) * FLAG_ANY_PENDING
+                     snaps_full: jax.Array, tombs_full: jax.Array,
+                     cold_spill: jax.Array | None = None,
+                     cold_full: jax.Array | None = None,
+                     cold_miss: jax.Array | None = None) -> jax.Array:
+    """Pack the round's booleans into one i32 flag word (device-side).
+    The cold bits are optional so cold-disabled (and distributed)
+    callers keep their exact pre-cold-tier flag programs."""
+    word = (any_pending.astype(jnp.int32) * FLAG_ANY_PENDING
             + need_seal.astype(jnp.int32) * FLAG_NEED_SEAL
             + snaps_full.astype(jnp.int32) * FLAG_SNAPS_FULL
             + tombs_full.astype(jnp.int32) * FLAG_TOMBS_FULL)
+    for bit, flag in ((cold_spill, FLAG_COLD_SPILL),
+                      (cold_full, FLAG_COLD_FULL),
+                      (cold_miss, FLAG_COLD_MISS)):
+        if bit is not None:
+            word = word + bit.astype(jnp.int32) * flag
+    return word
 
 
 def dispatch_to_trees(tree_ids: jax.Array, n_trees: int, capacity: int):

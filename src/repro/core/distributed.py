@@ -98,6 +98,12 @@ def shard_main_snap_cfg(dcfg: DistConfig) -> PFOConfig:
 def _abstract_state(dcfg: DistConfig) -> PFOState:
     """Shape skeleton of the distributed state (no allocation)."""
     cfg = dcfg.pfo
+    # the cold tier (host segment store + device routing) is single-chip
+    # for now: a sharded state would need per-shard segment stores and
+    # shard-local fetch rounds (ROADMAP)
+    assert not cfg.cold_enabled, \
+        "cold tier (cold_segments > 0) is not supported on the " \
+        "distributed backend yet"
     snap_cfg = shard_snap_cfg(dcfg)
     msnap_cfg = shard_main_snap_cfg(dcfg)
     return jax.eval_shape(

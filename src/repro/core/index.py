@@ -29,9 +29,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import coldtier
 from . import snapshots as snap_mod
 from .config import PFOConfig
-from .dispatch import (FLAG_ANY_PENDING, FLAG_NEED_SEAL, FLAG_SNAPS_FULL,
+from .dispatch import (FLAG_ANY_PENDING, FLAG_COLD_FULL, FLAG_COLD_MISS,
+                       FLAG_COLD_SPILL, FLAG_NEED_SEAL, FLAG_SNAPS_FULL,
                        FLAG_TOMBS_FULL, dispatch_to_trees, gather_mailbox,
                        mailbox_ids, pack_round_flags)
 from .hash_tree import (TreeConfig, TreeState, forest_delete_dispatched,
@@ -74,6 +76,10 @@ class PFOState(NamedTuple):
     n_tombstones: jax.Array      # i32 ()
     stamp: jax.Array             # i32 () seal epoch counter
     proj: dict                   # LSH projection params
+    # cold-tier routing table + device segment cache; None when the
+    # cold tier is disabled (the pytree then has no cold leaves, so
+    # every pre-cold jitted program and sharding spec is unchanged)
+    cold: coldtier.ColdState | None = None
 
 
 def _snap_cfg_lsh(cfg: PFOConfig) -> PFOConfig:
@@ -83,7 +89,11 @@ def _snap_cfg_lsh(cfg: PFOConfig) -> PFOConfig:
 
 def _snap_cfg_main(cfg: PFOConfig) -> PFOConfig:
     cap = cfg.main_n_trees * cfg.main_max_leaves_per_tree
-    return PFOConfig(**{**cfg.__dict__, "snapshot_capacity": cap})
+    # MainTable probes are exact (key, id) lookups — multi-probing
+    # neighbor prefixes cannot find an id that lives under one murmur
+    # key, so the main tier always runs single-probe.
+    return PFOConfig(**{**cfg.__dict__, "snapshot_capacity": cap,
+                        "snap_probes": 1})
 
 
 def init_state(cfg: PFOConfig, key: jax.Array) -> PFOState:
@@ -100,6 +110,8 @@ def init_state(cfg: PFOConfig, key: jax.Array) -> PFOState:
         n_tombstones=jnp.int32(0),
         stamp=jnp.int32(0),
         proj=make_projections(key, cfg),
+        cold=coldtier.init_cold(cfg, _snap_cfg_lsh(cfg),
+                                _snap_cfg_main(cfg)),
     )
 
 
@@ -120,14 +132,24 @@ def _tombs_threshold(cfg: PFOConfig) -> int:
     return cfg.max_tombstones - max(1, min(64, cfg.max_tombstones // 4))
 
 
+def _cold_full_threshold(cfg: PFOConfig) -> int:
+    """Routing-table watermark that kicks the background compaction —
+    enough headroom left for the spills that land while it runs."""
+    return cfg.cold_segments - max(1, cfg.cold_segments // 4)
+
+
 def _round_flags(state: PFOState, cfg: PFOConfig, main_capacity: int,
-                 lsh_capacity: int, any_pending: jax.Array) -> jax.Array:
+                 lsh_capacity: int, any_pending: jax.Array,
+                 cold_miss: jax.Array | None = None) -> jax.Array:
     """Device-side maintenance decision for the *next* round, packed.
 
     A round adds at most ``capacity`` leaves and nodes per tree (module
     doc), so comparing the worst-tree cursors against the arena sizes
     decides seal; snapshot-set and tombstone occupancy decide merge.
-    All of it stays on device — the host reads back one i32.
+    With a cold tier, a full ring spills (COLD_SPILL) instead of
+    merging, and routing-table occupancy arms the background
+    compaction (COLD_FULL).  All of it stays on device — the host
+    reads back one i32.
     """
     leaf_head, node_head = forest_headroom(state.lsh_forest)
     mleaf, mnode = forest_headroom(state.main_forest)
@@ -138,11 +160,18 @@ def _round_flags(state: PFOState, cfg: PFOConfig, main_capacity: int,
         | (mnode + main_capacity > cfg.main_max_nodes_per_tree)
         | (leaf_head >= jnp.int32(
             int(cfg.seal_threshold * cfg.max_leaves_per_tree))))
-    snaps_full = (jnp.max(state.lsh_snaps.n_snaps)
-                  >= cfg.max_snapshots - 1)
+    ring_full = (jnp.max(state.lsh_snaps.n_snaps)
+                 >= cfg.max_snapshots - 1)
     tombs_full = state.n_tombstones >= _tombs_threshold(cfg)
+    if cfg.cold_enabled:
+        # capacity relief is a spill, never a merge — SNAPS_FULL stays 0
+        return pack_round_flags(
+            jnp.asarray(any_pending), need_seal, jnp.bool_(False),
+            tombs_full, cold_spill=ring_full,
+            cold_full=state.cold.n_cold >= _cold_full_threshold(cfg),
+            cold_miss=cold_miss)
     return pack_round_flags(jnp.asarray(any_pending), need_seal,
-                            snaps_full, tombs_full)
+                            ring_full, tombs_full)
 
 
 @functools.partial(jax.jit,
@@ -278,6 +307,56 @@ def _main_lookup(state: PFOState, ids: jax.Array, cfg: PFOConfig):
     return slot, found | sfound
 
 
+def _hot_sealed_candidates(state: PFOState, qvecs: jax.Array,
+                           cfg: PFOConfig):
+    """Shared head of the read path: hash, probe hot trees fully
+    parallel, probe the sealed ring Bloom-first (newest segments
+    first).  Returns (h (Q, L), cand (Q, L*mc + L*S*P*B))."""
+    q = qvecs.shape[0]
+    h, gtrees = compute_keys(state, qvecs, cfg)                  # (Q, L)
+    flat_ids, _, _ = forest_query(state.lsh_forest, gtrees.reshape(-1),
+                                  h.reshape(-1), lsh_tree_config(cfg))
+    hot = flat_ids.reshape(q, -1)                                # (Q, L*mc)
+
+    def per_table(snaps_l, h_l):
+        cids, _ = snap_mod.probe(snaps_l, h_l, _snap_cfg_lsh(cfg))
+        return cids                                              # (Q, S*P*B)
+
+    sealed = jax.vmap(per_table, in_axes=(0, 1), out_axes=1)(
+        state.lsh_snaps, h)                                      # (Q, L, ·)
+    return h, jnp.concatenate([hot, sealed.reshape(q, -1)], axis=1)
+
+
+def _dedupe_candidates(cand: jax.Array, tombstones: jax.Array,
+                       cfg: PFOConfig) -> jax.Array:
+    """Tombstone filter + dedupe + truncate to the ranking budget:
+    (Q, C_any) -> (Q, max_candidates_total), -1 pad."""
+    q = cand.shape[0]
+    dead = jnp.isin(cand, tombstones) & (cand >= 0)
+    skey = jnp.where((cand >= 0) & ~dead, cand, INT_MAX)
+    skey = jnp.sort(skey, axis=1)
+    dup = jnp.concatenate(
+        [jnp.zeros((q, 1), bool), skey[:, 1:] == skey[:, :-1]], axis=1)
+    uniq = jnp.sort(jnp.where(dup, INT_MAX, skey), axis=1)
+    uniq = uniq[:, :cfg.max_candidates_total]                    # (Q, Ct)
+    return jnp.where(uniq == INT_MAX, -1, uniq)
+
+
+def _rank_candidates(state: PFOState, qvecs: jax.Array, cids: jax.Array,
+                     slot: jax.Array, found: jax.Array, cfg: PFOConfig,
+                     k: int):
+    """Exact re-rank: the fused gather+rank+top-k kernel path reads
+    candidate vectors straight out of the store by slot id — no
+    (Q, Ct, d) candidate block is ever materialized."""
+    from repro.kernels import ops as kops
+    valid = (cids >= 0) & found & (slot >= 0)
+    idx, top_d = kops.gather_rank_topk(qvecs, state.store.data,
+                                       jnp.where(valid, slot, 0), valid,
+                                       k, cfg.metric)
+    top_ids = jnp.take_along_axis(cids, idx, axis=1)
+    return jnp.where(jnp.isfinite(top_d), top_ids, -1), top_d
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "k"))
 def query_step(state: PFOState, qvecs: jax.Array, cfg: PFOConfig, k: int):
     """Batched kNN query: (Q,d) -> (ids (Q,k), dists (Q,k)).
@@ -286,70 +365,91 @@ def query_step(state: PFOState, qvecs: jax.Array, cfg: PFOConfig, k: int):
     trees + sealed segments, dedupe ids, gather vectors via MainTable,
     exact-rank, top-k.
     """
-    from repro.kernels import ops as kops
-    q = qvecs.shape[0]
-    h, gtrees = compute_keys(state, qvecs, cfg)                  # (Q, L)
-
-    # hot-tier probes: fully parallel reads
-    flat_ids, _, _ = forest_query(state.lsh_forest, gtrees.reshape(-1),
-                                  h.reshape(-1), lsh_tree_config(cfg))
-    hot = flat_ids.reshape(q, -1)                                # (Q, L*mc)
-
-    # sealed-tier probes, vectorized Bloom-first (newest segments first)
-    def per_table(snaps_l, h_l):
-        cids, _ = snap_mod.probe(snaps_l, h_l, _snap_cfg_lsh(cfg))
-        return cids                                              # (Q, S*B)
-
-    sealed = jax.vmap(per_table, in_axes=(0, 1), out_axes=1)(
-        state.lsh_snaps, h)                                      # (Q, L, S*B)
-    cand = jnp.concatenate([hot, sealed.reshape(q, -1)], axis=1)
-
-    # tombstone filter + dedupe + truncate to the ranking budget
-    dead = jnp.isin(cand, state.tombstones) & (cand >= 0)
-    skey = jnp.where((cand >= 0) & ~dead, cand, INT_MAX)
-    skey = jnp.sort(skey, axis=1)
-    dup = jnp.concatenate(
-        [jnp.zeros((q, 1), bool), skey[:, 1:] == skey[:, :-1]], axis=1)
-    uniq = jnp.sort(jnp.where(dup, INT_MAX, skey), axis=1)
-    uniq = uniq[:, :cfg.max_candidates_total]                    # (Q, Ct)
-    cids = jnp.where(uniq == INT_MAX, -1, uniq)
-
-    # MainTable fetch + exact re-rank: the fused gather+rank+top-k
-    # kernel path reads candidate vectors straight out of the store by
-    # slot id — no (Q, Ct, d) candidate block is ever materialized.
+    _, cand = _hot_sealed_candidates(state, qvecs, cfg)
+    cids = _dedupe_candidates(cand, state.tombstones, cfg)
     slot, found = jax.vmap(lambda r: _main_lookup(state, r, cfg))(cids)
-    valid = (cids >= 0) & found & (slot >= 0)
-    idx, top_d = kops.gather_rank_topk(qvecs, state.store.data,
-                                       jnp.where(valid, slot, 0), valid,
-                                       k, cfg.metric)
-    top_ids = jnp.take_along_axis(cids, idx, axis=1)
-    top_ids = jnp.where(jnp.isfinite(top_d), top_ids, -1)
-    return top_ids, top_d
+    return _rank_candidates(state, qvecs, cids, slot, found, cfg, k)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("cfg", "main_capacity", "lsh_capacity",
-                                    "flags_main_capacity",
-                                    "flags_lsh_capacity"))
-def delete_step(state: PFOState, ids: jax.Array, active: jax.Array,
-                cfg: PFOConfig, main_capacity: int, lsh_capacity: int,
-                flags_main_capacity: int | None = None,
-                flags_lsh_capacity: int | None = None):
-    """Batched delete: unlink hot entries, free store slots, tombstone
-    sealed copies.  Idempotent per round, so per-row retry is safe.
-    Returns (state, pending, flags).
+# ======================================================================
+# cold-tier variants (cfg.cold_enabled): same pipelines plus the cold
+# Bloom route / cache probe and the wanted/missing fetch protocol
+# ======================================================================
+def _main_lookup_cold(state: PFOState, ids: jax.Array, cfg: PFOConfig,
+                      active: jax.Array | None = None):
+    """(N,) id -> (slot, found, unresolved, wanted, missing, probed, fp).
 
-    Tombstone-buffer overflow marks the row *pending* (it is NOT safe to
-    drop: a sealed copy could resurface on query).  The host sees
-    TOMBS_FULL in ``flags``, merges — which drains the buffer and
-    physically drops tombstoned sealed entries — and retries the row;
-    the retry re-finds any surviving sealed copy via the MainTable
-    sealed tier and tombstones it then.  Rows whose hot/store cleanup
-    already ran are no-ops on retry (unlink misses, dense_free checks
-    ``live``)."""
-    slot, found = _main_lookup(state, ids, cfg)
-    ok = active & found & (slot >= 0)
+    Hot forest, then the device ring, then the cold cache — structural
+    newest-first precedence (every ring segment is younger than every
+    cold segment; spill always takes the oldest).  Rows already
+    resolved by a hotter tier are masked out of the cold route, so a
+    stale cold copy of a live id never triggers a fetch.
+    ``unresolved`` marks rows whose Bloom route hit a non-resident
+    cold segment: the caller must fetch (``missing``) and retry them.
+    """
+    mh, mtree = main_table_keys(ids, cfg)
+    val, found = forest_lookup(state.main_forest, mtree, mh, ids,
+                               main_tree_config(cfg))
+    sval, sfound = jax.vmap(
+        lambda h, i: snap_mod.lookup_exact(state.main_snaps, h, i,
+                                           _snap_cfg_main(cfg)))(mh, ids)
+    cold_ids = jnp.where(found | sfound, -1, ids)
+    if active is not None:
+        cold_ids = jnp.where(active, cold_ids, -1)
+    cval, cfound, row_missing, wanted, missing, probed, fp = \
+        coldtier.cold_lookup_main(state.cold, mh, cold_ids,
+                                  _snap_cfg_main(cfg))
+    # a non-resident matched segment may hold a NEWER copy of the id
+    # than any resident one — never resolve a row through the cold
+    # cache while part of its route is missing (a stale val could,
+    # e.g., free a store slot that was reused by another id); the row
+    # stays unresolved and retries after the fetch
+    cfound = cfound & ~row_missing
+    slot = jnp.where(found, val,
+                     jnp.where(sfound, sval, jnp.where(cfound, cval, -1)))
+    found_any = found | sfound | cfound
+    unresolved = ~found_any & row_missing
+    return slot, found_any, unresolved, wanted, missing, probed, fp
 
+
+@functools.partial(jax.jit, static_argnames=("cfg", "k"))
+def query_step_cold(state: PFOState, qvecs: jax.Array, cfg: PFOConfig,
+                    k: int):
+    """Batched kNN query over hot + ring + cold tiers.
+
+    Identical to :func:`query_step` plus the cold Bloom route: cold
+    candidates come from whatever matched segments are resident in the
+    device cache, and the (wanted, missing) masks for both tiers ride
+    back with the results in the round's single pickup — the host
+    fetches missing segments and re-probes only on a miss.
+    Returns (ids, dists, wanted_l, missing_l, wanted_m, missing_m,
+    info) with info the (8,) cold accounting vector.
+    """
+    q = qvecs.shape[0]
+    h, cand = _hot_sealed_candidates(state, qvecs, cfg)
+    ccand, wanted_l, missing_l, lsh_probed, lsh_fp = \
+        coldtier.cold_probe_lsh(state.cold, h, _snap_cfg_lsh(cfg))
+    cids = _dedupe_candidates(jnp.concatenate([cand, ccand], axis=1),
+                              state.tombstones, cfg)
+
+    slot, found, _, wanted_m, missing_m, m_probed, m_fp = \
+        _main_lookup_cold(state, cids.reshape(-1), cfg)
+    top_ids, top_d = _rank_candidates(state, qvecs, cids,
+                                      slot.reshape(q, -1),
+                                      found.reshape(q, -1), cfg, k)
+    info = coldtier.pack_cold_info(wanted_l, missing_l, lsh_probed,
+                                   lsh_fp, wanted_m, missing_m,
+                                   m_probed, m_fp)
+    return top_ids, top_d, wanted_l, missing_l, wanted_m, missing_m, info
+
+
+def _delete_apply(state: PFOState, ids: jax.Array, slot: jax.Array,
+                  ok: jax.Array, cfg: PFOConfig, main_capacity: int,
+                  lsh_capacity: int):
+    """The delete pipeline after the lookup, shared by both delete
+    steps: unlink hot entries, free store slots, append tombstones.
+    Returns (state, pending) where pending covers mailbox and
+    tombstone-buffer overflow rows."""
     # re-derive LSH keys from the stored vector
     vecs = dense_read(state.store, jnp.where(ok, slot, 0))
     h, gtrees = compute_keys(state, vecs, cfg)
@@ -389,12 +489,69 @@ def delete_step(state: PFOState, ids: jax.Array, active: jax.Array,
                            store=store, tombstones=tombs, n_tombstones=n_t)
     l_row = jnp.any(l_ovf.reshape(-1, cfg.L), axis=1)
     tomb_ovf = ok & ~fits
-    pending = (ok & (l_row | m_ovf)) | tomb_ovf
+    return state, (ok & (l_row | m_ovf)) | tomb_ovf
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "main_capacity", "lsh_capacity",
+                                    "flags_main_capacity",
+                                    "flags_lsh_capacity"))
+def delete_step(state: PFOState, ids: jax.Array, active: jax.Array,
+                cfg: PFOConfig, main_capacity: int, lsh_capacity: int,
+                flags_main_capacity: int | None = None,
+                flags_lsh_capacity: int | None = None):
+    """Batched delete: unlink hot entries, free store slots, tombstone
+    sealed copies.  Idempotent per round, so per-row retry is safe.
+    Returns (state, pending, flags).
+
+    Tombstone-buffer overflow marks the row *pending* (it is NOT safe to
+    drop: a sealed copy could resurface on query).  The host sees
+    TOMBS_FULL in ``flags``, merges — which drains the buffer and
+    physically drops tombstoned sealed entries — and retries the row;
+    the retry re-finds any surviving sealed copy via the MainTable
+    sealed tier and tombstones it then.  Rows whose hot/store cleanup
+    already ran are no-ops on retry (unlink misses, dense_free checks
+    ``live``)."""
+    slot, found = _main_lookup(state, ids, cfg)
+    ok = active & found & (slot >= 0)
+    state, pending = _delete_apply(state, ids, slot, ok, cfg,
+                                   main_capacity, lsh_capacity)
     flags = _round_flags(state, cfg,
                          flags_main_capacity or main_capacity,
                          flags_lsh_capacity or lsh_capacity,
                          jnp.any(pending))
     return state, pending, flags
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "main_capacity", "lsh_capacity",
+                                    "flags_main_capacity",
+                                    "flags_lsh_capacity"))
+def delete_step_cold(state: PFOState, ids: jax.Array, active: jax.Array,
+                     cfg: PFOConfig, main_capacity: int, lsh_capacity: int,
+                     flags_main_capacity: int | None = None,
+                     flags_lsh_capacity: int | None = None):
+    """Cold-tier batched delete: :func:`delete_step` with the MainTable
+    lookup extended through the cold cache.
+
+    A row whose id resolves only through a *non-resident* cold segment
+    cannot complete this round: it stays pending, the packed flag word
+    carries COLD_MISS, and the host fetches the (returned) missing
+    segments before the retry round — the steady-state case (no cold
+    hit) still reads back exactly the one flag word.
+    Returns (state, pending, flags, wanted_m, missing_m).
+    """
+    slot, found, unresolved, wanted_m, missing_m, _, _ = \
+        _main_lookup_cold(state, ids, cfg, active=active)
+    ok = active & found & (slot >= 0)
+    state, pending = _delete_apply(state, ids, slot, ok, cfg,
+                                   main_capacity, lsh_capacity)
+    pending = pending | (active & unresolved)
+    flags = _round_flags(state, cfg,
+                         flags_main_capacity or main_capacity,
+                         flags_lsh_capacity or lsh_capacity,
+                         jnp.any(pending), cold_miss=jnp.any(missing_m))
+    return state, pending, flags, wanted_m, missing_m
 
 
 # ======================================================================
@@ -416,15 +573,28 @@ class PFOIndex:
 
     MAX_ROUNDS = 64
 
-    def __init__(self, cfg: PFOConfig, seed: int = 0):
+    def __init__(self, cfg: PFOConfig, seed: int = 0,
+                 cold_dir: str | None = None):
         self.cfg = cfg
         self.state = init_state(cfg, jax.random.PRNGKey(seed))
         self.n_inserted = 0
         self.rounds_log: list[int] = []
         self.sync_count = 0          # explicit host<->device scalar syncs
-        self.maintenance_log: list[str] = []    # "seal"/"merge" events
+        self.maintenance_log: list[str] = []    # "seal"/"merge"/"spill"...
         self._flags: int | None = None
         self._flags_caps = (0, 0)    # (main_cap, lsh_cap) flags were computed for
+        # cold tier: host segment store + routing/cache bookkeeping.
+        # ``cold_dir`` selects file backing (mmap'd flash segments);
+        # None keeps segments in host RAM.
+        self.cold: coldtier.ColdManager | None = None
+        self._delete_miss = None     # device masks stashed by delete rounds
+        if cfg.cold_enabled:
+            self.cold = coldtier.ColdManager(
+                cfg, _snap_cfg_lsh(cfg), _snap_cfg_main(cfg),
+                root=cold_dir, on_sync=self._count_sync)
+
+    def _count_sync(self) -> None:
+        self.sync_count += 1
 
     # -- capacity heuristics -------------------------------------------
     def _lsh_capacity(self, n: int) -> int:
@@ -455,18 +625,48 @@ class PFOIndex:
             round_flags(self.state, self.cfg, mcap, lcap), (mcap, lcap))
 
     def _maintain(self, flags: int) -> None:
-        """Run the seal/merge epochs the flag word asks for."""
+        """Run the seal/merge/spill epochs the flag word asks for."""
+        if self.cold is not None:
+            before = self.cold.counters["compactions"]
+            self.state = self.cold.compact_maybe_install(self.state)
+            if self.cold.counters["compactions"] != before:
+                self.maintenance_log.append("cold_compact")
+                self._flags = None
         if flags & FLAG_NEED_SEAL:
-            if flags & FLAG_SNAPS_FULL:
+            if flags & FLAG_COLD_SPILL:
+                # capacity relief with a cold tier: spill, never merge
+                if self.cold.n_cold >= self.cfg.cold_segments:
+                    self.state = self.cold.compact(self.state)
+                    self.maintenance_log.append("cold_compact")
+                self.state = self.cold.spill(self.state)
+                self.maintenance_log.append("spill")
+            elif flags & FLAG_SNAPS_FULL:
                 self.state = merge_step(self.state, self.cfg)
                 self.maintenance_log.append("merge")
             self.state = seal_step(self.state, self.cfg)
             self.maintenance_log.append("seal")
         if flags & FLAG_TOMBS_FULL:
-            self.state = merge_step(self.state, self.cfg)
+            if self.cold is not None:
+                self._merge_with_cold()
+            else:
+                self.state = merge_step(self.state, self.cfg)
             self.maintenance_log.append("merge")
+        if self.cold is not None and flags & FLAG_COLD_FULL:
+            self.cold.compact_start_async()
         if flags & (FLAG_NEED_SEAL | FLAG_TOMBS_FULL):
             self._flags = None       # state changed; carried word is stale
+
+    def _merge_with_cold(self) -> None:
+        """Cold-enabled merge epoch: the tombstones drain into a host
+        fold over ring + cold segments (dead ids physically dropped from
+        every sealed copy), the ring resets, and the device buffer
+        clears in the same epoch."""
+        self._count_sync()
+        tombs = jax.device_get(self.state.tombstones)
+        self.state = self.cold.merge_cold(self.state, tombs)
+        self.state = self.state._replace(
+            tombstones=jnp.full_like(self.state.tombstones, -1),
+            n_tombstones=jnp.int32(0))
 
     # -- public API ----------------------------------------------------
     def insert(self, ids, vecs) -> int:
@@ -495,9 +695,46 @@ class PFOIndex:
 
     def query(self, qvecs, k: int = 10):
         qvecs = jnp.asarray(qvecs, jnp.float32)
-        ids, dists = query_step(self.state, qvecs, self.cfg, k)
-        ids, dists = jax.device_get((ids, dists))
+        if self.cold is None:
+            ids, dists = query_step(self.state, qvecs, self.cfg, k)
+            ids, dists = jax.device_get((ids, dists))
+        else:
+            ids, dists = self._query_cold(qvecs, k)
         return np.asarray(ids), np.asarray(dists)
+
+    def _query_cold(self, qvecs, k: int, overlap=None):
+        """Cold-tier query loop: probe; on a cold-cache miss fetch the
+        Bloom-matched segments (transfers issued together, overlapping
+        the next probe's hot-tier work) and re-probe.  A round that
+        hits no non-resident cold segment does exactly ONE device->host
+        pickup — results and masks travel together.  ``overlap`` (the
+        stream engine's double-buffer hook) fires right after the first
+        dispatch, before its blocking pickup, so host batch packing
+        still hides under device execution.  Returns host
+        (ids, dists)."""
+        for attempt in range(self.cfg.cold_fetch_rounds + 1):
+            out = query_step_cold(self.state, qvecs, self.cfg, k)
+            if attempt == 0 and overlap is not None:
+                overlap()            # first dispatch is in flight
+            ids, dists, wl, ml, wm, mm, info = jax.device_get(out)
+            self.cold.record_query_round(info)
+            if not (ml.any() or mm.any()):
+                break
+            if attempt == self.cfg.cold_fetch_rounds:
+                # fetch budget exhausted with matches still missing:
+                # results lack those segments' candidates — counted, so
+                # capacity tests/dashboards can assert it never happens
+                self.cold.counters["incomplete_query_rounds"] += 1
+                break
+            before = self.cold.counters["fetches"]
+            self.state = self.cold.fetch(self.state, wl, ml, wm, mm)
+            if self.cold.counters["fetches"] == before:
+                # every cache slot is wanted by this round: the missing
+                # set can never drain (cache undersized for the query
+                # batch's Bloom fan-out) — degrade observably
+                self.cold.counters["incomplete_query_rounds"] += 1
+                break
+        return ids, dists
 
     def delete(self, ids) -> int:
         ids = jnp.asarray(ids, jnp.int32)
@@ -508,14 +745,49 @@ class PFOIndex:
         rounds = 0
         for _ in range(self.MAX_ROUNDS):
             self._maintain(flags)
-            self.state, pending, fw = delete_step(self.state, ids, active,
-                                                  self.cfg, mcap, lcap)
+            if self.cold is None:
+                self.state, pending, fw = delete_step(
+                    self.state, ids, active, self.cfg, mcap, lcap)
+            else:
+                self.state, pending, fw, wm, mm = delete_step_cold(
+                    self.state, ids, active, self.cfg, mcap, lcap)
+                self._delete_miss = (wm, mm)
             rounds += 1
             flags = self._read_flags(fw, (mcap, lcap))
+            self.fetch_delete_miss(flags)
             if not flags & FLAG_ANY_PENDING:
                 break
             active = pending
         return rounds
+
+    def fetch_delete_miss(self, flags: int) -> None:
+        """COLD_MISS service: a delete round's MainTable probe matched a
+        non-resident cold segment — read the stashed masks (the only
+        extra readback, and only on miss rounds) and fetch before the
+        retry round.
+
+        A miss round where the cache can install nothing (every slot is
+        wanted by this very round) can never make progress — the retry
+        would see the identical missing set forever and the delete
+        would silently ack with the id still live — so it raises
+        instead: the cache is undersized for the workload's per-row
+        Bloom fan-out."""
+        if self.cold is None or not flags & FLAG_COLD_MISS \
+                or self._delete_miss is None:
+            return
+        self._count_sync()
+        wm, mm = jax.device_get(self._delete_miss)
+        self._delete_miss = None
+        C, L = self.cfg.cold_segments, self.cfg.L
+        zeros = np.zeros((L, C), bool)
+        before = self.cold.counters["fetches"]
+        self.state = self.cold.fetch(self.state, zeros, zeros, wm, mm)
+        if np.any(mm) and self.cold.counters["fetches"] == before:
+            raise RuntimeError(
+                f"delete cannot resolve: its Bloom route spans "
+                f"{int(np.sum(wm))} cold segments but cold_cache_slots="
+                f"{self.cfg.cold_cache_slots} cannot hold them at once; "
+                "raise PFOConfig.cold_cache_slots")
 
     def update(self, ids, vecs) -> None:
         """Online update (paper §5): new version written, old reclaimed."""
@@ -524,7 +796,7 @@ class PFOIndex:
 
     def stats(self) -> dict:
         st = self.state
-        return {
+        out = {
             "items_hot": int(np.asarray(st.main_forest.n_items).sum()),
             "lsh_leaves": int(np.asarray(st.lsh_forest.n_items).sum()),
             "snapshots": int(st.main_snaps.n_snaps),
@@ -533,3 +805,6 @@ class PFOIndex:
             "overflow_events": int(np.asarray(st.lsh_forest.overflow).sum()),
             "stamp": int(st.stamp),
         }
+        if self.cold is not None:
+            out["cold"] = self.cold.stats()
+        return out

@@ -1,4 +1,4 @@
-"""Sealed snapshot tier (paper §3.2.2) — the "flash memory" level.
+"""Sealed snapshot tier (paper §3.2.2) — the device-resident sealed ring.
 
 When a hot (HBM-resident) partition fills past its threshold, its live
 entries are *sealed* into an immutable snapshot segment: entries are
@@ -12,8 +12,14 @@ sequential flash writes); staleness is resolved by (a) newest-first
 precedence and (b) periodic *merge compaction* that folds segments
 together dropping superseded/deleted ids.
 
-The snapshot set is a fixed-capacity stacked pytree so the probe path
-is a single jitted program over (S, cap) arrays.
+This ring is the *staging* level of the hierarchy, not the paper's
+flash level: it is a fixed-capacity stacked pytree in device memory so
+the probe path is a single jitted program over (S, cap) arrays.  The
+actual flash analogue is ``core.coldtier`` — when the ring fills (and
+``PFOConfig.cold_segments > 0``) the oldest segment spills verbatim to
+a host-resident segment store while its Bloom filter stays
+device-resident for routing; :func:`pop_oldest` implements the
+device half of that spill.
 """
 from __future__ import annotations
 
@@ -46,7 +52,7 @@ def init_snapshots(cfg: PFOConfig) -> SnapshotSet:
         ids=jnp.full((S, cap), -1, jnp.int32),
         vals=jnp.zeros((S, cap), jnp.int32),
         counts=jnp.zeros((S,), jnp.int32),
-        blooms=jnp.zeros((S, cfg.bloom_bits // 32), jnp.uint32),
+        blooms=jnp.zeros((S, cfg.bloom_bits_eff // 32), jnp.uint32),
         n_snaps=jnp.int32(0),
         stamps=jnp.zeros((S,), jnp.int32),
     )
@@ -54,6 +60,19 @@ def init_snapshots(cfg: PFOConfig) -> SnapshotSet:
 
 def _prefix(keys: jax.Array, bits: int) -> jax.Array:
     return keys.astype(jnp.uint32) >> jnp.uint32(32 - bits)
+
+
+def probe_prefixes(hs: jax.Array, cfg: PFOConfig) -> jax.Array:
+    """Multi-probe bucket prefixes for query keys: (N,) -> (N, P) uint32.
+
+    Column 0 is the landing prefix; columns 1..P-1 are its xor-adjacent
+    neighbors (nearest key-distance first — the same ordering
+    ``sibling_probe`` uses inside a directory node).  Fixed trip count:
+    the probe shape is static in ``snap_probes``, so vmapped rows stay
+    in lockstep and P == 1 reduces to the paper's single-bucket probe.
+    """
+    pfx = _prefix(hs, cfg.snap_prefix_bits)                      # (N,)
+    return pfx[:, None] ^ jnp.arange(cfg.snap_probes, dtype=jnp.uint32)
 
 
 def seal(snaps: SnapshotSet, keys: jax.Array, ids: jax.Array,
@@ -83,7 +102,7 @@ def seal(snaps: SnapshotSet, keys: jax.Array, ids: jax.Array,
     svals = jnp.concatenate([svals, jnp.zeros((pad,), jnp.int32)])
 
     filt = bloom_mod.build(_prefix(skeys, cfg.snap_prefix_bits),
-                           cfg.bloom_hashes, cfg.bloom_bits,
+                           cfg.bloom_hashes_eff, cfg.bloom_bits_eff,
                            mask=sids >= 0)
 
     s = snaps.n_snaps
@@ -98,42 +117,98 @@ def seal(snaps: SnapshotSet, keys: jax.Array, ids: jax.Array,
     )
 
 
+def span_gather(keys_s: jax.Array, ids_s: jax.Array, vals_s: jax.Array,
+                act_s: jax.Array, pfx: jax.Array, cfg: PFOConfig):
+    """Gather one segment's bucket spans for flat probe prefixes.
+
+    keys_s/ids_s/vals_s: one segment's (cap,) arrays (sorted keys);
+    act_s/pfx: (M,) probe activity mask and bucket prefixes.  Returns
+    (cids, cvals, matched): (M, budget) candidates (-1 pad) and an (M,)
+    bool marking probes whose span was non-empty (a *real* bucket hit —
+    used by the cold tier's Bloom false-positive accounting).
+    """
+    cap = keys_s.shape[0]
+    budget = cfg.snap_budget_per_probe
+    shift = jnp.uint32(32 - cfg.snap_prefix_bits)
+    lo_key = (pfx << shift)
+    hi_key = lo_key + (jnp.uint32(1) << shift)
+    lo = jnp.searchsorted(keys_s, lo_key)                        # (M,)
+    # the all-ones prefix's upper bound wraps to 0 in uint32 — its span
+    # runs to the end of the segment instead (pad rows there carry
+    # id == -1, so they mask out of the gathered window naturally)
+    max_pfx = jnp.uint32((1 << cfg.snap_prefix_bits) - 1)
+    hi = jnp.where(pfx == max_pfx, cap,
+                   jnp.searchsorted(keys_s, hi_key))
+    span = jnp.arange(budget)
+    pos = lo[:, None] + span[None, :]                            # (M, B)
+    ok = (pos < hi[:, None]) & act_s[:, None] & (pos < cap)
+    safe = jnp.where(ok, pos, 0)
+    cids = jnp.where(ok, ids_s[safe], -1)
+    cvals = jnp.where(ok, vals_s[safe], -1)
+    return cids, cvals, act_s & (hi > lo)
+
+
 def probe(snaps: SnapshotSet, hs: jax.Array, cfg: PFOConfig):
     """Search every segment for bucket-prefix matches of query keys.
 
-    hs: (N,) uint32 query compound keys.
-    Returns (ids, vals): (N, S * budget) candidate ids (-1 pad), ordered
-    newest-segment-first per query (paper: reversed time order).
+    hs: (N,) uint32 query compound keys; each contributes
+    ``snap_probes`` xor-adjacent bucket prefixes (fixed-trip masked
+    multi-probe — P == 1 is the paper's single-bucket probe).
+    Returns (ids, vals): (N, S * P * budget) candidate ids (-1 pad),
+    ordered newest-segment-first per query (paper: reversed time
+    order), landing probe first within a segment.
     """
     S, cap = snaps.keys.shape
-    budget = cfg.snap_budget_per_probe
-    pfx = _prefix(hs, cfg.snap_prefix_bits)                      # (N,)
+    n, P = hs.shape[0], cfg.snap_probes
+    pfx = probe_prefixes(hs, cfg).reshape(-1)                    # (N*P,)
 
     # One vectorized Bloom pass across all segments (paper's batching).
-    hit = bloom_mod.contains_multi(snaps.blooms, pfx, cfg.bloom_hashes)  # (S,N)
+    hit = bloom_mod.contains_multi(snaps.blooms, pfx,
+                                   cfg.bloom_hashes_eff)         # (S, N*P)
     active = (jnp.arange(S)[:, None] < snaps.n_snaps) & hit
 
-    lo_key = (pfx << jnp.uint32(32 - cfg.snap_prefix_bits))
-    hi_key = lo_key + (jnp.uint32(1) << jnp.uint32(32 - cfg.snap_prefix_bits))
-
-    def per_segment(keys_s, ids_s, vals_s, act_s):
-        lo = jnp.searchsorted(keys_s, lo_key)                    # (N,)
-        hi = jnp.searchsorted(keys_s, hi_key)
-        span = jnp.arange(budget)
-        pos = lo[:, None] + span[None, :]                        # (N, B)
-        ok = (pos < hi[:, None]) & act_s[:, None] & (pos < cap)
-        safe = jnp.where(ok, pos, 0)
-        cids = jnp.where(ok, ids_s[safe], -1)
-        cvals = jnp.where(ok, vals_s[safe], -1)
-        return cids, cvals
-
-    cids, cvals = jax.vmap(per_segment)(snaps.keys, snaps.ids, snaps.vals,
-                                        active)                  # (S, N, B)
+    cids, cvals, _ = jax.vmap(
+        lambda k, i, v, a: span_gather(k, i, v, a, pfx, cfg))(
+        snaps.keys, snaps.ids, snaps.vals, active)               # (S, N*P, B)
     # newest-first ordering along the segment axis
     rev = jnp.arange(S - 1, -1, -1)
-    cids = jnp.transpose(cids[rev], (1, 0, 2)).reshape(hs.shape[0], -1)
-    cvals = jnp.transpose(cvals[rev], (1, 0, 2)).reshape(hs.shape[0], -1)
-    return cids, cvals
+
+    def flat(c):                                                 # -> (N, S*P*B)
+        c = jnp.transpose(c[rev], (1, 0, 2)).reshape(n, P, S, -1)
+        return jnp.transpose(c, (0, 2, 1, 3)).reshape(n, -1)
+
+    return flat(cids), flat(cvals)
+
+
+def pop_oldest(snaps: SnapshotSet, cfg: PFOConfig):
+    """Pop the ring's oldest segment (index 0 — stamps are nondecreasing
+    with index: seal appends, merge folds to one oldest-stamp-max slot,
+    and spill always removes index 0).  Returns (shifted_set, popped)
+    where ``popped`` is a dict of the evicted segment's arrays — the
+    device half of a cold-tier spill (the host persists keys/ids/vals;
+    the Bloom/stamp/count move into the cold routing table).
+
+    Caller must ensure ``n_snaps > 0`` (flag-gated in ``index.py``).
+    """
+    popped = {
+        "keys": snaps.keys[0], "ids": snaps.ids[0], "vals": snaps.vals[0],
+        "count": snaps.counts[0], "bloom": snaps.blooms[0],
+        "stamp": snaps.stamps[0],
+    }
+
+    def shift(a, fill):
+        return jnp.roll(a, -1, axis=0).at[-1].set(fill)
+
+    shifted = SnapshotSet(
+        keys=shift(snaps.keys, _PAD_KEY),
+        ids=shift(snaps.ids, -1),
+        vals=shift(snaps.vals, 0),
+        counts=shift(snaps.counts, 0),
+        blooms=shift(snaps.blooms, 0),
+        stamps=shift(snaps.stamps, 0),
+        n_snaps=jnp.maximum(snaps.n_snaps - 1, 0),
+    )
+    return shifted, popped
 
 
 def lookup_exact(snaps: SnapshotSet, h: jax.Array, vid: jax.Array,

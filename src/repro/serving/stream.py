@@ -11,10 +11,17 @@ Paper terminology -> this module:
   Steady-state rounds are device-resident: the only host<->device
   traffic is ONE packed i32 flag word (pending/seal/merge signals,
   ``core.dispatch.pack_round_flags``) read back per round.
-* **maintenance epochs** — seal (hot tier -> sealed snapshots) and
-  merge (snapshot compaction + tombstone drain) run between rounds as
-  explicit engine events, exactly when the flag word asks, never via
-  ad-hoc device readbacks.
+* **maintenance epochs** — seal (hot tier -> sealed snapshots), merge
+  (compaction + tombstone drain) and, with a cold tier
+  (``PFOConfig.cold_segments > 0``), *spill* (oldest ring segment ->
+  host segment store) run between rounds as explicit engine events,
+  exactly when the flag word asks, never via ad-hoc device readbacks.
+  Query rounds against a cold-tier index carry their cold
+  wanted/missing masks inside the round's single result pickup: a
+  round that touches only cache-resident segments costs zero extra
+  transfers, a miss round fetches and re-probes
+  (``core.coldtier``); delete rounds signal misses via the
+  ``FLAG_COLD_MISS`` bit and the ``after_flags`` backend hook.
 
 Backend interface
 -----------------
@@ -102,8 +109,10 @@ import numpy as np
 from repro.core.dispatch import (FLAG_ANY_PENDING, FLAG_NEED_SEAL,
                                  FLAG_SNAPS_FULL, FLAG_TOMBS_FULL,
                                  client_ticket, merge_client_queues)
-from repro.core.index import (PFOIndex, delete_step, init_state, insert_step,
-                              merge_step, query_step, round_flags, seal_step)
+from repro.core.index import (PFOIndex, delete_step, delete_step_cold,
+                              init_state, insert_step, merge_step,
+                              query_step, query_step_cold, round_flags,
+                              seal_step)
 
 QUERY, INSERT, DELETE, UPDATE = "query", "insert", "delete", "update"
 
@@ -211,8 +220,20 @@ class LocalBackend:
         self.index._maintain(flags)
 
     # -- rounds ---------------------------------------------------------
-    def query_rows(self, qvecs, k: int):
-        return query_step(self.index.state, qvecs, self.cfg, k)
+    def query_rows(self, qvecs, k: int, overlap=None):
+        """One query round.  ``overlap`` (the engine's double-buffer
+        hook) is invoked after the first device dispatch and before any
+        blocking pickup, so host packing of batch t+1 hides under
+        batch t's device execution on both the cold and non-cold
+        paths."""
+        if self.index.cold is not None:
+            # cold fetch loop: masks ride in the round's single pickup;
+            # returns host arrays (the engine's device_get is a no-op)
+            return self.index._query_cold(qvecs, k, overlap=overlap)
+        out = query_step(self.index.state, qvecs, self.cfg, k)
+        if overlap is not None:
+            overlap()                 # dispatch in flight; pickup later
+        return out
 
     def insert_begin(self, bucket: int):
         return jnp.full((bucket,), -2, jnp.int32)   # slots: unallocated
@@ -230,10 +251,25 @@ class LocalBackend:
     def delete_round(self, ids, active, bucket: int):
         mcap, lcap = self.capacities(bucket)
         fm, fl = self._flags_caps
+        if self.index.cold is not None:
+            st, pending, fw, wm, mm = delete_step_cold(
+                self.index.state, ids, active, self.cfg, mcap, lcap,
+                fm, fl)
+            self.index.state = st
+            self.index._delete_miss = (wm, mm)
+            return pending, fw
         st, pending, fw = delete_step(self.index.state, ids, active,
                                       self.cfg, mcap, lcap, fm, fl)
         self.index.state = st
         return pending, fw
+
+    def after_flags(self, flags: int) -> None:
+        """Post-readback hook: service a delete round's COLD_MISS (fetch
+        the missing cold segments before the retry round)."""
+        self.index.fetch_delete_miss(flags)
+
+    def cold_stats(self) -> dict | None:
+        return self.index.cold.stats() if self.index.cold else None
 
     def count_insert(self, n: int) -> None:
         self.index.n_inserted += n
@@ -255,6 +291,7 @@ class LocalBackend:
     def warmup(self, buckets, qcap: int, default_k: int) -> None:
         idx, cfg = self.index, self.cfg
         fm, fl = self._flags_caps
+        cold = idx.cold is not None
         for b in buckets:
             mcap, lcap = self.capacities(b)
             ids = jnp.zeros((b,), jnp.int32)
@@ -265,14 +302,26 @@ class LocalBackend:
                             jnp.zeros((b * cfg.L,), bool), cfg, mcap, lcap,
                             fm, fl)
             jax.block_until_ready(r[-1])
-            r = delete_step(idx.state, ids, off, cfg, mcap, lcap, fm, fl)
-            jax.block_until_ready(r[-1])
+            r = (delete_step_cold if cold else delete_step)(
+                idx.state, ids, off, cfg, mcap, lcap, fm, fl)
+            jax.block_until_ready(r[2])
             if b <= qcap:
+                step = query_step_cold if cold else query_step
                 jax.block_until_ready(
-                    query_step(idx.state, vecs, cfg, default_k))
+                    step(idx.state, vecs, cfg, default_k))
         jax.block_until_ready(round_flags(idx.state, cfg, fm, fl))
         scratch = init_state(cfg, jax.random.PRNGKey(0))
-        jax.block_until_ready(merge_step(seal_step(scratch, cfg), cfg))
+        if cold:
+            # compile the spill program against a scratch state so the
+            # first real spill epoch does not pay a jit compile
+            from repro.core.coldtier import spill_device
+            from repro.core.index import _snap_cfg_lsh, _snap_cfg_main
+            sealed = seal_step(scratch, cfg)
+            jax.block_until_ready(spill_device(
+                sealed.lsh_snaps, sealed.main_snaps, sealed.cold,
+                _snap_cfg_lsh(cfg), _snap_cfg_main(cfg))[:3])
+        else:
+            jax.block_until_ready(merge_step(seal_step(scratch, cfg), cfg))
 
 
 class DistBackend:
@@ -410,7 +459,7 @@ class DistBackend:
                     tree_lsh=tl, flags_main=fm, flags_lsh=fl))
         return self._del[bucket]
 
-    def query_rows(self, qvecs, k: int):
+    def query_rows(self, qvecs, k: int, overlap=None):
         if k not in self._qry:
             self._qry[k] = self._cached(
                 ("query", k),
@@ -418,10 +467,18 @@ class DistBackend:
                                                    with_drop_count=True))
         ids, dists, dropped = self._qry[k](self.state, qvecs)
         self._query_drops = self._query_drops + dropped   # stays on device
+        if overlap is not None:
+            overlap()                 # dispatch in flight; pickup later
         return ids, dists
 
     def insert_begin(self, bucket: int):
         return None                       # slots live at the owner shard
+
+    def after_flags(self, flags: int) -> None:
+        """No cold tier on the distributed backend (see ROADMAP)."""
+
+    def cold_stats(self) -> dict | None:
+        return None
 
     def insert_round(self, ids, vecs, carry, main_active, lsh_active,
                      bucket: int):
@@ -790,10 +847,11 @@ class StreamEngine:
     def _query_batch(self, packed, chunk: list, bucket: int, out: dict,
                      overlap=None) -> None:
         q_d, k = packed
-        ids, dists = self.backend.query_rows(q_d, k)
+        # the backend invokes overlap() itself, right after its first
+        # device dispatch (the cold fetch loop would otherwise block to
+        # completion before the engine could start packing batch t+1)
+        ids, dists = self.backend.query_rows(q_d, k, overlap=overlap)
         self.n_rounds_by_kind[QUERY] += 1
-        if overlap is not None:
-            overlap()
         ids, dists = jax.device_get((ids, dists))
         for r, (ticket, _, _) in enumerate(chunk):
             out[ticket] = (ids[r], dists[r])
@@ -815,6 +873,7 @@ class StreamEngine:
             if r == 0 and overlap is not None:
                 overlap()
             flags = be.read_flags(fw)
+            be.after_flags(flags)
             if not flags & FLAG_ANY_PENDING:
                 break
         be.count_insert(len(chunk))
@@ -835,6 +894,7 @@ class StreamEngine:
             if r == 0 and overlap is not None:
                 overlap()
             flags = be.read_flags(fw)
+            be.after_flags(flags)
             if not flags & FLAG_ANY_PENDING:
                 break
             active = pending
@@ -872,8 +932,10 @@ class StreamEngine:
             "syncs": readbacks,
             "seals": sum(1 for e, _ in self.events if e == "seal"),
             "merges": sum(1 for e, _ in self.events if e == "merge"),
+            "spills": sum(1 for e, _ in self.events if e == "spill"),
             "buckets": list(self.scfg.buckets),
             "clients": 1 + len(self._clients),
+            "cold": self.backend.cold_stats(),
         }
 
 

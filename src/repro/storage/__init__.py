@@ -1,0 +1,3 @@
+from .segments import SEGMENT_DTYPE, SegmentStore
+
+__all__ = ["SEGMENT_DTYPE", "SegmentStore"]

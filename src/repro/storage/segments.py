@@ -1,0 +1,121 @@
+"""Host-resident sealed-segment store — the cold tier's flash level.
+
+The paper scales capacity past RAM by writing sealed partitions to
+flash as sequential Index+Data files (§3.2.2).  This module is that
+file layer: each *segment* is one sealed, bucket-major-sorted
+(key, id, val) record block, written exactly once and read by mmap —
+the device keeps only the segment's Bloom filter/stamp/count in its
+routing table (``core.coldtier``) and fetches segment payloads on
+filter match.
+
+Two backings share one interface:
+
+* **RAM** (``root=None``) — pinned host numpy arrays in a dict; the
+  default for tests and for deployments where "cold" just means
+  "host DRAM instead of HBM".
+* **files** (``root=<dir>``) — one write-once ``.npy`` per segment
+  (structured dtype, so a single sequential write), read back with
+  ``mmap_mode="r"`` so a fetch touches only the pages it copies to
+  device.  Files are generation-numbered and never mutated:
+  compaction writes *new* generations and deletes the old ones, which
+  is what lets checkpoints reference segments by hardlink instead of
+  re-dumping them (``checkpoint.ckpt.save_index_checkpoint``).
+
+Pure numpy — no JAX or repro imports — so the store can be driven from
+background compaction threads without touching device runtime state.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+
+import numpy as np
+
+#: one sealed record: compound key (sorted-by ascending), vector id
+#: (-1 == padding), payload (store slot for the MainTable, id for LSH).
+SEGMENT_DTYPE = np.dtype([("key", "<u4"), ("id", "<i4"), ("val", "<i4")])
+
+
+class SegmentStore:
+    """Write-once segment blobs addressed by generation id (gid)."""
+
+    def __init__(self, root: str | None = None):
+        self.root = root
+        if root is not None:
+            os.makedirs(root, exist_ok=True)
+        self._mem: dict[int, np.ndarray] = {}
+        self._meta: dict[int, dict] = {}        # gid -> {count, stamp}
+        self._next_gid = 0
+        self.bytes_written = 0
+
+    # -- core API ------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._meta)
+
+    def __contains__(self, gid: int) -> bool:
+        return gid in self._meta
+
+    def path(self, gid: int) -> str | None:
+        if self.root is None:
+            return None
+        return os.path.join(self.root, f"seg_{gid:08d}.npy")
+
+    def put(self, keys: np.ndarray, ids: np.ndarray, vals: np.ndarray,
+            count: int, stamp: int) -> int:
+        """Persist one sealed segment; returns its gid (write-once)."""
+        cap = keys.shape[0]
+        rec = np.empty((cap,), SEGMENT_DTYPE)
+        rec["key"] = np.asarray(keys, np.uint32)
+        rec["id"] = np.asarray(ids, np.int32)
+        rec["val"] = np.asarray(vals, np.int32)
+        gid = self._next_gid
+        self._next_gid += 1
+        if self.root is None:
+            self._mem[gid] = rec
+        else:
+            np.save(self.path(gid), rec)
+        self._meta[gid] = {"count": int(count), "stamp": int(stamp)}
+        self.bytes_written += rec.nbytes
+        return gid
+
+    def get(self, gid: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(keys, ids, vals) views of a segment — mmap'd in file mode."""
+        if self.root is None:
+            rec = self._mem[gid]
+        else:
+            rec = np.load(self.path(gid), mmap_mode="r")
+        return rec["key"], rec["id"], rec["val"]
+
+    def meta(self, gid: int) -> dict:
+        return dict(self._meta[gid])
+
+    def delete(self, gid: int) -> None:
+        self._meta.pop(gid)
+        if self.root is None:
+            self._mem.pop(gid)
+        else:
+            os.remove(self.path(gid))
+
+    # -- checkpoint support --------------------------------------------
+    def export(self, gid: int, dest_path: str) -> None:
+        """Materialize a segment at ``dest_path``.
+
+        File mode hardlinks (the segment file is immutable, so the link
+        shares the inode at zero copy cost — "manifest, not re-dump");
+        cross-device or RAM-backed stores fall back to a real write.
+        """
+        src = self.path(gid)
+        if src is not None:
+            try:
+                os.link(src, dest_path)
+                return
+            except OSError:
+                shutil.copyfile(src, dest_path)
+                return
+        np.save(dest_path, self._mem[gid])
+
+    def import_file(self, src_path: str, meta: dict) -> int:
+        """Adopt a checkpointed segment file into this store."""
+        rec = np.load(src_path)
+        return self.put(rec["key"], rec["id"], rec["val"],
+                        meta["count"], meta["stamp"])

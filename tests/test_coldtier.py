@@ -1,0 +1,611 @@
+"""Cold tier system tests: spill/fetch/compaction correctness, the
+hot+cold vs all-device differential, Bloom sizing, multi-probe, the
+one-readback steady-state discipline, and checkpoint round-trips.
+
+The differential harness reuses the ``tests/_prop.py`` fallback when
+``hypothesis`` is absent, mirroring the stream-engine property tests.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # optional dep: deterministic fallback
+    from _prop import given, settings, strategies as st
+
+from conftest import small_pfo_config
+from repro.core import PFOConfig, PFOIndex
+from repro.core import bloom as bloom_mod
+from repro.core import coldtier
+from repro.core import snapshots as snap_mod
+from repro.kernels import ops
+
+
+def cold_cfg(**kw):
+    """Small-arena config with the cold tier on: seals every few
+    hundred inserts, ring of 3, so spills come fast."""
+    base = dict(max_nodes_per_tree=48, max_leaves_per_tree=64,
+                main_max_nodes_per_tree=128, main_max_leaves_per_tree=512,
+                max_snapshots=3, cold_segments=16, cold_cache_slots=48,
+                cold_fetch_rounds=6, bloom_bits=0, bloom_hashes=0,
+                snap_budget_per_probe=32)
+    base.update(kw)
+    return small_pfo_config(**base)
+
+
+# 100 planted clusters: per-bucket LSH spans stay well under the probe
+# budget even after merge/compaction folds concentrate a bucket into
+# one contiguous segment span (30 centers would overflow the budget
+# cutoff and make fold-equivalence assertions span-dependent)
+def _clustered(n, dim, seed, centers=None, n_centers=100, noise=0.10):
+    rng = np.random.default_rng(seed)
+    if centers is None:
+        centers = np.random.default_rng(99).normal(
+            size=(n_centers, dim)).astype(np.float32)
+    v = centers[rng.integers(0, len(centers), n)] \
+        + rng.normal(size=(n, dim)).astype(np.float32) * noise
+    return (v / np.linalg.norm(v, axis=1, keepdims=True)).astype(np.float32)
+
+
+# ======================================================================
+# Bloom sizing (bugfix sweep satellite)
+# ======================================================================
+def test_np_bloom_build_parity_with_device():
+    """The background-compaction thread's numpy Bloom builder must be
+    bit-identical to the device builder."""
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 2**32, 500).astype(np.uint32)
+    mask = rng.random(500) < 0.8
+    for bits, hashes in ((1 << 10, 3), (1 << 12, 4), (4096 + 32, 5)):
+        dev = np.asarray(bloom_mod.build(jnp.asarray(keys), hashes, bits,
+                                         mask=jnp.asarray(mask)))
+        host = coldtier.np_bloom_build(keys, hashes, bits, mask=mask)
+        np.testing.assert_array_equal(dev, host)
+
+
+def test_bloom_autosize_follows_capacity():
+    """bloom_bits/hashes == 0 derive from the effective snapshot
+    capacity + target FP rate — so the per-tier snap cfgs (which
+    override snapshot_capacity) get fill-proportional filters."""
+    small = PFOConfig(snapshot_capacity=256, snap_prefix_bits=16,
+                      bloom_bits=0, bloom_hashes=0)
+    big = PFOConfig(snapshot_capacity=16384, snap_prefix_bits=16,
+                    bloom_bits=0, bloom_hashes=0)
+    assert small.bloom_bits_eff < big.bloom_bits_eff
+    assert small.bloom_bits_eff % 32 == 0
+    # prefix space bounds the key count: capacity beyond 2^prefix_bits
+    # must not inflate the filter
+    capped = PFOConfig(snapshot_capacity=1 << 20, snap_prefix_bits=8,
+                       bloom_bits=0, bloom_hashes=0)
+    tiny = PFOConfig(snapshot_capacity=256, snap_prefix_bits=8,
+                     bloom_bits=0, bloom_hashes=0)
+    assert capped.bloom_bits_eff == tiny.bloom_bits_eff
+    # explicit values still pin the filter (pre-auto behavior)
+    pinned = PFOConfig(bloom_bits=1 << 12, bloom_hashes=4)
+    assert pinned.bloom_bits_eff == 1 << 12
+    assert pinned.bloom_hashes_eff == 4
+
+
+def test_bloom_autosize_realized_fp_rate():
+    """Regression on the *realized* FP rate of an auto-sized filter at
+    full segment fill: within 3x of the configured target (the classic
+    formula's constant-factor slack)."""
+    cfg = PFOConfig(snapshot_capacity=2048, snap_prefix_bits=16,
+                    bloom_bits=0, bloom_hashes=0, bloom_fp_target=0.01)
+    rng = np.random.default_rng(1)
+    present = rng.choice(1 << 16, size=cfg.snapshot_capacity,
+                         replace=False).astype(np.uint32)
+    filt = bloom_mod.build(jnp.asarray(present), cfg.bloom_hashes_eff,
+                           cfg.bloom_bits_eff)
+    absent = np.setdiff1d(np.arange(1 << 16, dtype=np.uint32), present)
+    probe = absent[rng.integers(0, len(absent), 4000)]
+    hits = np.asarray(bloom_mod.contains(filt, jnp.asarray(probe),
+                                         cfg.bloom_hashes_eff))
+    fp = hits.mean()
+    assert fp <= 3 * cfg.bloom_fp_target, fp
+
+
+# ======================================================================
+# sealed-tier masked multi-probe (satellite)
+# ======================================================================
+def test_sealed_multiprobe_superset():
+    """P-probe sealed candidates are a superset of single-probe ones
+    (probe 0 is the landing prefix; extra probes only add)."""
+    cfg1 = small_pfo_config(snap_probes=1)
+    cfgP = small_pfo_config(snap_probes=4)
+    rng = np.random.default_rng(2)
+    snaps = snap_mod.init_snapshots(cfg1)
+    n = 400
+    keys = rng.integers(0, 2**32, n).astype(np.uint32)
+    ids = np.arange(n, dtype=np.int32)
+    snaps = snap_mod.seal(snaps, jnp.asarray(keys), jnp.asarray(ids),
+                          jnp.asarray(ids), jnp.ones(n, bool),
+                          jnp.int32(1), cfg1)
+    qs = jnp.asarray(keys[:32])
+    c1, _ = snap_mod.probe(snaps, qs, cfg1)
+    cP, _ = snap_mod.probe(snaps, qs, cfgP)
+    for r in range(32):
+        s1 = set(int(x) for x in np.asarray(c1[r]) if x >= 0)
+        sP = set(int(x) for x in np.asarray(cP[r]) if x >= 0)
+        assert s1 <= sP
+    # and multi-probe finds strictly more *somewhere* on this workload
+    total1 = int((np.asarray(c1) >= 0).sum())
+    totalP = int((np.asarray(cP) >= 0).sum())
+    assert totalP > total1
+
+
+def test_sealed_multiprobe_improves_aged_recall():
+    """After everything hot has sealed away, multi-probe sealed recall
+    is no worse than single-probe (and the candidate pool is larger)."""
+    res = {}
+    for p in (1, 4):
+        cfg = cold_cfg(snap_probes=p, cold_segments=0, max_snapshots=6)
+        vecs = _clustered(600, cfg.dim, seed=5)
+        idx = PFOIndex(cfg, seed=0)
+        for s in range(0, 600, 300):
+            idx.insert(np.arange(s, s + 300, dtype=np.int32),
+                       vecs[s:s + 300])
+        from repro.core import seal_step
+        idx.state = seal_step(idx.state, cfg)      # age out the hot tier
+        rng = np.random.default_rng(6)
+        qv = vecs[rng.integers(0, 600, 48)] + rng.normal(
+            size=(48, cfg.dim)).astype(np.float32) * 0.02
+        ids, _ = idx.query(qv, k=10)
+        oidx, _ = ops.brute_force_topk(jnp.asarray(qv), jnp.asarray(vecs),
+                                       10, "angular")
+        oid = np.asarray(oidx)
+        res[p] = np.mean([len(set(ids[i]) & set(oid[i])) / 10
+                          for i in range(48)])
+    assert res[4] >= res[1]
+
+
+def test_top_bucket_prefix_reachable():
+    """Entries whose bucket prefix is all-ones must surface from sealed
+    probes: the span's uint32 upper bound wraps to 0 there and
+    previously produced an empty span (regression — the cold tier made
+    span_gather the only access path to spilled data)."""
+    cfg = small_pfo_config()                    # snap_prefix_bits == 8
+    snaps = snap_mod.init_snapshots(cfg)
+    keys = np.array([0xFF000001, 0xFF7FFFFF, 0x12345678], np.uint32)
+    ids = np.array([7, 8, 9], np.int32)
+    snaps = snap_mod.seal(snaps, jnp.asarray(keys), jnp.asarray(ids),
+                          jnp.asarray(ids), jnp.ones(3, bool),
+                          jnp.int32(1), cfg)
+    cids, _ = snap_mod.probe(snaps, jnp.asarray(keys), cfg)
+    got = [set(int(x) for x in row if x >= 0) for row in np.asarray(cids)]
+    assert 7 in got[0] and 8 in got[1] and 9 in got[2]
+
+
+# ======================================================================
+# differential: hot+cold vs all-device (tentpole acceptance)
+# ======================================================================
+def _trace_indexes(n_waves, wave, dim_seed=7):
+    """Drive the same insert/delete trace through a spilling cold index
+    and a never-spilling all-device reference; return both + queries."""
+    base = dict(max_nodes_per_tree=48, max_leaves_per_tree=64,
+                main_max_nodes_per_tree=128, main_max_leaves_per_tree=512,
+                bloom_bits=0, bloom_hashes=0)
+    cold = PFOIndex(small_pfo_config(
+        **base, max_snapshots=3, cold_segments=24, cold_cache_slots=96,
+        cold_fetch_rounds=8), seed=0)
+    ref = PFOIndex(small_pfo_config(
+        **base, max_snapshots=24), seed=0)
+    vecs = _clustered(n_waves * wave, cold.cfg.dim, seed=dim_seed)
+    nxt = 0
+    for w in range(n_waves):
+        ids = np.arange(nxt, nxt + wave, dtype=np.int32)
+        cold.insert(ids, vecs[nxt:nxt + wave])
+        ref.insert(ids, vecs[nxt:nxt + wave])
+        nxt += wave
+        if w >= 1:
+            dead = np.arange(nxt - 2 * wave, nxt - 2 * wave + wave // 4,
+                             dtype=np.int32)
+            cold.delete(dead)
+            ref.delete(dead)
+    return cold, ref, vecs
+
+
+@pytest.fixture(scope="module")
+def differential_pair():
+    return _trace_indexes(n_waves=5, wave=400)
+
+
+def test_cold_vs_all_device_bit_identical(differential_pair):
+    """The acceptance differential: after a spilling insert/delete
+    trace, every query answers bit-identically to an all-device index
+    whose ring never fills (same seal epochs, same content — the cold
+    tier must be a pure capacity extension)."""
+    cold, ref, vecs = differential_pair
+    assert cold.stats()["cold"]["segments_spilled"] >= 2
+    assert "spill" in cold.maintenance_log
+    assert "merge" not in ref.maintenance_log     # ref truly never merged
+    rng = np.random.default_rng(11)
+    for q in (1, 16, 64):
+        qv = vecs[rng.integers(0, len(vecs), q)] + rng.normal(
+            size=(q, cold.cfg.dim)).astype(np.float32) * 0.03
+        ci, cd = cold.query(qv, k=10)
+        ri, rd = ref.query(qv, k=10)
+        np.testing.assert_array_equal(ci, ri)
+        np.testing.assert_array_equal(cd, rd)
+
+
+def test_cold_differential_warm_cache_zero_fetches(differential_pair):
+    """Re-running the same queries against the warmed cache does no
+    further fetch work and still matches the reference."""
+    cold, ref, vecs = differential_pair
+    qv = vecs[:32]
+    ci, _ = cold.query(qv, k=10)
+    f0 = cold.cold.counters["fetches"]
+    ci2, _ = cold.query(qv, k=10)
+    assert cold.cold.counters["fetches"] == f0
+    np.testing.assert_array_equal(ci, ci2)
+    ri, _ = ref.query(qv, k=10)
+    np.testing.assert_array_equal(ci, ri)
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(2, 4), st.integers(120, 260), st.data())
+def test_property_cold_differential(n_waves, wave, data):
+    """Property harness (hypothesis or the _prop fallback): random
+    small traces keep the cold index bit-identical to the reference."""
+    cold, ref, vecs = _trace_indexes(
+        n_waves, wave, dim_seed=data.draw(st.integers(0, 1000)))
+    q = data.draw(st.integers(1, 16))
+    rng = np.random.default_rng(data.draw(st.integers(0, 1000)))
+    qv = vecs[rng.integers(0, len(vecs), q)] + rng.normal(
+        size=(q, cold.cfg.dim)).astype(np.float32) * 0.03
+    ci, cd = cold.query(qv, k=10)
+    ri, rd = ref.query(qv, k=10)
+    np.testing.assert_array_equal(ci, ri)
+    np.testing.assert_array_equal(cd, rd)
+
+
+# ======================================================================
+# capacity: >= 4x the device ring, recall gate under churn
+# ======================================================================
+@pytest.mark.slow
+def test_capacity_4x_ring_recall_under_churn():
+    """An index with a cold tier serves a dataset >= 4x the items the
+    device ring was holding when it first filled, across >= 2 spills
+    and interleaved insert/delete churn, with recall@10 >= 0.9 vs
+    brute force over the live set — the HBM-unbound capacity claim."""
+    cfg = cold_cfg(max_candidates_per_probe=32, max_candidates_total=384,
+                   snap_budget_per_probe=32, snap_probes=2,
+                   cold_segments=32, cold_cache_slots=96)
+    idx = PFOIndex(cfg, seed=0)
+    # 100 planted clusters: top-10 is cluster-membership-shaped, the
+    # regime the paper's MNIST/COLOR workloads sit in (30 clusters at
+    # this live-set size would make top-10 an intra-cluster fine
+    # ranking, which bounds ANY candidate-budgeted LSH under 0.9)
+    centers = np.random.default_rng(99).normal(
+        size=(100, cfg.dim)).astype(np.float32)
+    live: dict[int, np.ndarray] = {}
+    nxt = 0
+    ring_full_items = None
+    wave = 150
+    while True:
+        vecs = _clustered(wave, cfg.dim, seed=300 + nxt, centers=centers)
+        ids = np.arange(nxt, nxt + wave, dtype=np.int32)
+        idx.insert(ids, vecs)
+        for i, vec in zip(ids, vecs):
+            live[int(i)] = vec
+        nxt += wave
+        if nxt >= 2 * wave:                       # churn: delete a slice
+            dead = np.arange(nxt - 2 * wave, nxt - 2 * wave + wave // 3,
+                             dtype=np.int32)
+            idx.delete(dead)
+            for i in dead:
+                live.pop(int(i), None)
+        spills = idx.cold.counters["spills"]
+        if ring_full_items is None and spills >= 1:
+            ring_full_items = nxt                 # ring capacity reached
+        if ring_full_items is not None and nxt >= 4 * ring_full_items \
+                and spills >= 2:
+            break
+        assert nxt < 40_000, "never spilled — config broken"
+    assert idx.cold.counters["spills"] >= 2
+    assert len(live) >= 4 * ring_full_items * 2 // 3   # churn kept most
+
+    lid = np.array(sorted(live))
+    lv = np.stack([live[int(i)] for i in lid])
+    rng = np.random.default_rng(17)
+    pick = rng.integers(0, len(lid), 64)
+    qv = lv[pick] + rng.normal(size=(64, cfg.dim)).astype(np.float32) * 0.02
+    ids, _ = idx.query(qv, k=10)
+    oidx, _ = ops.brute_force_topk(jnp.asarray(qv), jnp.asarray(lv), 10,
+                                   "angular")
+    oid = lid[np.asarray(oidx)]
+    recall = np.mean([len(set(ids[i]) & set(oid[i])) / 10
+                      for i in range(64)])
+    assert recall >= 0.9, (recall, idx.stats()["cold"])
+    # deleted ids never resurface from the cold tier
+    deleted = set(range(nxt)) - set(int(i) for i in lid)
+    hits = set(int(x) for row in ids for x in row if x >= 0)
+    assert not (hits & deleted)
+
+
+# ======================================================================
+# deletes / merges against cold-resident data
+# ======================================================================
+def test_delete_cold_resident_frees_slots_and_excludes():
+    cfg = cold_cfg()
+    vecs = _clustered(1500, cfg.dim, seed=21)
+    idx = PFOIndex(cfg, seed=0)
+    for s in range(0, 1500, 300):
+        idx.insert(np.arange(s, s + 300, dtype=np.int32), vecs[s:s + 300])
+    assert idx.cold.counters["spills"] >= 1
+    free0 = idx.stats()["store_free"]
+    fetches0 = idx.cold.counters["fetches"]
+    victims = np.arange(0, 40, dtype=np.int32)   # oldest -> cold resident
+    rounds = idx.delete(victims)
+    assert rounds >= 2                            # COLD_MISS retry happened
+    assert idx.cold.counters["fetches"] > fetches0
+    assert idx.stats()["store_free"] == free0 + 40
+    ids, _ = idx.query(vecs[:40], k=10)
+    assert not np.isin(victims, ids).any()
+
+
+def test_cold_merge_drains_tombstones_without_resurfacing():
+    cfg = cold_cfg(max_tombstones=32)
+    vecs = _clustered(1500, cfg.dim, seed=22)
+    idx = PFOIndex(cfg, seed=0)
+    for s in range(0, 1500, 300):
+        idx.insert(np.arange(s, s + 300, dtype=np.int32), vecs[s:s + 300])
+    victims = np.arange(0, 120, dtype=np.int32)  # >> max_tombstones
+    idx.delete(victims)
+    assert idx.cold.counters["cold_merges"] >= 1
+    assert idx.stats()["tombstones"] < 32
+    ids, _ = idx.query(vecs[:120], k=10)
+    assert not np.isin(victims, ids).any()
+    ids2, _ = idx.query(vecs[600:610], k=3)
+    assert (ids2[:, 0] == np.arange(600, 610)).all()
+
+
+def test_background_compaction_preserves_queries():
+    cfg = cold_cfg()
+    vecs = _clustered(1500, cfg.dim, seed=23)
+    idx = PFOIndex(cfg, seed=0)
+    for s in range(0, 1500, 300):
+        idx.insert(np.arange(s, s + 300, dtype=np.int32), vecs[s:s + 300])
+    n0 = idx.cold.n_cold
+    assert n0 >= 2
+    i0, d0 = idx.query(vecs[:16], k=5)
+    idx.cold.compact_start_async()
+    idx.cold._worker.join()                       # deterministic in tests
+    idx.state = idx.cold.compact_maybe_install(idx.state)
+    assert idx.cold.counters["compactions"] == 1
+    assert idx.cold.n_cold <= n0
+    i1, d1 = idx.query(vecs[:16], k=5)
+    np.testing.assert_array_equal(i0, i1)
+    np.testing.assert_array_equal(d0, d1)
+
+
+def test_stale_background_fold_discarded():
+    """A fold computed against an older cold layout (a spill landed
+    while it ran) must be discarded by the generation check, and the
+    index keeps answering correctly from the un-swapped layout."""
+    cfg = cold_cfg()
+    vecs = _clustered(900, cfg.dim, seed=24)
+    idx = PFOIndex(cfg, seed=0)
+    for s in range(0, 900, 300):
+        idx.insert(np.arange(s, s + 300, dtype=np.int32), vecs[s:s + 300])
+    assert idx.cold.n_cold >= 1
+    idx.cold.compact_start_async()
+    idx.cold._worker.join()
+    idx.cold._gen += 1                 # the layout moved mid-fold
+    before = idx.cold.counters["compactions"]
+    idx.state = idx.cold.compact_maybe_install(idx.state)
+    assert idx.cold.counters["compactions"] == before   # discarded
+    ids, _ = idx.query(vecs[:8], k=5)
+    assert (ids[:, 0] == np.arange(8)).all()
+
+
+def test_missing_newer_segment_blocks_stale_cold_resolution():
+    """Two cold segments hold copies of the same id (delete+re-insert
+    history); only the OLDER one is cache-resident.  The lookup must
+    NOT resolve through the stale copy (its val may be a store slot
+    since reused by another id — resolving would free the wrong slot):
+    the row stays unresolved, the newer segment lands in ``missing``,
+    and after the fetch the newest copy wins."""
+    from repro.core.index import (_main_lookup_cold, _snap_cfg_main,
+                                  init_state)
+    from repro.core.lsh import main_table_keys
+
+    cfg = cold_cfg(cold_cache_slots=2)
+    mcfg = _snap_cfg_main(cfg)
+    state = init_state(cfg, jax.random.PRNGKey(0))
+    X = jnp.array([42], jnp.int32)
+    mh, _ = main_table_keys(X, cfg)
+    pfx = (mh.astype(jnp.uint32)
+           >> jnp.uint32(32 - mcfg.snap_prefix_bits))
+    filt = bloom_mod.build(pfx, mcfg.bloom_hashes_eff, mcfg.bloom_bits_eff)
+
+    cold = state.cold
+    route = cold.main_route
+    route = route._replace(
+        blooms=route.blooms.at[0].set(filt).at[1].set(filt),
+        stamps=route.stamps.at[0].set(1).at[1].set(2),
+        counts=route.counts.at[0].set(1).at[1].set(1))
+
+    def seg(val):
+        cap = mcfg.snapshot_capacity
+        keys = jnp.full((cap,), jnp.uint32(0xFFFFFFFF)).at[0].set(mh[0])
+        ids = jnp.full((cap,), -1, jnp.int32).at[0].set(42)
+        vals = jnp.zeros((cap,), jnp.int32).at[0].set(val)
+        return keys, ids, vals
+
+    k0, i0, v0 = seg(11)                  # stale copy, seg 0, stamp 1
+    cache = coldtier.cache_install(cold.main_cache, jnp.int32(0), k0, i0,
+                                   v0, jnp.int32(1), jnp.int32(0),
+                                   jnp.int32(0))
+    state = state._replace(cold=cold._replace(
+        main_route=route, main_cache=cache, n_cold=jnp.int32(2)))
+
+    slot, found, unresolved, wanted, missing, _, _ = _main_lookup_cold(
+        state, X, cfg)
+    assert not bool(found[0])             # stale resident copy not trusted
+    assert bool(unresolved[0])
+    assert bool(np.asarray(missing)[1])   # the newer segment gets fetched
+
+    k1, i1, v1 = seg(77)                  # newer copy, seg 1, stamp 2
+    cache = coldtier.cache_install(state.cold.main_cache, jnp.int32(1),
+                                   k1, i1, v1, jnp.int32(2), jnp.int32(0),
+                                   jnp.int32(1))
+    state = state._replace(cold=state.cold._replace(main_cache=cache))
+    slot, found, unresolved, _, missing, _, _ = _main_lookup_cold(
+        state, X, cfg)
+    assert bool(found[0]) and int(slot[0]) == 77   # newest stamp wins
+    assert not bool(unresolved[0])
+    assert not np.asarray(missing).any()
+
+
+def test_spill_into_full_cold_tier_raises():
+    """Exhausting the cold tier (more unique live entries than
+    cold_segments x segment capacity, so compaction cannot shrink it)
+    must refuse loudly — a silent out-of-bounds routing scatter would
+    make the spilled segment's ids vanish from queries."""
+    cfg = cold_cfg(cold_segments=2)
+    idx = PFOIndex(cfg, seed=0)
+    vecs = _clustered(4000, cfg.dim, seed=61)
+    with pytest.raises(RuntimeError,
+                       match="cold (routing table full|tier overflow)"):
+        for s in range(0, 4000, 200):
+            idx.insert(np.arange(s, s + 200, dtype=np.int32),
+                       vecs[s:s + 200])
+
+
+# ======================================================================
+# steady-state transfer discipline (acceptance)
+# ======================================================================
+def test_cold_steady_state_single_readback():
+    """With the cold tier on: a warm insert round still does exactly
+    one explicit scalar readback, and a query flush whose Bloom pass
+    hits only cache-resident segments does zero extra syncs and zero
+    fetches — all under the device->host transfer guard."""
+    from repro.serving import StreamConfig, StreamEngine
+    cfg = cold_cfg()
+    vecs = _clustered(2200, cfg.dim, seed=31)
+    eng = StreamEngine(PFOIndex(cfg, seed=0),
+                       StreamConfig(max_batch=64, min_batch=64))
+    eng.warmup()
+    for i in range(2000):
+        eng.insert(i, vecs[i])
+    eng.flush()
+    assert eng.stats()["spills"] >= 1
+    # warm the cold cache with the query working set
+    for i in range(0, 128, 2):
+        eng.query(vecs[i])
+    eng.flush()
+
+    # steady-state queries: same working set, warm cache, NO updates in
+    # between -> no new cold segments, so zero fetches and zero syncs
+    f0 = eng.stats()["cold"]["fetches"]
+    s0 = eng.index.sync_count
+    for i in range(0, 128, 2):
+        eng.query(vecs[i])
+    with jax.transfer_guard_device_to_host("disallow"):
+        out = eng.flush()
+    assert len(out) == 64
+    assert eng.stats()["cold"]["fetches"] == f0
+    assert eng.index.sync_count == s0
+
+    # steady-state insert rounds: one readback per round (epochs like
+    # spill/seal add their own epoch readbacks, so pick a quiet window)
+    for attempt in range(6):
+        for i in range(3000 + attempt * 64, 3064 + attempt * 64):
+            eng.insert(i, vecs[i % 2200])
+        m0 = len(eng.index.maintenance_log)
+        s0, r0 = eng.index.sync_count, eng.n_rounds
+        with jax.transfer_guard_device_to_host("disallow"):
+            eng.flush()
+        if len(eng.index.maintenance_log) == m0:   # quiet window found
+            assert eng.index.sync_count - s0 == eng.n_rounds - r0
+            break
+    else:
+        pytest.fail("no maintenance-free flush window in 6 attempts")
+
+
+# ======================================================================
+# checkpoint: manifest + hot state (satellite)
+# ======================================================================
+@pytest.mark.parametrize("backing", ["ram", "files"])
+def test_checkpoint_roundtrip_cold(tmp_path, backing):
+    from repro.checkpoint import (load_index_checkpoint,
+                                  save_index_checkpoint)
+    cfg = cold_cfg()
+    root = str(tmp_path / "cold") if backing == "files" else None
+    vecs = _clustered(1500, cfg.dim, seed=41)
+    idx = PFOIndex(cfg, seed=0, cold_dir=root)
+    for s in range(0, 1500, 300):
+        idx.insert(np.arange(s, s + 300, dtype=np.int32), vecs[s:s + 300])
+    idx.delete(np.arange(10, 30, dtype=np.int32))
+    assert idx.cold.n_cold >= 2
+    qv = vecs[::41]
+    i0, d0 = idx.query(qv, k=10)
+
+    path = save_index_checkpoint(str(tmp_path / "ck"), 7, idx)
+    assert (tmp_path / "ck" / "step_00000007" / "manifest.json").exists()
+    idx2 = load_index_checkpoint(str(tmp_path / "ck"), 7, cfg, seed=0,
+                                 cold_dir=str(tmp_path / "cold2")
+                                 if backing == "files" else None)
+    i1, d1 = idx2.query(qv, k=10)
+    np.testing.assert_array_equal(i0, i1)
+    np.testing.assert_array_equal(d0, d1)
+    assert idx2.cold.n_cold == idx.cold.n_cold
+    # the restored index keeps serving writes (incl. further spills)
+    more = _clustered(600, cfg.dim, seed=42)
+    idx2.insert(np.arange(5000, 5600, dtype=np.int32), more)
+    ids, dd = idx2.query(more[:4], k=3)
+    assert (ids[:, 0] == np.arange(5000, 5004)).all()
+
+
+def test_checkpoint_hardlinks_not_redump(tmp_path):
+    """File-backed segment checkpoints reference by hardlink — same
+    inode, no data copy (the manifest-not-redump contract)."""
+    import os
+    from repro.checkpoint import save_index_checkpoint
+    cfg = cold_cfg()
+    root = str(tmp_path / "cold")
+    vecs = _clustered(1200, cfg.dim, seed=43)
+    idx = PFOIndex(cfg, seed=0, cold_dir=root)
+    for s in range(0, 1200, 300):
+        idx.insert(np.arange(s, s + 300, dtype=np.int32), vecs[s:s + 300])
+    assert idx.cold.n_cold >= 1
+    save_index_checkpoint(str(tmp_path / "ck"), 1, idx)
+    seg_dir = tmp_path / "ck" / "step_00000001" / "segments"
+    linked = 0
+    for f in os.listdir(seg_dir):
+        src = os.path.join(root, f)
+        if os.path.exists(src):
+            if os.path.samefile(src, seg_dir / f):
+                linked += 1
+    assert linked >= 1
+
+
+# ======================================================================
+# engine stats plumbing (satellite)
+# ======================================================================
+def test_engine_stats_expose_cold_counters():
+    from repro.serving import StreamConfig, StreamEngine
+    cfg = cold_cfg()
+    vecs = _clustered(1800, cfg.dim, seed=51)
+    eng = StreamEngine(PFOIndex(cfg, seed=0),
+                       StreamConfig(max_batch=64, min_batch=64))
+    for i in range(1500):
+        eng.insert(i, vecs[i])
+    eng.flush()
+    for i in range(0, 64, 2):
+        eng.query(vecs[i])
+    eng.flush()
+    st = eng.stats()
+    assert st["spills"] >= 1
+    cold = st["cold"]
+    for key in ("segments_spilled", "fetches", "cache_hit_rate",
+                "bloom_fp_rate", "fetches_per_query_round",
+                "cold_segments"):
+        assert key in cold
+    assert cold["segments_spilled"] == st["spills"]
+    # cold-disabled engines report None (dist backend contract too)
+    eng2 = StreamEngine(PFOIndex(small_pfo_config(), seed=0))
+    assert eng2.stats()["cold"] is None
