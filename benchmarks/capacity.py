@@ -25,7 +25,7 @@ import json
 
 import numpy as np
 
-from common import bench_cfg, oracle
+from common import bench_cfg, emit_bench, oracle
 from repro.core import PFOConfig, PFOIndex
 
 
@@ -98,6 +98,8 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="tiny spill-forcing config + assertions (CI)")
     ap.add_argument("--json", default=None)
+    ap.add_argument("--out-dir", default=".",
+                    help="directory for BENCH_capacity.json telemetry")
     args = ap.parse_args()
 
     kw: dict = dict(dim=args.dim, bloom_bits=0, bloom_hashes=0,
@@ -150,6 +152,15 @@ def main():
     if args.json:
         with open(args.json, "w") as f:
             json.dump(rec_out, f)
+
+    emit_bench("capacity",
+               config={"dim": args.dim, "mult": args.mult,
+                       "wave": args.wave, "queries": args.queries,
+                       "smoke": args.smoke,
+                       "cold_segments": cold_cfg.cold_segments,
+                       "cold_cache_slots": cold_cfg.cold_cache_slots,
+                       "cold_fetch_rounds": cold_cfg.cold_fetch_rounds},
+               results=rec_out, obs=idx.obs, out_dir=args.out_dir)
 
     if args.smoke:
         assert rec_out["spills"] >= 2, rec_out

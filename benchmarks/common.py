@@ -71,3 +71,42 @@ def bench_cfg(**kw) -> PFOConfig:
                 snap_budget_per_probe=24)
     base.update(kw)
     return PFOConfig(**base)
+
+
+# ----------------------------------------------------------------------
+# machine-readable telemetry (BENCH_<name>.json, uploaded by CI)
+# ----------------------------------------------------------------------
+def bench_env() -> dict:
+    """Environment fingerprint stamped into every benchmark artifact."""
+    import platform
+    dev = jax.devices()[0]
+    return {
+        "jax": jax.__version__,
+        "backend": dev.platform,
+        "device_kind": dev.device_kind,
+        "n_devices": jax.device_count(),
+        "python": platform.python_version(),
+    }
+
+
+def emit_bench(name: str, config: dict, results: dict, obs=None,
+               out_dir: str = ".") -> str:
+    """Write ``BENCH_<name>.json``: config + headline results + (when an
+    observability handle is passed) the full metrics snapshot with
+    per-histogram p50/p99.  Returns the path written."""
+    import json
+    import os
+    doc = {
+        "name": name,
+        "created_unix": int(time.time()),
+        "env": bench_env(),
+        "config": config,
+        "results": results,
+    }
+    if obs is not None:
+        doc["metrics"] = obs.snapshot()
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, default=str)
+    print(f"[bench] wrote {path}")
+    return path

@@ -38,9 +38,10 @@ import time
 
 import numpy as np
 
-from common import bench_cfg, clustered_dataset
+from common import bench_cfg, clustered_dataset, emit_bench
 from repro.core import PFOIndex
 from repro.core.index import delete_step, insert_step, query_step
+from repro.obs import Obs
 from repro.serving import StreamConfig, StreamEngine
 
 
@@ -145,6 +146,8 @@ def main():
     ap.add_argument("--n-model", type=int, default=4)
     ap.add_argument("--n-data", type=int, default=1)
     ap.add_argument("--json", default=None)
+    ap.add_argument("--out-dir", default=".",
+                    help="where BENCH_streaming.json + trace.json land")
     args = ap.parse_args()
     if args.distributed:
         import jax
@@ -177,7 +180,10 @@ def main():
     scfg = StreamConfig(max_batch=args.max_batch, min_batch=8,
                         query_max_batch=args.query_max_batch or None,
                         default_k=args.k)
-    eng = StreamEngine(PFOIndex(cfg, seed=0), scfg)
+    # tracing stays ON for the measured run — the overhead gate below
+    # asserts it is free, and CI archives the resulting trace.json
+    obs = Obs(metrics=True, trace=True, trace_capacity=1 << 15)
+    eng = StreamEngine(PFOIndex(cfg, seed=0, obs=obs), scfg)
     ins_before = insert_step._cache_size()
     del_before = delete_step._cache_size()
     qry_before = query_step._cache_size()
@@ -226,6 +232,41 @@ def main():
         rec["dist_vs_engine"] = round(rec["dist_rps"] / eng_rps, 2)
         rec["dist_vs_per_request"] = round(rec["dist_rps"] / base_rps, 2)
 
+    # ---- telemetry ---------------------------------------------------
+    trace_path = os.path.join(args.out_dir, "trace.json")
+    obs.save_trace(trace_path)
+    print(f"[bench] wrote {trace_path} "
+          f"({len(obs.tracer.events())} spans, {obs.tracer.dropped} dropped)")
+
+    if args.smoke:
+        # tracing-overhead gate: rerun the engine leg with observability
+        # fully OFF on a fresh engine; the traced run must stay within
+        # 5%.  One remeasure (fresh engines both ways) absorbs host
+        # timing noise before declaring a regression.
+        def engine_rps_with(obs_handle):
+            e = StreamEngine(PFOIndex(cfg, seed=0, obs=obs_handle), scfg)
+            e.index.insert(seed_ids, seed_vecs)
+            e.warmup()
+            run_engine(e, reqs[:warm], args.flush_every)
+            t, _ = run_engine(e, reqs[warm:], args.flush_every)
+            return (len(reqs) - warm) / t
+
+        traced_rps = eng_rps
+        off_rps = engine_rps_with(Obs(metrics=False, trace=False))
+        overhead = 1.0 - traced_rps / off_rps
+        if overhead > 0.05:
+            traced_rps = engine_rps_with(Obs(metrics=True, trace=True))
+            off_rps = engine_rps_with(Obs(metrics=False, trace=False))
+            overhead = 1.0 - traced_rps / off_rps
+        rec["tracing_overhead"] = round(max(overhead, 0.0), 4)
+
+    emit_bench("streaming", config={
+        "requests": args.requests, "seed_vecs": args.seed_vecs,
+        "dim": args.dim, "k": args.k, "max_batch": args.max_batch,
+        "flush_every": args.flush_every, "smoke": args.smoke,
+        "buckets": list(scfg.buckets),
+    }, results=rec, obs=obs, out_dir=args.out_dir)
+
     print(json.dumps(rec, indent=2))
     if args.json:
         with open(args.json, "w") as f:
@@ -233,6 +274,8 @@ def main():
     if args.smoke:
         assert rec["speedup"] >= 2.0, \
             f"streaming engine speedup {rec['speedup']} < 2x"
+        assert rec["tracing_overhead"] <= 0.05, \
+            f"tracing overhead {rec['tracing_overhead']:.1%} > 5%"
         if args.distributed:
             # virtual devices timeshare the host cores, so the gate is
             # a sanity floor vs the per-request baseline; real multi-

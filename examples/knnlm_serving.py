@@ -40,3 +40,8 @@ for r in range(args.rounds):
     print(f"round {r}: tokens[0]={out[0].tolist()} "
           f"datastore={stats['datastore_size']}")
 print("PFO:", pfo.stats())
+
+# the serving engine shares the datastore's Obs handle: prefill/decode/
+# kNN latency histograms land next to the stream's round metrics
+print()
+print(engine.obs.format(title="knn-lm serving metrics"))

@@ -44,4 +44,12 @@ assert ids2[0, 0] == 0
 index.delete(np.array([1, 2], np.int32))
 ids3, _ = index.query(vecs[1:3], k=3)
 assert not np.isin([1, 2], ids3).any()
-print("deleted ids 1,2 -> no longer returned. done.")
+print("deleted ids 1,2 -> no longer returned.")
+
+# --- observability -----------------------------------------------------
+# every PFOIndex carries an Obs handle: op latency histograms
+# (p50/p90/p99), maintenance-epoch timings and readback counters accrue
+# automatically; obs.format() renders the snapshot as a table
+print()
+print(index.obs.format(title="quickstart metrics"))
+print("done.")

@@ -385,6 +385,8 @@ class ColdManager:
         self._worker: threading.Thread | None = None
         self._worker_out: _FoldResult | None = None
         self._lock = threading.Lock()
+        from repro.obs import NULL_OBS
+        self.obs = NULL_OBS          # rebound by PFOIndex.set_obs
         self.counters = {
             "spills": 0, "fetches": 0, "fetch_rounds": 0,
             "query_rounds": 0, "incomplete_query_rounds": 0,
@@ -395,6 +397,27 @@ class ColdManager:
         }
 
     # -- observability --------------------------------------------------
+    def set_obs(self, obs) -> None:
+        """Bind an observability handle; cold stats mirror into
+        ``cold.*`` gauges lazily at snapshot time."""
+        self.obs = obs
+        obs.on_snapshot("cold", self._mirror_obs)
+
+    def _mirror_obs(self) -> None:
+        g = self.obs.gauge
+        s = self.stats()
+        g("cold.segments").set(s["cold_segments"])
+        g("cold.spills").set(s["segments_spilled"])
+        g("cold.fetches").set(s["fetches"])
+        g("cold.fetch_rounds").set(s["fetch_rounds"])
+        g("cold.fetches_per_query_round").set(s["fetches_per_query_round"])
+        g("cold.incomplete_query_rounds").set(s["incomplete_query_rounds"])
+        g("cold.cache_hit_rate").set(s["cache_hit_rate"])
+        g("cold.bloom_fp_rate").set(s["bloom_fp_rate"])
+        g("cold.compactions").set(s["compactions"])
+        g("cold.merges").set(s["cold_merges"])
+        g("cold.store_bytes_written").set(s["store_bytes_written"])
+
     @property
     def n_cold(self) -> int:
         return len(self.main_gids)
@@ -661,9 +684,10 @@ class ColdManager:
     def compact(self, state):
         """Synchronous cold-only compaction (no tombstones, no ring)."""
         self._discard_worker()
-        state = self._install_fold(
-            state, self._fold_all(np.zeros((0,), np.int32)),
-            mark_futile=True)
+        with self.obs.span("compaction", mode="sync"):
+            state = self._install_fold(
+                state, self._fold_all(np.zeros((0,), np.int32)),
+                mark_futile=True)
         self.counters["compactions"] += 1
         return state
 
@@ -681,7 +705,9 @@ class ColdManager:
             return True                        # result awaiting install
 
         def run():
-            out = self._fold_all(np.zeros((0,), np.int32))
+            # worker-thread span: lands on its own track in the trace
+            with self.obs.span("compaction", mode="background"):
+                out = self._fold_all(np.zeros((0,), np.int32))
             with self._lock:
                 self._worker_out = out
 
@@ -717,6 +743,10 @@ class ColdManager:
         Synchronous by design — the device-side tombstone buffer resets
         in the same epoch, so queries can never observe the window
         where a tombstone is gone but its sealed copy still live."""
+        with self.obs.span("cold_merge"):
+            return self._merge_cold_impl(state, tombs)
+
+    def _merge_cold_impl(self, state, tombs: np.ndarray):
         self._discard_worker()
         self._on_sync()
         ls, ms = jax.device_get((state.lsh_snaps, state.main_snaps))

@@ -47,6 +47,18 @@ FLAG_COLD_SPILL = 16
 FLAG_COLD_FULL = 32
 FLAG_COLD_MISS = 64
 
+#: bit -> short name, the label vocabulary of the per-flag fire
+#: counters (``stream.flag_fired{flag=...}`` in ``repro.obs``)
+FLAG_NAMES = {
+    FLAG_ANY_PENDING: "pending",
+    FLAG_NEED_SEAL: "need_seal",
+    FLAG_SNAPS_FULL: "snaps_full",
+    FLAG_TOMBS_FULL: "tombs_full",
+    FLAG_COLD_SPILL: "cold_spill",
+    FLAG_COLD_FULL: "cold_full",
+    FLAG_COLD_MISS: "cold_miss",
+}
+
 
 def pack_round_flags(any_pending: jax.Array, need_seal: jax.Array,
                      snaps_full: jax.Array, tombs_full: jax.Array,

@@ -23,11 +23,14 @@ All L LSH tables are stacked into one forest with global tree ids
 from __future__ import annotations
 
 import functools
+import time
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs import Obs
 
 from . import coldtier
 from . import snapshots as snap_mod
@@ -574,7 +577,7 @@ class PFOIndex:
     MAX_ROUNDS = 64
 
     def __init__(self, cfg: PFOConfig, seed: int = 0,
-                 cold_dir: str | None = None):
+                 cold_dir: str | None = None, obs: Obs | None = None):
         self.cfg = cfg
         self.state = init_state(cfg, jax.random.PRNGKey(seed))
         self.n_inserted = 0
@@ -592,9 +595,37 @@ class PFOIndex:
             self.cold = coldtier.ColdManager(
                 cfg, _snap_cfg_lsh(cfg), _snap_cfg_main(cfg),
                 root=cold_dir, on_sync=self._count_sync)
+        # metrics on / tracing off by default; everything recorded is
+        # host-side, so instrumentation never adds a device readback
+        self.set_obs(obs if obs is not None else Obs())
 
     def _count_sync(self) -> None:
         self.sync_count += 1
+
+    # -- observability --------------------------------------------------
+    def set_obs(self, obs: Obs) -> None:
+        """Bind an observability handle; the index's counters mirror
+        into gauges lazily at snapshot time (``repro.obs``), and the
+        cold manager inherits the same handle."""
+        self.obs = obs
+        obs.on_snapshot("index", self._mirror_obs)
+        if self.cold is not None:
+            self.cold.set_obs(obs)
+
+    def _mirror_obs(self) -> None:
+        o = self.obs
+        o.gauge("index.readbacks").set(self.sync_count)
+        o.gauge("index.items_inserted").set(self.n_inserted)
+
+    def _epoch(self, name: str, fn, *args):
+        """Run one maintenance epoch under a span + its latency
+        histogram (``index.maint_ms{epoch=...}``)."""
+        t0 = time.perf_counter()
+        with self.obs.span(name):
+            out = fn(*args)
+        self.obs.histogram("index.maint_ms", epoch=name).observe(
+            (time.perf_counter() - t0) * 1e3)
+        return out
 
     # -- capacity heuristics -------------------------------------------
     def _lsh_capacity(self, n: int) -> int:
@@ -636,20 +667,25 @@ class PFOIndex:
             if flags & FLAG_COLD_SPILL:
                 # capacity relief with a cold tier: spill, never merge
                 if self.cold.n_cold >= self.cfg.cold_segments:
-                    self.state = self.cold.compact(self.state)
+                    self.state = self._epoch("cold_compact",
+                                             self.cold.compact, self.state)
                     self.maintenance_log.append("cold_compact")
-                self.state = self.cold.spill(self.state)
+                self.state = self._epoch("spill", self.cold.spill,
+                                         self.state)
                 self.maintenance_log.append("spill")
             elif flags & FLAG_SNAPS_FULL:
-                self.state = merge_step(self.state, self.cfg)
+                self.state = self._epoch("merge", merge_step, self.state,
+                                         self.cfg)
                 self.maintenance_log.append("merge")
-            self.state = seal_step(self.state, self.cfg)
+            self.state = self._epoch("seal", seal_step, self.state,
+                                     self.cfg)
             self.maintenance_log.append("seal")
         if flags & FLAG_TOMBS_FULL:
             if self.cold is not None:
-                self._merge_with_cold()
+                self._epoch("merge", self._merge_with_cold)
             else:
-                self.state = merge_step(self.state, self.cfg)
+                self.state = self._epoch("merge", merge_step, self.state,
+                                         self.cfg)
             self.maintenance_log.append("merge")
         if self.cold is not None and flags & FLAG_COLD_FULL:
             self.cold.compact_start_async()
@@ -678,28 +714,36 @@ class PFOIndex:
         main_active = jnp.ones((n,), bool)
         lsh_active = jnp.ones((n * self.cfg.L,), bool)
         lcap, mcap = self._lsh_capacity(n), self._main_capacity(n)
-        flags = self._ensure_flags(mcap, lcap)
-        rounds = 0
-        for _ in range(self.MAX_ROUNDS):
-            self._maintain(flags)
-            self.state, slots, main_active, lsh_active, fw = insert_step(
-                self.state, ids, vecs, slots, main_active, lsh_active,
-                self.cfg, mcap, lcap)
-            rounds += 1
-            flags = self._read_flags(fw, (mcap, lcap))
-            if not flags & FLAG_ANY_PENDING:
-                break
+        t0 = time.perf_counter()
+        with self.obs.span("insert", n=n):
+            flags = self._ensure_flags(mcap, lcap)
+            rounds = 0
+            for _ in range(self.MAX_ROUNDS):
+                self._maintain(flags)
+                self.state, slots, main_active, lsh_active, fw = insert_step(
+                    self.state, ids, vecs, slots, main_active, lsh_active,
+                    self.cfg, mcap, lcap)
+                rounds += 1
+                flags = self._read_flags(fw, (mcap, lcap))
+                if not flags & FLAG_ANY_PENDING:
+                    break
+        self.obs.histogram("index.op_ms", op="insert").observe(
+            (time.perf_counter() - t0) * 1e3)
         self.n_inserted += n
         self.rounds_log.append(rounds)
         return rounds
 
     def query(self, qvecs, k: int = 10):
         qvecs = jnp.asarray(qvecs, jnp.float32)
-        if self.cold is None:
-            ids, dists = query_step(self.state, qvecs, self.cfg, k)
-            ids, dists = jax.device_get((ids, dists))
-        else:
-            ids, dists = self._query_cold(qvecs, k)
+        t0 = time.perf_counter()
+        with self.obs.span("query", n=int(qvecs.shape[0]), k=k):
+            if self.cold is None:
+                ids, dists = query_step(self.state, qvecs, self.cfg, k)
+                ids, dists = jax.device_get((ids, dists))
+            else:
+                ids, dists = self._query_cold(qvecs, k)
+        self.obs.histogram("index.op_ms", op="query").observe(
+            (time.perf_counter() - t0) * 1e3)
         return np.asarray(ids), np.asarray(dists)
 
     def _query_cold(self, qvecs, k: int, overlap=None):
@@ -727,7 +771,8 @@ class PFOIndex:
                 self.cold.counters["incomplete_query_rounds"] += 1
                 break
             before = self.cold.counters["fetches"]
-            self.state = self.cold.fetch(self.state, wl, ml, wm, mm)
+            with self.obs.span("cold_fetch", attempt=attempt):
+                self.state = self.cold.fetch(self.state, wl, ml, wm, mm)
             if self.cold.counters["fetches"] == before:
                 # every cache slot is wanted by this round: the missing
                 # set can never drain (cache undersized for the query
@@ -741,23 +786,27 @@ class PFOIndex:
         active = jnp.ones(ids.shape, bool)
         n = int(ids.shape[0])
         lcap, mcap = self._lsh_capacity(n), self._main_capacity(n)
-        flags = self._ensure_flags(mcap, lcap)
-        rounds = 0
-        for _ in range(self.MAX_ROUNDS):
-            self._maintain(flags)
-            if self.cold is None:
-                self.state, pending, fw = delete_step(
-                    self.state, ids, active, self.cfg, mcap, lcap)
-            else:
-                self.state, pending, fw, wm, mm = delete_step_cold(
-                    self.state, ids, active, self.cfg, mcap, lcap)
-                self._delete_miss = (wm, mm)
-            rounds += 1
-            flags = self._read_flags(fw, (mcap, lcap))
-            self.fetch_delete_miss(flags)
-            if not flags & FLAG_ANY_PENDING:
-                break
-            active = pending
+        t0 = time.perf_counter()
+        with self.obs.span("delete", n=n):
+            flags = self._ensure_flags(mcap, lcap)
+            rounds = 0
+            for _ in range(self.MAX_ROUNDS):
+                self._maintain(flags)
+                if self.cold is None:
+                    self.state, pending, fw = delete_step(
+                        self.state, ids, active, self.cfg, mcap, lcap)
+                else:
+                    self.state, pending, fw, wm, mm = delete_step_cold(
+                        self.state, ids, active, self.cfg, mcap, lcap)
+                    self._delete_miss = (wm, mm)
+                rounds += 1
+                flags = self._read_flags(fw, (mcap, lcap))
+                self.fetch_delete_miss(flags)
+                if not flags & FLAG_ANY_PENDING:
+                    break
+                active = pending
+        self.obs.histogram("index.op_ms", op="delete").observe(
+            (time.perf_counter() - t0) * 1e3)
         return rounds
 
     def fetch_delete_miss(self, flags: int) -> None:
@@ -781,7 +830,8 @@ class PFOIndex:
         C, L = self.cfg.cold_segments, self.cfg.L
         zeros = np.zeros((L, C), bool)
         before = self.cold.counters["fetches"]
-        self.state = self.cold.fetch(self.state, zeros, zeros, wm, mm)
+        with self.obs.span("cold_fetch", path="delete"):
+            self.state = self.cold.fetch(self.state, zeros, zeros, wm, mm)
         if np.any(mm) and self.cold.counters["fetches"] == before:
             raise RuntimeError(
                 f"delete cannot resolve: its Bloom route spans "

@@ -106,13 +106,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dispatch import (FLAG_ANY_PENDING, FLAG_NEED_SEAL,
-                                 FLAG_SNAPS_FULL, FLAG_TOMBS_FULL,
-                                 client_ticket, merge_client_queues)
+from repro.core.dispatch import (FLAG_ANY_PENDING, FLAG_NAMES,
+                                 FLAG_NEED_SEAL, FLAG_SNAPS_FULL,
+                                 FLAG_TOMBS_FULL, client_ticket,
+                                 merge_client_queues)
 from repro.core.index import (PFOIndex, delete_step, delete_step_cold,
                               init_state, insert_step, merge_step,
                               query_step, query_step_cold, round_flags,
                               seal_step)
+from repro.obs import Obs
+from repro.obs import report as obs_report
 
 QUERY, INSERT, DELETE, UPDATE = "query", "insert", "delete", "update"
 
@@ -189,6 +192,14 @@ class LocalBackend:
         self.cfg = index.cfg
         self._cap_cache: dict[int, tuple[int, int]] = {}
         self._flags_caps = (0, 0)
+
+    # -- observability --------------------------------------------------
+    @property
+    def obs(self) -> Obs:
+        return self.index.obs
+
+    def set_obs(self, obs: Obs) -> None:
+        self.index.set_obs(obs)
 
     # -- capacities / flags --------------------------------------------
     def capacities(self, bucket: int) -> tuple[int, int]:
@@ -355,6 +366,8 @@ class DistBackend:
         self.sync_count = 0
         self.maintenance_log: list[str] = []
         self.n_inserted = 0
+        self.obs = Obs()              # metrics on / tracing off default
+        self.obs.on_snapshot("dist", self._mirror_obs)
         # device-resident accumulator of query candidates dropped by
         # owner-mailbox skew overflow (queries have no retry round);
         # read back only when stats() is asked for
@@ -421,15 +434,42 @@ class DistBackend:
         self._flags = int(jax.device_get(fw))
         return self._flags
 
+    # -- observability --------------------------------------------------
+    def set_obs(self, obs: Obs) -> None:
+        """Bind an observability handle; per-shard counters aggregate
+        host-side, lazily, at snapshot time (``dist.*`` gauges)."""
+        self.obs = obs
+        obs.on_snapshot("dist", self._mirror_obs)
+
+    def _mirror_obs(self) -> None:
+        g = self.obs.gauge
+        g("index.readbacks").set(self.sync_count)
+        g("dist.shards").set(self.dcfg.n_model)
+        # snapshot-time-only device readbacks (documented in obs README)
+        g("dist.query_candidate_drops").set(
+            int(jax.device_get(self._query_drops)))
+        occ = self._dist.shard_occupancy(self.state, self.dcfg.n_model)
+        g("dist.shard_imbalance").set(occ["imbalance"])
+        for s, v in enumerate(occ["items_per_shard"]):
+            g("dist.items_hot", shard=s).set(v)
+
+    def _epoch(self, name: str, fn, *args):
+        t0 = time.perf_counter()
+        with self.obs.span(name):
+            out = fn(*args)
+        self.obs.histogram("index.maint_ms", epoch=name).observe(
+            (time.perf_counter() - t0) * 1e3)
+        return out
+
     def maintain(self, flags: int) -> None:
         if flags & FLAG_NEED_SEAL:
             if flags & FLAG_SNAPS_FULL:
-                self.state = self._merge_fn(self.state)
+                self.state = self._epoch("merge", self._merge_fn, self.state)
                 self.maintenance_log.append("merge")
-            self.state = self._seal_fn(self.state)
+            self.state = self._epoch("seal", self._seal_fn, self.state)
             self.maintenance_log.append("seal")
         if flags & FLAG_TOMBS_FULL:
-            self.state = self._merge_fn(self.state)
+            self.state = self._epoch("merge", self._merge_fn, self.state)
             self.maintenance_log.append("merge")
         if flags & (FLAG_NEED_SEAL | FLAG_TOMBS_FULL):
             self._flags = None       # state changed; carried word stale
@@ -594,7 +634,8 @@ class StreamEngine:
 
     MAX_ROUNDS = PFOIndex.MAX_ROUNDS
 
-    def __init__(self, index, scfg: StreamConfig | None = None):
+    def __init__(self, index, scfg: StreamConfig | None = None,
+                 obs: Obs | None = None):
         self.backend = index if hasattr(index, "insert_round") \
             else LocalBackend(index)
         self.index = getattr(self.backend, "index", None)
@@ -618,6 +659,49 @@ class StreamEngine:
         self.n_requests = 0
         self.n_rounds_by_kind = {QUERY: 0, INSERT: 0, DELETE: 0, UPDATE: 0}
         self._dim = cfg.dim
+        # observability: inherit the backend's handle unless an explicit
+        # one is supplied (then the backend — index, cold manager — is
+        # rebound to it).  All recording is host-side; see repro.obs.
+        if obs is not None:
+            self.backend.set_obs(obs)
+        self._bind_obs()
+
+    # ------------------------------------------------------------------
+    # observability binding (metric handles cached off the hot path)
+    # ------------------------------------------------------------------
+    def set_obs(self, obs: Obs) -> None:
+        """Rebind engine + backend to a new observability handle."""
+        self.backend.set_obs(obs)
+        self._bind_obs()
+
+    def _bind_obs(self) -> None:
+        o = self.obs = self.backend.obs
+        self._obs_on = o.enabled
+        self._h_round = {k: o.histogram("stream.round_ms", kind=k)
+                         for k in (QUERY, INSERT, DELETE, UPDATE)}
+        self._h_flush = o.histogram("stream.flush_ms")
+        self._h_fill = o.histogram("stream.batch_fill")
+        self._h_bucket = o.histogram("stream.bucket_rows")
+        self._g_queue = o.gauge("stream.queue_depth")
+        self._c_flags = tuple(
+            (bit, o.counter("stream.flag_fired", flag=name))
+            for bit, name in FLAG_NAMES.items())
+        o.on_snapshot("stream", self._mirror_obs)
+
+    def _mirror_obs(self) -> None:
+        """Lazy snapshot mirror: engine counters -> gauges, only when a
+        snapshot is taken — zero double bookkeeping per round."""
+        o = self.obs
+        o.gauge("stream.requests").set(self.n_requests)
+        o.gauge("stream.flushes").set(self.n_flushes)
+        o.gauge("stream.batches").set(self.n_batches)
+        o.gauge("stream.rounds").set(self.n_rounds)
+        for k, v in self.n_rounds_by_kind.items():
+            o.gauge("stream.rounds", kind=k).set(v)
+        o.gauge("stream.clients").set(1 + len(self._clients))
+        for ev in ("seal", "merge", "spill"):
+            o.gauge("stream.epochs", kind=ev).set(
+                sum(1 for e, _ in self.events if e == ev))
 
     # ------------------------------------------------------------------
     # warmup: precompile every (op, bucket) variant + maintenance steps
@@ -680,19 +764,23 @@ class StreamEngine:
         processed by this flush.  ``window`` ordering applies the
         window's updates first (in order), then all queries; ``strict``
         keeps exact submission order (see module docstring)."""
+        self._g_queue.set(self.pending())
         queue = self._ingest()
-        out: dict[int, Any] = {}
-        if self.scfg.ordering == "window":
-            updates = [r for r in queue if r[1] != QUERY]
-            queries = [r for r in queue if r[1] == QUERY]
-            self._drain_updates_coalesced(updates, out)
-            self._drain_in_runs(queries, out)
-        else:
-            self._drain_in_runs(queue, out)
-        self._results.update(out)
-        while len(self._results) > self.scfg.max_retained_results:
-            self._results.pop(next(iter(self._results)))    # oldest first
-        self.n_flushes += 1
+        t0 = time.perf_counter()
+        with self.obs.span("flush", depth=len(queue)):
+            out: dict[int, Any] = {}
+            if self.scfg.ordering == "window":
+                updates = [r for r in queue if r[1] != QUERY]
+                queries = [r for r in queue if r[1] == QUERY]
+                self._drain_updates_coalesced(updates, out)
+                self._drain_in_runs(queries, out)
+            else:
+                self._drain_in_runs(queue, out)
+            self._results.update(out)
+            while len(self._results) > self.scfg.max_retained_results:
+                self._results.pop(next(iter(self._results)))  # oldest first
+            self.n_flushes += 1
+        self._h_flush.observe((time.perf_counter() - t0) * 1e3)
         return out
 
     def _drain_updates_coalesced(self, updates: list, out: dict) -> None:
@@ -777,8 +865,12 @@ class StreamEngine:
         chunks = list(self._chunks(run, self._cap_for(kind)))
         if not chunks:
             return
-        packed = self._pack(kind, *chunks[0])
+        with self.obs.span("pack", kind=kind):
+            packed = self._pack(kind, *chunks[0])
         for i, (chunk, bucket) in enumerate(chunks):
+            if self._obs_on:
+                self._h_fill.observe(len(chunk) / bucket)
+                self._h_bucket.observe(bucket)
             # double-buffer hook: the batch methods call this between
             # their first device dispatch and the first (blocking)
             # flag/result readback, so batch t+1's host packing hides
@@ -789,7 +881,8 @@ class StreamEngine:
                 nxt = chunks[i + 1]
 
                 def overlap(nxt=nxt, hold=hold):
-                    hold["p"] = self._pack(kind, *nxt)
+                    with self.obs.span("pack", kind=kind):
+                        hold["p"] = self._pack(kind, *nxt)
 
             if kind == QUERY:
                 self._query_batch(packed, chunk, bucket, out, overlap)
@@ -806,7 +899,10 @@ class StreamEngine:
                                    UPDATE, None)
             self.n_batches += 1
             if i + 1 < len(chunks):
-                packed = hold.get("p") or self._pack(kind, *chunks[i + 1])
+                packed = hold.get("p")
+                if packed is None:
+                    with self.obs.span("pack", kind=kind):
+                        packed = self._pack(kind, *chunks[i + 1])
 
     # ------------------------------------------------------------------
     # host-side batch packing (the half that double-buffers)
@@ -847,12 +943,17 @@ class StreamEngine:
     def _query_batch(self, packed, chunk: list, bucket: int, out: dict,
                      overlap=None) -> None:
         q_d, k = packed
+        t0 = time.perf_counter()
         # the backend invokes overlap() itself, right after its first
         # device dispatch (the cold fetch loop would otherwise block to
         # completion before the engine could start packing batch t+1)
-        ids, dists = self.backend.query_rows(q_d, k, overlap=overlap)
+        with self.obs.span("dispatch", kind=QUERY, bucket=bucket):
+            ids, dists = self.backend.query_rows(q_d, k, overlap=overlap)
         self.n_rounds_by_kind[QUERY] += 1
-        ids, dists = jax.device_get((ids, dists))
+        with self.obs.span("result_pickup", kind=QUERY):
+            ids, dists = jax.device_get((ids, dists))
+        if self._obs_on:
+            self._h_round[QUERY].observe((time.perf_counter() - t0) * 1e3)
         for r, (ticket, _, _) in enumerate(chunk):
             out[ticket] = (ids[r], dists[r])
 
@@ -866,14 +967,24 @@ class StreamEngine:
         flags = be.ensure_flags()
         for r in range(self.MAX_ROUNDS):
             self._maintain(flags)
-            carry, main_active, lsh_active, fw = be.insert_round(
-                ids_d, vecs_d, carry, main_active, lsh_active, bucket)
+            t0 = time.perf_counter()
+            with self.obs.span("dispatch", kind=stat_kind, bucket=bucket):
+                carry, main_active, lsh_active, fw = be.insert_round(
+                    ids_d, vecs_d, carry, main_active, lsh_active, bucket)
             self.n_rounds += 1
             self.n_rounds_by_kind[stat_kind] += 1
             if r == 0 and overlap is not None:
                 overlap()
-            flags = be.read_flags(fw)
+            with self.obs.span("flag_readback", kind=stat_kind):
+                flags = be.read_flags(fw)
             be.after_flags(flags)
+            if self._obs_on:
+                self._h_round[stat_kind].observe(
+                    (time.perf_counter() - t0) * 1e3)
+                if flags:
+                    for bit, c in self._c_flags:
+                        if flags & bit:
+                            c.inc()
             if not flags & FLAG_ANY_PENDING:
                 break
         be.count_insert(len(chunk))
@@ -888,13 +999,23 @@ class StreamEngine:
         flags = be.ensure_flags()
         for r in range(self.MAX_ROUNDS):
             self._maintain(flags)
-            pending, fw = be.delete_round(ids_d, active, bucket)
+            t0 = time.perf_counter()
+            with self.obs.span("dispatch", kind=stat_kind, bucket=bucket):
+                pending, fw = be.delete_round(ids_d, active, bucket)
             self.n_rounds += 1
             self.n_rounds_by_kind[stat_kind] += 1
             if r == 0 and overlap is not None:
                 overlap()
-            flags = be.read_flags(fw)
+            with self.obs.span("flag_readback", kind=stat_kind):
+                flags = be.read_flags(fw)
             be.after_flags(flags)
+            if self._obs_on:
+                self._h_round[stat_kind].observe(
+                    (time.perf_counter() - t0) * 1e3)
+                if flags:
+                    for bit, c in self._c_flags:
+                        if flags & bit:
+                            c.inc()
             if not flags & FLAG_ANY_PENDING:
                 break
             active = pending
@@ -926,9 +1047,11 @@ class StreamEngine:
             "rounds_by_kind": dict(self.n_rounds_by_kind),
             "readbacks": readbacks,
             # steady state this is exactly 1.0; warmup/capacity-growth
-            # flag probes can push it epsilon above (assert on deltas)
-            "readbacks_per_round": round(readbacks / update_rounds, 4)
-            if update_rounds else 0.0,
+            # flag probes can push it epsilon above (assert on deltas).
+            # The derivation (incl. the zero-rounds guard) lives in
+            # repro.obs.report so this view and Obs.snapshot() agree.
+            "readbacks_per_round": obs_report.per_round(readbacks,
+                                                        update_rounds),
             "syncs": readbacks,
             "seals": sum(1 for e, _ in self.events if e == "seal"),
             "merges": sum(1 for e, _ in self.events if e == "merge"),
@@ -948,7 +1071,7 @@ class DistStreamEngine(StreamEngine):
     on host-platform virtual devices for tests/CI)."""
 
     def __init__(self, dcfg, mesh=None, scfg: StreamConfig | None = None,
-                 seed: int = 0):
+                 seed: int = 0, obs: Obs | None = None):
         if mesh is None:
             from repro.sharding.policy import stream_mesh
             mesh = stream_mesh(dcfg.n_model)
@@ -957,7 +1080,7 @@ class DistStreamEngine(StreamEngine):
                               for a in dcfg.batch_axes]))
         assert scfg.min_batch % n_data == 0, \
             "query buckets must divide across the batch axes"
-        super().__init__(DistBackend(dcfg, mesh, seed=seed), scfg)
+        super().__init__(DistBackend(dcfg, mesh, seed=seed), scfg, obs=obs)
 
 
 # ======================================================================
