@@ -1,20 +1,23 @@
-"""Cold-tier capacity benchmark (paper §3.2.2's flash-scaling claim).
+"""Tiered-store capacity benchmark (paper §3.2.2's flash-scaling claim).
 
-Measures how far past the device snapshot ring an index with a cold
-tier keeps serving, and what each cold query costs:
+Measures how far past the *dense vector store* (the HBM-resident slot
+arena — the hard item bound of any HBM-only build) an index with the
+tiered cold store keeps serving, and what each cold read costs:
 
-* **capacity** — items indexed vs the item count at the moment the
-  device ring first filled (``ring_capacity``); the gate demands
-  >= 4x under interleaved insert/delete churn across >= 2 spills.
+* **capacity** — live items vs ``store_capacity``.  An HBM-only index
+  can never hold more live vectors than it has store slots; the tiered
+  store spills sealed payloads into cold segments (freeing their
+  slots) and ranks them from the device staging arena, so the gate
+  demands live items >= 20x ``store_capacity`` under interleaved
+  insert/delete churn.
 * **quality** — recall@10 of live-set queries vs exact brute force
-  (gate: >= 0.9), and the deleted-never-resurface invariant.
-* **cold-read amplification** — segment fetches per query round,
-  cache hit rate, and the Bloom route's realized false-positive rate
-  (all from ``PFOIndex.stats()["cold"]``).
-* **baseline contrast** — the same config without a cold tier relieves
-  ring pressure by merge compaction, whose single-segment fold
-  physically truncates once the data outgrows one segment: its
-  retained-item count caps while the cold index keeps growing.
+  (gate: >= 0.95), and the deleted-never-resurface invariant.
+* **read amplification** — payload bytes fetched from cold segments
+  divided by the bytes actually ranked out of the staging arena
+  (``vec_fetch_bytes / (staged_ranked * dim * 4)``), plus the staging
+  hit rate, fetches per query round, cache hit rate and realized
+  Bloom false-positive rate — all host-side counters from
+  ``PFOIndex.stats()["cold"]``, no extra readbacks.
 
     PYTHONPATH=src:benchmarks python benchmarks/capacity.py [--smoke]
 """
@@ -26,16 +29,25 @@ import json
 import numpy as np
 
 from common import bench_cfg, emit_bench, oracle
-from repro.core import PFOConfig, PFOIndex
+from repro.core import PFOIndex
 
 
-def churn_fill(idx: PFOIndex, dim: int, target_mult: float,
-               wave: int, seed: int = 0, max_items: int = 200_000):
-    """Interleaved insert/delete waves until the index holds
-    ``target_mult`` x the items present at first ring-full (spill or
-    merge).  Returns (live dict, ring_capacity, total_inserted)."""
-    centers = np.random.default_rng(99).normal(size=(100, dim)).astype(
-        np.float32)
+def churn_fill(idx: PFOIndex, dim: int, target_live: int,
+               wave: int, seed: int = 0, max_items: int = 400_000,
+               n_centers: int | None = None):
+    """Interleaved insert/delete waves until the live set reaches
+    ``target_live`` items.  Returns (live dict, ring_capacity,
+    total_inserted) where ring_capacity is the item count at the first
+    ring-full event (spill or merge).
+
+    Cluster count scales with the target (~20 members per cluster) so
+    top-10 stays cluster-membership-shaped at every scale — a fixed
+    center count would grow per-cluster membership past any candidate
+    budget and turn the gate into a budget test, not a tiering test."""
+    if n_centers is None:
+        n_centers = max(100, target_live // 20)
+    centers = np.random.default_rng(99).normal(
+        size=(n_centers, dim)).astype(np.float32)
     live: dict[int, np.ndarray] = {}
     nxt = 0
     ring_capacity = None
@@ -63,7 +75,7 @@ def churn_fill(idx: PFOIndex, dim: int, target_mult: float,
                 live.pop(int(i), None)
         if ring_capacity is None and ring_filled():
             ring_capacity = nxt
-        if ring_capacity is not None and nxt >= target_mult * ring_capacity:
+        if len(live) >= target_live:
             break
         if nxt >= max_items:
             break
@@ -91,8 +103,9 @@ def recall_at_10(idx: PFOIndex, live: dict, q: int, seed: int = 7):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dim", type=int, default=32)
-    ap.add_argument("--mult", type=float, default=4.0,
-                    help="dataset size as a multiple of ring capacity")
+    ap.add_argument("--hbm-mult", type=float, default=20.0,
+                    help="live-set target as a multiple of store_capacity"
+                         " (the HBM-only item bound)")
     ap.add_argument("--wave", type=int, default=400)
     ap.add_argument("--queries", type=int, default=64)
     ap.add_argument("--smoke", action="store_true",
@@ -105,38 +118,45 @@ def main():
     kw: dict = dict(dim=args.dim, bloom_bits=0, bloom_hashes=0,
                     snap_probes=2)
     if args.smoke:
-        # tiny arenas: seals every few hundred inserts, ring of 3
-        kw.update(L=3, C=2, m=2, l=16, max_nodes_per_tree=48,
+        # tiny arenas: seals every few hundred inserts, ring of 3, and
+        # a dense store much smaller than the dataset — payload spills
+        # are the only way the workload fits at all.  Four tables at
+        # four probes with a generous candidate budget hold recall at
+        # the 20x live-set scale (tuning note: the tiered and
+        # HBM-payload builds score identical recall here — retrieval,
+        # not tiering, is the quality limiter)
+        kw.update(L=4, C=2, m=2, l=16, snap_probes=4,
+                  max_nodes_per_tree=48,
                   max_leaves_per_tree=64, main_m=3,
                   main_max_nodes_per_tree=128,
-                  main_max_leaves_per_tree=512, store_capacity=16384,
-                  max_candidates_per_probe=32, max_candidates_total=384,
+                  main_max_leaves_per_tree=512, store_capacity=512,
+                  store_low_watermark=128,
+                  max_candidates_per_probe=48, max_candidates_total=768,
                   max_snapshots=3, snap_prefix_bits=8,
-                  snap_budget_per_probe=32)
-        args.wave = 150
+                  snap_budget_per_probe=64)
+        args.wave = 256
+    else:
+        kw.update(store_capacity=4096, store_low_watermark=1024)
 
     cold_cfg = bench_cfg(**kw, cold_segments=32, cold_cache_slots=96,
                          cold_fetch_rounds=8)
     idx = PFOIndex(cold_cfg, seed=0)
-    live, ring_cap, total = churn_fill(idx, args.dim, args.mult,
+    target_live = int(args.hbm_mult * cold_cfg.store_capacity)
+    live, ring_cap, total = churn_fill(idx, args.dim, target_live,
                                        args.wave)
     rec, resurfaced = recall_at_10(idx, live, args.queries)
     cold_stats = idx.stats()["cold"]
 
-    # HBM-only baseline: same arenas, no cold tier — merge compaction
-    # is its only relief and the fold truncates past one segment
-    base_cfg = PFOConfig(**{**cold_cfg.__dict__, "cold_segments": 0})
-    base = PFOIndex(base_cfg, seed=0)
-    blive, bring, btotal = churn_fill(base, args.dim, args.mult,
-                                      args.wave,
-                                      max_items=total)
-    brec, _ = recall_at_10(base, blive, args.queries)
-
+    staged_bytes = cold_stats["staged_ranked"] * args.dim * 4
+    read_amp = (round(cold_stats["vec_fetch_bytes"] / staged_bytes, 2)
+                if staged_bytes else None)
     rec_out = {
-        "ring_capacity_items": ring_cap,
-        "items_indexed": total,
-        "capacity_multiple": round(total / ring_cap, 2) if ring_cap else None,
+        "hbm_store_capacity": cold_cfg.store_capacity,
         "live_items": len(live),
+        "capacity_vs_hbm": round(len(live) / cold_cfg.store_capacity, 2),
+        "items_indexed": total,
+        "ring_capacity_items": ring_cap,
+        "store_free_slots": idx.stats()["store_free"],
         "recall_at_10": round(rec, 4),
         "deleted_resurfaced": resurfaced,
         "spills": cold_stats["segments_spilled"],
@@ -145,8 +165,12 @@ def main():
         "cache_hit_rate": cold_stats["cache_hit_rate"],
         "bloom_fp_rate": cold_stats["bloom_fp_rate"],
         "store_bytes_written": cold_stats["store_bytes_written"],
-        "baseline_recall_at_10": round(brec, 4),
-        "baseline_merges": base.maintenance_log.count("merge"),
+        "staged_ranked": cold_stats["staged_ranked"],
+        "ranked_total": cold_stats["ranked_total"],
+        "vec_staging_hit_rate": cold_stats["vec_staging_hit_rate"],
+        "vec_fetch_bytes": cold_stats["vec_fetch_bytes"],
+        "vec_evictions": cold_stats["vec_evictions"],
+        "read_amplification": read_amp,
     }
     print(json.dumps(rec_out, indent=2))
     if args.json:
@@ -154,9 +178,11 @@ def main():
             json.dump(rec_out, f)
 
     emit_bench("capacity",
-               config={"dim": args.dim, "mult": args.mult,
+               config={"dim": args.dim, "hbm_mult": args.hbm_mult,
                        "wave": args.wave, "queries": args.queries,
                        "smoke": args.smoke,
+                       "store_capacity": cold_cfg.store_capacity,
+                       "store_low_watermark": cold_cfg.store_low_watermark,
                        "cold_segments": cold_cfg.cold_segments,
                        "cold_cache_slots": cold_cfg.cold_cache_slots,
                        "cold_fetch_rounds": cold_cfg.cold_fetch_rounds},
@@ -164,12 +190,14 @@ def main():
 
     if args.smoke:
         assert rec_out["spills"] >= 2, rec_out
-        assert rec_out["capacity_multiple"] >= args.mult, rec_out
-        assert rec_out["recall_at_10"] >= 0.9, rec_out
+        assert rec_out["capacity_vs_hbm"] >= args.hbm_mult, rec_out
+        assert rec_out["recall_at_10"] >= 0.95, rec_out
         assert not rec_out["deleted_resurfaced"], rec_out
-        # cold reads stay bounded: well under one fetch per query round
-        # once the cache warms (the workload re-touches hot clusters)
-        assert rec_out["cache_hit_rate"] >= 0.2, rec_out
+        # the tiered store actually carried the overflow: candidates
+        # really ranked out of the staging arena, with the payload
+        # fetch cost accounted
+        assert rec_out["staged_ranked"] > 0, rec_out
+        assert rec_out["read_amplification"] is not None, rec_out
         print("SMOKE OK")
 
 

@@ -161,8 +161,12 @@ def load_index_checkpoint(ckpt_dir: str, step: int, cfg, seed: int = 0,
         state = state._replace(cold=state.cold._replace(
             lsh_cache=coldtier._empty_cache(cfg, _snap_cfg_lsh(cfg)
                                             .snapshot_capacity),
+            # main cache carries the staging payload arena (tiered
+            # store): rebuild it with vector pages so restored spilled
+            # slots resolve
             main_cache=coldtier._empty_cache(cfg, _snap_cfg_main(cfg)
-                                             .snapshot_capacity)))
+                                             .snapshot_capacity,
+                                             dim=cfg.dim)))
     idx.state = state
     return idx
 

@@ -7,13 +7,20 @@ The hierarchy this module completes:
   hot forests (HBM)  →  sealed snapshot ring (HBM, ``snapshots.py``)
                      →  **cold segment store (host RAM / flash files)**
 
-When the device snapshot ring fills past ``max_snapshots - 1`` the
+When the device snapshot ring fills past ``max_snapshots - 1`` (or the
+dense store's free list falls below ``store_low_watermark``) the
 *oldest* sealed segment of every LSH table (and of the MainTable)
 spills verbatim to a host :class:`repro.storage.SegmentStore` — the
 write-once, bucket-major Index+Data layout seals already produce is
-exactly the sequential-flash format the paper wants.  What stays on
-device is a compact **routing table** per tier: the spilled segments'
-Bloom filters, seal stamps and entry counts.  The query path probes
+exactly the sequential-flash format the paper wants.  A spilled
+MainTable segment carries its **vector payloads** with it (one f32 row
+per entry, gathered out of the dense store) and frees the store slots
+of every entry it takes sole custody of — the dense arena only ever
+holds the hot + ring working set, and cold candidates are ranked from
+the payload pages of cache-resident segments (the device **staging
+arena**, ``ColdCache.vecs``).  What stays on device is a compact
+**routing table** per tier: the spilled segments' Bloom filters, seal
+stamps and entry counts.  The query path probes
 *all* filters (device ring + cold routing) in the same vectorized shot
 it always did; only segments whose filter matched and that are not
 already resident in the small device-side **segment cache** trigger a
@@ -53,6 +60,9 @@ import numpy as np
 from . import bloom as bloom_mod
 from . import snapshots as snap_mod
 from .config import PFOConfig
+from .hash_tree import TreeConfig, forest_lookup
+from .lsh import main_table_keys
+from .store import DenseStore, dense_free
 from repro.storage import SegmentStore
 
 _PAD_KEY = np.uint32(0xFFFFFFFF)
@@ -76,6 +86,12 @@ class ColdCache(NamedTuple):
     stamps: jax.Array   # i32 (E,)
     tables: jax.Array   # i32 (E,) owning LSH table (0 for main); -1 empty
     segs: jax.Array     # i32 (E,) cold segment index; -1 empty
+    # vector payload pages (MainTable cache only): f32 (E, cap, d) with
+    # row r holding segment entry r's vector — the device **staging
+    # arena** cold candidates are ranked from (flattened to (E*cap, d)
+    # and addressed as slot = store_capacity + e*cap + r).  None for
+    # the LSH cache, whose vals are ids, not vectors.
+    vecs: jax.Array | None = None
 
 
 class ColdState(NamedTuple):
@@ -86,7 +102,8 @@ class ColdState(NamedTuple):
     n_cold: jax.Array         # i32 () cold segments per tier instance
 
 
-def _empty_cache(cfg: PFOConfig, cap: int) -> ColdCache:
+def _empty_cache(cfg: PFOConfig, cap: int, dim: int | None = None
+                 ) -> ColdCache:
     E = cfg.cold_cache_slots
     return ColdCache(
         keys=jnp.full((E, cap), jnp.uint32(_PAD_KEY)),
@@ -95,6 +112,8 @@ def _empty_cache(cfg: PFOConfig, cap: int) -> ColdCache:
         stamps=jnp.zeros((E,), jnp.int32),
         tables=jnp.full((E,), -1, jnp.int32),
         segs=jnp.full((E,), -1, jnp.int32),
+        vecs=None if dim is None
+        else jnp.zeros((E, cap, dim), jnp.float32),
     )
 
 
@@ -115,7 +134,8 @@ def init_cold(cfg: PFOConfig, lsh_cfg: PFOConfig,
                                stamps=jnp.zeros((C,), jnp.int32),
                                counts=jnp.zeros((C,), jnp.int32)),
         lsh_cache=_empty_cache(cfg, lsh_cfg.snapshot_capacity),
-        main_cache=_empty_cache(cfg, main_cfg.snapshot_capacity),
+        main_cache=_empty_cache(cfg, main_cfg.snapshot_capacity,
+                                dim=cfg.dim),
         n_cold=jnp.int32(0),
     )
 
@@ -153,7 +173,7 @@ def cold_probe_lsh(cold: ColdState, hs: jax.Array, lsh_cfg: PFOConfig):
         slot_ok, slot_seg, resident = _residency(cache, l, C)
         missing = wanted & ~resident
         act_slot = slot_ok[:, None] & act[jnp.clip(cache.segs, 0, C - 1)]
-        cids, _, matched = jax.vmap(
+        cids, _, _, matched = jax.vmap(
             lambda k, i, v, a: snap_mod.span_gather(k, i, v, a, pfx,
                                                     lsh_cfg))(
             cache.keys, cache.ids, cache.vals, act_slot)   # (E, Q*P, B)
@@ -179,7 +199,11 @@ def cold_lookup_main(cold: ColdState, mh: jax.Array, vids: jax.Array,
     """Exact (key, id) lookup in the cold MainTable cache.
 
     mh/vids: (N,) murmur keys and ids (-1 == padding).  Returns
-    (val, found, row_missing, wanted (C,), missing (C,), probed, fp):
+    (slot, found, row_missing, wanted (C,), missing (C,), probed, fp):
+    ``slot`` is a **staging-arena slot** — the resolving entry's row in
+    the flattened (E*cap, d) payload arena, offset by
+    ``store_capacity`` so the tiered gather can route by range (the
+    entry's dense-store slot was freed when its segment spilled).
     ``row_missing`` marks rows whose Bloom route hit a *non-resident*
     segment — the row cannot be resolved this round and must retry
     after a fetch.
@@ -187,6 +211,7 @@ def cold_lookup_main(cold: ColdState, mh: jax.Array, vids: jax.Array,
     C = cold.main_route.stamps.shape[0]
     cache = cold.main_cache
     n = mh.shape[0]
+    cap = main_cfg.snapshot_capacity
     pfx = snap_mod._prefix(mh, main_cfg.snap_prefix_bits)         # (N,)
     hit = bloom_mod.contains_multi(cold.main_route.blooms, pfx,
                                    main_cfg.bloom_hashes_eff)     # (C, N)
@@ -196,19 +221,23 @@ def cold_lookup_main(cold: ColdState, mh: jax.Array, vids: jax.Array,
     slot_ok, slot_seg, resident = _residency(cache, 0, C)
     missing = wanted & ~resident
     act_slot = slot_ok[:, None] & act[jnp.clip(cache.segs, 0, C - 1)]
-    cids, cvals, matched = jax.vmap(
+    cids, _, cpos, matched = jax.vmap(
         lambda k, i, v, a: snap_mod.span_gather(k, i, v, a, pfx,
                                                 main_cfg))(
         cache.keys, cache.ids, cache.vals, act_slot)       # (E, N, B)
 
     is_vid = (cids >= 0) & (cids == vids[None, :, None])
     stamp_sc = jnp.where(is_vid, cache.stamps[:, None, None], -1)
+    srow = (jnp.arange(cache.keys.shape[0], dtype=jnp.int32)[:, None, None]
+            * cap + jnp.maximum(cpos, 0))                  # (E, N, B)
     flat_s = jnp.transpose(stamp_sc, (1, 0, 2)).reshape(n, -1)
-    flat_v = jnp.transpose(cvals, (1, 0, 2)).reshape(n, -1)
+    flat_r = jnp.transpose(srow, (1, 0, 2)).reshape(n, -1)
     best = jnp.argmax(flat_s, axis=1)                  # newest stamp wins
     found = jnp.max(flat_s, axis=1, initial=-1) >= 0
-    val = jnp.where(found,
-                    jnp.take_along_axis(flat_v, best[:, None], 1)[:, 0], -1)
+    val = jnp.where(
+        found,
+        main_cfg.store_capacity
+        + jnp.take_along_axis(flat_r, best[:, None], 1)[:, 0], -1)
     row_missing = jnp.any(act & missing[:, None], axis=0)
 
     probed = wanted & resident
@@ -221,29 +250,74 @@ def cold_lookup_main(cold: ColdState, mh: jax.Array, vids: jax.Array,
 
 
 def pack_cold_info(lsh_wanted, lsh_missing, lsh_probed, lsh_fp,
-                   main_wanted, main_missing, main_probed, main_fp):
-    """Round accounting vector (i32 (8,)): rides in the result pickup."""
+                   main_wanted, main_missing, main_probed, main_fp,
+                   staged_ranked, ranked_total):
+    """Round accounting vector (i32 (10,)): rides in the result pickup.
+    ``staged_ranked``/``ranked_total`` count candidates ranked out of
+    the staging arena vs. all ranked candidates — the host derives the
+    staging share and read amplification from them without any extra
+    readback."""
     def c(x):
         return jnp.sum(x.astype(jnp.int32)) \
             if jnp.issubdtype(x.dtype, jnp.bool_) else x.astype(jnp.int32)
     return jnp.stack([c(lsh_wanted), c(lsh_missing), c(lsh_probed),
                       c(lsh_fp), c(main_wanted), c(main_missing),
-                      c(main_probed), c(main_fp)])
+                      c(main_probed), c(main_fp), c(staged_ranked),
+                      c(ranked_total)])
 
 
 # ======================================================================
 # jitted maintenance helpers (host-called, epoch-time)
 # ======================================================================
-@functools.partial(jax.jit, static_argnames=("lsh_cfg", "main_cfg"))
+def _member_sorted(x: jax.Array, table: jax.Array) -> jax.Array:
+    """Memory-lean ``jnp.isin``: (n,) x membership in (m,) table via
+    sort + searchsorted — O(n + m) memory where isin's broadcast
+    compare would materialize (n, m) (the ring id set is ~256k rows, so
+    that square is hundreds of GB)."""
+    t = jnp.sort(table.reshape(-1))
+    pos = jnp.clip(jnp.searchsorted(t, x), 0, t.shape[0] - 1)
+    return t[pos] == x
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("lsh_cfg", "main_cfg", "main_tcfg"))
 def spill_device(lsh_snaps, main_snaps, cold: ColdState,
-                 lsh_cfg: PFOConfig, main_cfg: PFOConfig):
+                 store: DenseStore, main_forest, tombs,
+                 lsh_cfg: PFOConfig, main_cfg: PFOConfig,
+                 main_tcfg: TreeConfig):
     """Pop the oldest ring segment of every tier; route metadata into
-    the cold routing table.  Returns (lsh', main', cold', popped_lsh,
-    popped_main) — the popped payloads are read back by the host once
-    and persisted in the SegmentStore."""
+    the cold routing table; gather the popped MainTable segment's
+    vector payloads out of the dense store and free the store slots of
+    every entry the segment takes sole custody of.  Returns
+    (lsh', main', cold', store', popped_lsh, popped_main) — the popped
+    arrays (now including ``popped_main["payload"]``) are read back by
+    the host once and persisted in the SegmentStore.
+
+    "Sole custody" (the ``cur`` mask): the entry's id has no newer
+    copy in the hot MainTable forest or the remaining ring, no pending
+    tombstone, and its slot is still live.  Only those entries get a
+    real payload row and a freed slot; stale entries keep a zero
+    payload — they are never ranked (hot/ring precedence,
+    newest-stamp-wins resolution and the tombstone filter all shadow
+    them) and their slots were already freed (or re-owned) by the
+    delete/update that superseded them."""
     lsh2, pl = jax.vmap(
         lambda s: snap_mod.pop_oldest(s, lsh_cfg))(lsh_snaps)
     main2, pm = snap_mod.pop_oldest(main_snaps, main_cfg)
+    ids, vals = pm["ids"], pm["vals"]
+    n_store = store.data.shape[0]
+    mh, mtree = main_table_keys(ids, main_cfg)
+    _, hot_found = forest_lookup(main_forest, mtree, mh, ids, main_tcfg)
+    in_ring = _member_sorted(ids, main2.ids)
+    dead = _member_sorted(ids, tombs)
+    safe = jnp.clip(vals, 0, n_store - 1)
+    live = store.live[safe] & (vals >= 0)
+    cur = (ids >= 0) & ~hot_found & ~in_ring & ~dead & live
+    pm = dict(pm)
+    pm["payload"] = jnp.where(cur[:, None], store.data[safe],
+                              jnp.float32(0.0))
+    pm["cur"] = cur
+    store2 = dense_free(store, vals, cur)
     nc = cold.n_cold
     lr, mr = cold.lsh_route, cold.main_route
     cold2 = cold._replace(
@@ -256,14 +330,16 @@ def spill_device(lsh_snaps, main_snaps, cold: ColdState,
             stamps=mr.stamps.at[nc].set(pm["stamp"]),
             counts=mr.counts.at[nc].set(pm["count"])),
         n_cold=nc + 1)
-    return lsh2, main2, cold2, pl, pm
+    return lsh2, main2, cold2, store2, pl, pm
 
 
 @jax.jit
 def cache_install(cache: ColdCache, slot, keys, ids, vals, stamp,
-                  table, seg) -> ColdCache:
+                  table, seg, vecs=None) -> ColdCache:
     """Load one fetched segment into a cache slot (functional update —
-    the previous cache buffers stay live for any in-flight round)."""
+    the previous cache buffers stay live for any in-flight round).
+    ``vecs`` (cap, d) loads the segment's vector payload page into the
+    staging arena (MainTable cache only)."""
     return ColdCache(
         keys=cache.keys.at[slot].set(keys),
         ids=cache.ids.at[slot].set(ids),
@@ -271,7 +347,47 @@ def cache_install(cache: ColdCache, slot, keys, ids, vals, stamp,
         stamps=cache.stamps.at[slot].set(stamp),
         tables=cache.tables.at[slot].set(table),
         segs=cache.segs.at[slot].set(seg),
+        vecs=cache.vecs if vecs is None else cache.vecs.at[slot].set(vecs),
     )
+
+
+@functools.partial(jax.jit, static_argnames=("main_cfg", "main_tcfg"))
+def ring_payload_drain(main_snaps, store: DenseStore, main_forest,
+                       tombs, main_cfg: PFOConfig, main_tcfg: TreeConfig):
+    """Device half of the cold merge's ring drain: gather the vector
+    payload of every ring entry the ring holds the current version of,
+    and free those store slots (the entries leave the device for the
+    cold fold).  Returns (payloads (S, cap, d), cur (S, cap), store').
+
+    ``cur`` mirrors :func:`spill_device`'s sole-custody mask, with one
+    extra clause: only the *newest ring copy* of an id qualifies —
+    an updated id can have several ring copies, and the stale ones'
+    slots were already freed (and possibly re-owned by another id) at
+    delete time, so freeing by their ``val`` would corrupt the store.
+    The newest-per-id choice is made by (stamp-desc, id) lexsort, the
+    same discipline the fold itself applies."""
+    S, cap = main_snaps.ids.shape
+    ids = main_snaps.ids.reshape(-1)
+    vals = main_snaps.vals.reshape(-1)
+    stamps = jnp.broadcast_to(main_snaps.stamps[:, None],
+                              (S, cap)).reshape(-1)
+    valid = ids >= 0               # pads (and slots >= n_snaps) are -1
+    imax = jnp.int32(2**31 - 1)
+    ikey = jnp.where(valid, ids, imax)
+    order = jnp.lexsort((-stamps, ikey))
+    sid = ikey[order]
+    first = jnp.concatenate([jnp.array([True]), sid[1:] != sid[:-1]])
+    newest = jnp.zeros_like(valid).at[order].set(first & (sid < imax))
+    mh, mtree = main_table_keys(ids, main_cfg)
+    _, hot_found = forest_lookup(main_forest, mtree, mh, ids, main_tcfg)
+    dead = _member_sorted(ids, tombs)
+    n_store = store.data.shape[0]
+    safe = jnp.clip(vals, 0, n_store - 1)
+    live = store.live[safe] & (vals >= 0)
+    cur = valid & newest & ~hot_found & ~dead & live
+    payload = jnp.where(cur[:, None], store.data[safe], jnp.float32(0.0))
+    store2 = dense_free(store, vals, cur)
+    return (payload.reshape(S, cap, -1), cur.reshape(S, cap), store2)
 
 
 # ======================================================================
@@ -322,10 +438,14 @@ class _FoldResult(NamedTuple):
 
 
 def _fold_entries(keys, ids, vals, stamps, dead: np.ndarray, cap: int,
-                  prefix_bits: int, bloom_hashes: int, bloom_bits: int):
+                  prefix_bits: int, bloom_hashes: int, bloom_bits: int,
+                  payloads=None):
     """Fold concatenated segment entries: drop dead/padding, keep the
     newest stamp per id, re-sort bucket-major, chunk into cap-sized
-    write-once segments with fresh Bloom filters.  Pure numpy."""
+    write-once segments with fresh Bloom filters.  Pure numpy.
+    ``payloads`` (n, d) rows travel with their entries (MainTable
+    tier), so tombstoned/superseded vectors are physically dropped in
+    the same pass that drops their index entries."""
     live = ids >= 0
     if dead.size:
         live &= ~np.isin(ids, dead)
@@ -333,6 +453,8 @@ def _fold_entries(keys, ids, vals, stamps, dead: np.ndarray, cap: int,
     i = np.asarray(ids, np.int32)[live]
     v = np.asarray(vals, np.int32)[live]
     s = np.asarray(stamps, np.int32)[live]
+    p = None if payloads is None \
+        else np.asarray(payloads, np.float32)[live]
     if i.size:
         order = np.lexsort((-s, i))            # id asc, stamp desc
         first = np.concatenate([[True], i[order][1:] != i[order][:-1]])
@@ -340,6 +462,8 @@ def _fold_entries(keys, ids, vals, stamps, dead: np.ndarray, cap: int,
         k, i, v, s = k[keep], i[keep], v[keep], s[keep]
         ko = np.argsort(k, kind="stable")
         k, i, v, s = k[ko], i[ko], v[ko], s[ko]
+        if p is not None:
+            p = p[keep][ko]
     out = []
     for lo in range(0, len(i), cap):
         ck, ci, cv, cs = (a[lo:lo + cap] for a in (k, i, v, s))
@@ -350,8 +474,13 @@ def _fold_entries(keys, ids, vals, stamps, dead: np.ndarray, cap: int,
         pk[:n], pi[:n], pv[:n] = ck, ci, cv
         bloom = np_bloom_build(_np_prefix(pk, prefix_bits), bloom_hashes,
                                bloom_bits, mask=pi >= 0)
-        out.append({"keys": pk, "ids": pi, "vals": pv, "count": n,
-                    "stamp": int(cs.max()) if n else 0, "bloom": bloom})
+        seg = {"keys": pk, "ids": pi, "vals": pv, "count": n,
+               "stamp": int(cs.max()) if n else 0, "bloom": bloom}
+        if p is not None:
+            pp = np.zeros((cap, p.shape[1]), np.float32)
+            pp[:n] = p[lo:lo + cap]
+            seg["payload"] = pp
+        out.append(seg)
     return out
 
 
@@ -367,9 +496,10 @@ class ColdManager:
     """
 
     def __init__(self, cfg: PFOConfig, lsh_cfg: PFOConfig,
-                 main_cfg: PFOConfig, root: str | None = None,
-                 on_sync=None):
+                 main_cfg: PFOConfig, main_tcfg: TreeConfig,
+                 root: str | None = None, on_sync=None):
         self.cfg, self.lsh_cfg, self.main_cfg = cfg, lsh_cfg, main_cfg
+        self.main_tcfg = main_tcfg
         self.store = SegmentStore(root)
         self.lsh_gids: list[list[int]] = [[] for _ in range(cfg.L)]
         self.main_gids: list[int] = []
@@ -394,6 +524,8 @@ class ColdManager:
             "lsh_wanted": 0, "lsh_missing": 0, "lsh_probed": 0,
             "lsh_fp": 0, "main_wanted": 0, "main_missing": 0,
             "main_probed": 0, "main_fp": 0,
+            "staged_ranked": 0, "ranked_total": 0,
+            "vec_fetch_bytes": 0, "vec_evictions": 0,
         }
 
     # -- observability --------------------------------------------------
@@ -417,17 +549,22 @@ class ColdManager:
         g("cold.compactions").set(s["compactions"])
         g("cold.merges").set(s["cold_merges"])
         g("cold.store_bytes_written").set(s["store_bytes_written"])
+        g("cold.vec_staging_hit_rate").set(s["vec_staging_hit_rate"])
+        g("cold.vec_fetch_bytes").set(s["vec_fetch_bytes"])
+        g("cold.vec_evictions").set(s["vec_evictions"])
+        g("cold.vec_resident_pages").set(s["vec_resident_pages"])
 
     @property
     def n_cold(self) -> int:
         return len(self.main_gids)
 
     def record_query_round(self, info: np.ndarray) -> None:
-        """Accumulate one round's (8,) cold-info vector."""
+        """Accumulate one round's (10,) cold-info vector."""
         self.counters["query_rounds"] += 1
         for j, key in enumerate(("lsh_wanted", "lsh_missing", "lsh_probed",
                                  "lsh_fp", "main_wanted", "main_missing",
-                                 "main_probed", "main_fp")):
+                                 "main_probed", "main_fp",
+                                 "staged_ranked", "ranked_total")):
             self.counters[key] += int(info[j])
 
     def stats(self) -> dict:
@@ -455,6 +592,18 @@ class ColdManager:
             "cold_merges": c["cold_merges"],
             "store_bytes_written": self.store.bytes_written,
             "backing": "files" if self.store.root else "ram",
+            # vector payload tiering (the staging arena)
+            "staged_ranked": c["staged_ranked"],
+            "ranked_total": c["ranked_total"],
+            # share of all ranked candidates served from the staging
+            # arena rather than the hot store
+            "vec_staging_hit_rate": round(
+                c["staged_ranked"] / c["ranked_total"], 4)
+            if c["ranked_total"] else 0.0,
+            "vec_fetch_bytes": c["vec_fetch_bytes"],
+            "vec_evictions": c["vec_evictions"],
+            "vec_resident_pages": sum(
+                1 for t in self._main_tags if t is not None),
         }
 
     # -- spill ----------------------------------------------------------
@@ -470,9 +619,10 @@ class ColdManager:
                 f"{self.cfg.cold_segments} segments) and compaction "
                 "cannot shrink it; raise PFOConfig.cold_segments or the "
                 "snapshot capacities")
-        lsh2, main2, cold2, pl, pm = spill_device(
-            state.lsh_snaps, state.main_snaps, state.cold,
-            self.lsh_cfg, self.main_cfg)
+        lsh2, main2, cold2, store2, pl, pm = spill_device(
+            state.lsh_snaps, state.main_snaps, state.cold, state.store,
+            state.main_forest, state.tombstones,
+            self.lsh_cfg, self.main_cfg, self.main_tcfg)
         self._on_sync()
         pl_h, pm_h = jax.device_get((pl, pm))
         for l in range(self.cfg.L):
@@ -482,10 +632,12 @@ class ColdManager:
             self.lsh_gids[l].append(gid)
         self.main_gids.append(
             self.store.put(pm_h["keys"], pm_h["ids"], pm_h["vals"],
-                           pm_h["count"], pm_h["stamp"]))
+                           pm_h["count"], pm_h["stamp"],
+                           payload=pm_h["payload"]))
         self._gen += 1
         self.counters["spills"] += 1
-        return state._replace(lsh_snaps=lsh2, main_snaps=main2, cold=cold2)
+        return state._replace(lsh_snaps=lsh2, main_snaps=main2,
+                              cold=cold2, store=store2)
 
     # -- fetch ----------------------------------------------------------
     def _pick_slot(self, tags: list, use: list, needed: set) -> int | None:
@@ -539,20 +691,26 @@ class ColdManager:
                 break
             gid = self.main_gids[int(c)]
             k, i, v = self.store.get(gid)
+            p = self.store.get_payload(gid)
             meta = self.store.meta(gid)
+            if self._main_tags[slot] is not None:
+                self.counters["vec_evictions"] += 1
             self._main_tags[slot] = (0, int(c))
             self._main_use[slot] = self._tick
+            self.counters["vec_fetch_bytes"] += int(p.nbytes)
             plan.append(("main", slot, (0, int(c)), meta["stamp"],
                          jax.device_put(np.ascontiguousarray(k)),
                          jax.device_put(np.ascontiguousarray(i)),
-                         jax.device_put(np.ascontiguousarray(v))))
+                         jax.device_put(np.ascontiguousarray(v)),
+                         jax.device_put(np.ascontiguousarray(p))))
         # transfers are now all in flight; install them
-        for kind, slot, tag, stamp, dk, di, dv in plan:
+        for kind, slot, tag, stamp, dk, di, dv, *dp in plan:
             cache = cold.lsh_cache if kind == "lsh" else cold.main_cache
             cache = cache_install(cache, jnp.int32(slot), dk, di, dv,
                                   jnp.int32(stamp),
                                   jnp.int32(tag[0] if kind == "lsh" else 0),
-                                  jnp.int32(tag[1]))
+                                  jnp.int32(tag[1]),
+                                  vecs=dp[0] if dp else None)
             cold = cold._replace(**{("lsh_cache" if kind == "lsh"
                                      else "main_cache"): cache})
             self.counters["fetches"] += 1
@@ -561,9 +719,10 @@ class ColdManager:
         return state._replace(cold=cold)
 
     # -- compaction / merge --------------------------------------------
-    def _collect(self, gids: list[int]):
-        """Concatenate a gid list's entries (keys, ids, vals, stamps)."""
-        ks, is_, vs, ss = [], [], [], []
+    def _collect(self, gids: list[int], with_payload: bool = False):
+        """Concatenate a gid list's entries (keys, ids, vals, stamps
+        [, payloads])."""
+        ks, is_, vs, ss, ps = [], [], [], [], []
         for gid in gids:
             k, i, v = self.store.get(gid)
             meta = self.store.meta(gid)
@@ -571,11 +730,16 @@ class ColdManager:
             is_.append(np.asarray(i))
             vs.append(np.asarray(v))
             ss.append(np.full(k.shape, meta["stamp"], np.int32))
+            if with_payload:
+                ps.append(np.asarray(self.store.get_payload(gid)))
         if not ks:
             z = np.zeros((0,), np.int32)
-            return z.astype(np.uint32), z, z, z
-        return (np.concatenate(ks), np.concatenate(is_),
+            base = (z.astype(np.uint32), z, z, z)
+            return base + (np.zeros((0, self.cfg.dim), np.float32),) \
+                if with_payload else base
+        base = (np.concatenate(ks), np.concatenate(is_),
                 np.concatenate(vs), np.concatenate(ss))
+        return base + (np.concatenate(ps),) if with_payload else base
 
     def _fold_all(self, dead: np.ndarray,
                   ring_extra=None, ring_extra_main=None) -> _FoldResult:
@@ -596,15 +760,19 @@ class ColdManager:
                 self.lsh_cfg.snap_prefix_bits,
                 self.lsh_cfg.bloom_hashes_eff,
                 self.lsh_cfg.bloom_bits_eff))
-        k, i, v, s = self._collect(self.main_gids)
+        k, i, v, s, p = self._collect(self.main_gids, with_payload=True)
         if ring_extra_main is not None:
-            rk, ri, rv, rs = ring_extra_main
-            k, i, v, s = (np.concatenate([k, rk]), np.concatenate([i, ri]),
-                          np.concatenate([v, rv]), np.concatenate([s, rs]))
+            rk, ri, rv, rs, rp = ring_extra_main
+            k, i, v, s, p = (np.concatenate([k, rk]),
+                             np.concatenate([i, ri]),
+                             np.concatenate([v, rv]),
+                             np.concatenate([s, rs]),
+                             np.concatenate([p, rp]))
         main_out = _fold_entries(
             k, i, v, s, dead, self.main_cfg.snapshot_capacity,
             self.main_cfg.snap_prefix_bits,
-            self.main_cfg.bloom_hashes_eff, self.main_cfg.bloom_bits_eff)
+            self.main_cfg.bloom_hashes_eff, self.main_cfg.bloom_bits_eff,
+            payloads=p)
         return _FoldResult(gen, lsh_out, main_out)
 
     def _install_fold(self, state, fold: _FoldResult,
@@ -648,10 +816,11 @@ class ColdManager:
         for c, seg in enumerate(fold.main_segments):
             self.main_gids.append(self.store.put(
                 seg["keys"], seg["ids"], seg["vals"], seg["count"],
-                seg["stamp"]))
+                seg["stamp"], payload=seg["payload"]))
             mb[c], ms[c], mc[c] = seg["bloom"], seg["stamp"], seg["count"]
         while len(self.main_gids) < n_cold:
-            self.main_gids.append(self._put_empty(self.main_cfg))
+            self.main_gids.append(self._put_empty(self.main_cfg,
+                                                  dim=self.cfg.dim))
         for gid in old_gids:
             self.store.delete(gid)
         self._gen += 1
@@ -671,15 +840,18 @@ class ColdManager:
                                    stamps=jnp.asarray(ms),
                                    counts=jnp.asarray(mc)),
             lsh_cache=_empty_cache(cfg, self.lsh_cfg.snapshot_capacity),
-            main_cache=_empty_cache(cfg, self.main_cfg.snapshot_capacity),
+            main_cache=_empty_cache(cfg, self.main_cfg.snapshot_capacity,
+                                    dim=self.cfg.dim),
             n_cold=jnp.int32(n_cold))
         return state._replace(cold=cold)
 
-    def _put_empty(self, tier_cfg: PFOConfig) -> int:
+    def _put_empty(self, tier_cfg: PFOConfig, dim: int | None = None) -> int:
         cap = tier_cfg.snapshot_capacity
         return self.store.put(np.full((cap,), _PAD_KEY, np.uint32),
                               np.full((cap,), -1, np.int32),
-                              np.zeros((cap,), np.int32), 0, 0)
+                              np.zeros((cap,), np.int32), 0, 0,
+                              payload=None if dim is None
+                              else np.zeros((cap, dim), np.float32))
 
     def compact(self, state):
         """Synchronous cold-only compaction (no tombstones, no ring)."""
@@ -748,8 +920,16 @@ class ColdManager:
 
     def _merge_cold_impl(self, state, tombs: np.ndarray):
         self._discard_worker()
+        # drain the ring's vector payloads device-side (and free the
+        # drained entries' store slots) before reading the ring back —
+        # the payloads ride the same device_get as the index arrays
+        drain_p, drain_cur, store2 = ring_payload_drain(
+            state.main_snaps, state.store, state.main_forest,
+            jnp.asarray(tombs), self.main_cfg, self.main_tcfg)
+        state = state._replace(store=store2)
         self._on_sync()
-        ls, ms = jax.device_get((state.lsh_snaps, state.main_snaps))
+        ls, ms, ring_pay = jax.device_get(
+            (state.lsh_snaps, state.main_snaps, drain_p))
         n_ring = int(np.max(ls.n_snaps))
         ring_l = []
         for l in range(self.cfg.L):
@@ -761,11 +941,13 @@ class ColdManager:
                 else np.zeros((0,), np.int32) for j in range(4)))
         n_ring_m = int(ms.n_snaps)
         segs = [(ms.keys[s], ms.ids[s], ms.vals[s],
-                 np.full(ms.keys[s].shape, ms.stamps[s], np.int32))
+                 np.full(ms.keys[s].shape, ms.stamps[s], np.int32),
+                 ring_pay[s])
                 for s in range(n_ring_m)]
         ring_m = tuple(
             np.concatenate([seg[j] for seg in segs]) if segs
-            else np.zeros((0,), np.int32) for j in range(4))
+            else (np.zeros((0, self.cfg.dim), np.float32) if j == 4
+                  else np.zeros((0,), np.int32)) for j in range(5))
 
         dead = np.asarray(tombs)
         dead = dead[dead >= 0]

@@ -84,6 +84,16 @@ class PFOConfig:
     cold_segments: int = 0               # routing-table slots per tier (0 = off)
     cold_cache_slots: int = 2            # device LRU cache entries per tier kind
     cold_fetch_rounds: int = 4           # max fetch/re-probe rounds per query
+    # Tiered vector store: sealed cold MainTable segments carry their
+    # own vector payloads, and a spill frees the store slots of every
+    # entry it takes sole custody of — so the dense store only has to
+    # hold the hot + ring working set, not the whole dataset.  When the
+    # free list falls below this watermark the flag word raises
+    # STORE_FULL and the driver runs spill (seal-then-spill if the ring
+    # is empty) until allocation headroom returns.  0 disables the
+    # proactive path (the store must then be sized for the full
+    # dataset, the pre-tiered behavior).
+    store_low_watermark: int = 0
 
     # --- metric ------------------------------------------------------
     metric: str = "angular"              # "angular" | "l2"
@@ -167,3 +177,9 @@ class PFOConfig:
         if self.cold_enabled:
             assert self.cold_cache_slots >= 1
             assert self.cold_fetch_rounds >= 1
+        assert self.store_low_watermark >= 0
+        if self.store_low_watermark:
+            assert self.cold_enabled, (
+                "store_low_watermark needs the cold tier: spilled "
+                "payloads are the only way slots leave the store")
+            assert self.store_low_watermark < self.store_capacity

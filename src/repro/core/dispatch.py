@@ -38,6 +38,11 @@ import jax.numpy as jnp
 #   COLD_MISS   — this round's MainTable cold probe Bloom-hit a segment
 #                 not resident in the device cache (delete path): the
 #                 host must fetch and retry the pending rows.
+#   STORE_FULL  — the dense vector store's free list fell below the
+#                 configured watermark: push payloads out through the
+#                 ring (spill; seal first if the ring is empty) so
+#                 allocation never stalls.  Requires the cold tier and
+#                 ``PFOConfig.store_low_watermark > 0``.
 # ----------------------------------------------------------------------
 FLAG_ANY_PENDING = 1
 FLAG_NEED_SEAL = 2
@@ -46,6 +51,7 @@ FLAG_TOMBS_FULL = 8
 FLAG_COLD_SPILL = 16
 FLAG_COLD_FULL = 32
 FLAG_COLD_MISS = 64
+FLAG_STORE_FULL = 128
 
 #: bit -> short name, the label vocabulary of the per-flag fire
 #: counters (``stream.flag_fired{flag=...}`` in ``repro.obs``)
@@ -57,6 +63,7 @@ FLAG_NAMES = {
     FLAG_COLD_SPILL: "cold_spill",
     FLAG_COLD_FULL: "cold_full",
     FLAG_COLD_MISS: "cold_miss",
+    FLAG_STORE_FULL: "store_full",
 }
 
 
@@ -64,7 +71,8 @@ def pack_round_flags(any_pending: jax.Array, need_seal: jax.Array,
                      snaps_full: jax.Array, tombs_full: jax.Array,
                      cold_spill: jax.Array | None = None,
                      cold_full: jax.Array | None = None,
-                     cold_miss: jax.Array | None = None) -> jax.Array:
+                     cold_miss: jax.Array | None = None,
+                     store_full: jax.Array | None = None) -> jax.Array:
     """Pack the round's booleans into one i32 flag word (device-side).
     The cold bits are optional so cold-disabled (and distributed)
     callers keep their exact pre-cold-tier flag programs."""
@@ -74,7 +82,8 @@ def pack_round_flags(any_pending: jax.Array, need_seal: jax.Array,
             + tombs_full.astype(jnp.int32) * FLAG_TOMBS_FULL)
     for bit, flag in ((cold_spill, FLAG_COLD_SPILL),
                       (cold_full, FLAG_COLD_FULL),
-                      (cold_miss, FLAG_COLD_MISS)):
+                      (cold_miss, FLAG_COLD_MISS),
+                      (store_full, FLAG_STORE_FULL)):
         if bit is not None:
             word = word + bit.astype(jnp.int32) * flag
     return word

@@ -37,14 +37,14 @@ from . import snapshots as snap_mod
 from .config import PFOConfig
 from .dispatch import (FLAG_ANY_PENDING, FLAG_COLD_FULL, FLAG_COLD_MISS,
                        FLAG_COLD_SPILL, FLAG_NEED_SEAL, FLAG_SNAPS_FULL,
-                       FLAG_TOMBS_FULL, dispatch_to_trees, gather_mailbox,
-                       mailbox_ids, pack_round_flags)
+                       FLAG_STORE_FULL, FLAG_TOMBS_FULL, dispatch_to_trees,
+                       gather_mailbox, mailbox_ids, pack_round_flags)
 from .hash_tree import (TreeConfig, TreeState, forest_delete_dispatched,
                         forest_headroom, forest_insert_dispatched,
                         forest_lookup, forest_query, init_forest)
 from .lsh import main_table_keys, make_projections, region_ids
 from .store import (DenseStore, dense_alloc, dense_free, dense_init,
-                    dense_read)
+                    dense_read, dense_read_tiered)
 
 INT_MAX = jnp.int32(2**31 - 1)
 MAX_TOMBSTONES = 1024        # default for PFOConfig.max_tombstones
@@ -168,11 +168,26 @@ def _round_flags(state: PFOState, cfg: PFOConfig, main_capacity: int,
     tombs_full = state.n_tombstones >= _tombs_threshold(cfg)
     if cfg.cold_enabled:
         # capacity relief is a spill, never a merge — SNAPS_FULL stays 0
+        cold_spill = ring_full
+        store_full = None
+        if cfg.store_low_watermark:
+            # tiered store pressure: free slots under the watermark.
+            # Relief is spilling ring payloads off-device; with an empty
+            # ring the hot forest must seal first so there is something
+            # to spill.  (Python-gated: watermark-off programs keep the
+            # exact pre-tiered flag trace.)
+            store_low = state.store.free_top < cfg.store_low_watermark
+            ring_nonempty = state.main_snaps.n_snaps > 0
+            hot_nonempty = jnp.sum(state.main_forest.n_items) > 0
+            cold_spill = cold_spill | (store_low & ring_nonempty)
+            need_seal = need_seal | (store_low & ~ring_nonempty
+                                     & hot_nonempty)
+            store_full = store_low
         return pack_round_flags(
             jnp.asarray(any_pending), need_seal, jnp.bool_(False),
-            tombs_full, cold_spill=ring_full,
+            tombs_full, cold_spill=cold_spill,
             cold_full=state.cold.n_cold >= _cold_full_threshold(cfg),
-            cold_miss=cold_miss)
+            cold_miss=cold_miss, store_full=store_full)
     return pack_round_flags(jnp.asarray(any_pending), need_seal,
                             ring_full, tombs_full)
 
@@ -347,15 +362,18 @@ def _dedupe_candidates(cand: jax.Array, tombstones: jax.Array,
 
 def _rank_candidates(state: PFOState, qvecs: jax.Array, cids: jax.Array,
                      slot: jax.Array, found: jax.Array, cfg: PFOConfig,
-                     k: int):
+                     k: int, staging: jax.Array | None = None):
     """Exact re-rank: the fused gather+rank+top-k kernel path reads
     candidate vectors straight out of the store by slot id — no
-    (Q, Ct, d) candidate block is ever materialized."""
+    (Q, Ct, d) candidate block is ever materialized.  ``staging`` is
+    the cold tier's flattened device payload arena; slots
+    ``>= store_capacity`` gather from it (``staging=None`` keeps the
+    exact pre-tiered kernel program)."""
     from repro.kernels import ops as kops
     valid = (cids >= 0) & found & (slot >= 0)
     idx, top_d = kops.gather_rank_topk(qvecs, state.store.data,
                                        jnp.where(valid, slot, 0), valid,
-                                       k, cfg.metric)
+                                       k, cfg.metric, staging=staging)
     top_ids = jnp.take_along_axis(cids, idx, axis=1)
     return jnp.where(jnp.isfinite(top_d), top_ids, -1), top_d
 
@@ -378,6 +396,17 @@ def query_step(state: PFOState, qvecs: jax.Array, cfg: PFOConfig, k: int):
 # cold-tier variants (cfg.cold_enabled): same pipelines plus the cold
 # Bloom route / cache probe and the wanted/missing fetch protocol
 # ======================================================================
+def _staging_arena(state: PFOState, cfg: PFOConfig) -> jax.Array | None:
+    """The cold MainTable cache's payload pages flattened to one
+    (cold_cache_slots * seg_cap, d) device arena; staging slot
+    ``store_capacity + e*seg_cap + r`` addresses row r of cache entry
+    e.  None when the cache carries no payloads (pre-tiered state)."""
+    vecs = state.cold.main_cache.vecs
+    if vecs is None:
+        return None
+    return vecs.reshape(-1, vecs.shape[-1])
+
+
 def _main_lookup_cold(state: PFOState, ids: jax.Array, cfg: PFOConfig,
                       active: jax.Array | None = None):
     """(N,) id -> (slot, found, unresolved, wanted, missing, probed, fp).
@@ -424,9 +453,12 @@ def query_step_cold(state: PFOState, qvecs: jax.Array, cfg: PFOConfig,
     candidates come from whatever matched segments are resident in the
     device cache, and the (wanted, missing) masks for both tiers ride
     back with the results in the round's single pickup — the host
-    fetches missing segments and re-probes only on a miss.
+    fetches missing segments and re-probes only on a miss.  Candidates
+    that resolve to a *staging* slot (a spilled store row cached in the
+    cold payload arena) rank straight out of that arena — the spilled
+    vector never re-enters the dense store.
     Returns (ids, dists, wanted_l, missing_l, wanted_m, missing_m,
-    info) with info the (8,) cold accounting vector.
+    info) with info the (10,) cold accounting vector.
     """
     q = qvecs.shape[0]
     h, cand = _hot_sealed_candidates(state, qvecs, cfg)
@@ -437,24 +469,36 @@ def query_step_cold(state: PFOState, qvecs: jax.Array, cfg: PFOConfig,
 
     slot, found, _, wanted_m, missing_m, m_probed, m_fp = \
         _main_lookup_cold(state, cids.reshape(-1), cfg)
-    top_ids, top_d = _rank_candidates(state, qvecs, cids,
-                                      slot.reshape(q, -1),
-                                      found.reshape(q, -1), cfg, k)
+    slot, found = slot.reshape(q, -1), found.reshape(q, -1)
+    staging = _staging_arena(state, cfg)
+    top_ids, top_d = _rank_candidates(state, qvecs, cids, slot, found,
+                                      cfg, k, staging=staging)
+    valid = (cids >= 0) & found & (slot >= 0)
+    staged_ranked = jnp.sum(
+        (valid & (slot >= cfg.store_capacity)).astype(jnp.int32))
+    ranked_total = jnp.sum(valid.astype(jnp.int32))
     info = coldtier.pack_cold_info(wanted_l, missing_l, lsh_probed,
                                    lsh_fp, wanted_m, missing_m,
-                                   m_probed, m_fp)
+                                   m_probed, m_fp, staged_ranked,
+                                   ranked_total)
     return top_ids, top_d, wanted_l, missing_l, wanted_m, missing_m, info
 
 
 def _delete_apply(state: PFOState, ids: jax.Array, slot: jax.Array,
                   ok: jax.Array, cfg: PFOConfig, main_capacity: int,
-                  lsh_capacity: int):
+                  lsh_capacity: int, staging: jax.Array | None = None):
     """The delete pipeline after the lookup, shared by both delete
     steps: unlink hot entries, free store slots, append tombstones.
     Returns (state, pending) where pending covers mailbox and
-    tombstone-buffer overflow rows."""
+    tombstone-buffer overflow rows.
+
+    ``staging`` enables the tiered path: a row resolved to a staging
+    slot re-derives its LSH keys from the cold payload arena, and its
+    store slot is NOT freed (the spill already freed it — freeing the
+    out-of-range encoded slot would push garbage on the free stack).
+    """
     # re-derive LSH keys from the stored vector
-    vecs = dense_read(state.store, jnp.where(ok, slot, 0))
+    vecs = dense_read_tiered(state.store, staging, jnp.where(ok, slot, 0))
     h, gtrees = compute_keys(state, vecs, cfg)
     flat_tree = jnp.where(jnp.repeat(ok, cfg.L), gtrees.reshape(-1), -1)
     flat_id = jnp.repeat(ids, cfg.L)
@@ -473,7 +517,11 @@ def _delete_apply(state: PFOState, ids: jax.Array, slot: jax.Array,
     main_forest = forest_delete_dispatched(state.main_forest, mh_g, mid_g,
                                            main_tree_config(cfg))
 
-    store = dense_free(state.store, slot, ok)
+    if staging is None:
+        store = dense_free(state.store, slot, ok)
+    else:
+        hot_ok = ok & (slot < cfg.store_capacity)
+        store = dense_free(state.store, jnp.where(hot_ok, slot, 0), hot_ok)
 
     # tombstones cover sealed copies; overflow rows stay pending.
     # Overflow writes park out of bounds (dropped by XLA) — clamping
@@ -548,7 +596,8 @@ def delete_step_cold(state: PFOState, ids: jax.Array, active: jax.Array,
         _main_lookup_cold(state, ids, cfg, active=active)
     ok = active & found & (slot >= 0)
     state, pending = _delete_apply(state, ids, slot, ok, cfg,
-                                   main_capacity, lsh_capacity)
+                                   main_capacity, lsh_capacity,
+                                   staging=_staging_arena(state, cfg))
     pending = pending | (active & unresolved)
     flags = _round_flags(state, cfg,
                          flags_main_capacity or main_capacity,
@@ -594,7 +643,8 @@ class PFOIndex:
         if cfg.cold_enabled:
             self.cold = coldtier.ColdManager(
                 cfg, _snap_cfg_lsh(cfg), _snap_cfg_main(cfg),
-                root=cold_dir, on_sync=self._count_sync)
+                main_tree_config(cfg), root=cold_dir,
+                on_sync=self._count_sync)
         # metrics on / tracing off by default; everything recorded is
         # host-side, so instrumentation never adds a device readback
         self.set_obs(obs if obs is not None else Obs())
@@ -680,6 +730,17 @@ class PFOIndex:
             self.state = self._epoch("seal", seal_step, self.state,
                                      self.cfg)
             self.maintenance_log.append("seal")
+        elif (flags & FLAG_STORE_FULL) and (flags & FLAG_COLD_SPILL):
+            # tiered store pressure without arena pressure: spill the
+            # oldest ring segment so its payload rows leave the dense
+            # store (slots free at spill) — no seal needed, the hot
+            # forest still has headroom
+            if self.cold.n_cold >= self.cfg.cold_segments:
+                self.state = self._epoch("cold_compact",
+                                         self.cold.compact, self.state)
+                self.maintenance_log.append("cold_compact")
+            self.state = self._epoch("spill", self.cold.spill, self.state)
+            self.maintenance_log.append("spill")
         if flags & FLAG_TOMBS_FULL:
             if self.cold is not None:
                 self._epoch("merge", self._merge_with_cold)
@@ -689,7 +750,7 @@ class PFOIndex:
             self.maintenance_log.append("merge")
         if self.cold is not None and flags & FLAG_COLD_FULL:
             self.cold.compact_start_async()
-        if flags & (FLAG_NEED_SEAL | FLAG_TOMBS_FULL):
+        if flags & (FLAG_NEED_SEAL | FLAG_TOMBS_FULL | FLAG_STORE_FULL):
             self._flags = None       # state changed; carried word is stale
 
     def _merge_with_cold(self) -> None:

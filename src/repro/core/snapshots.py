@@ -123,9 +123,12 @@ def span_gather(keys_s: jax.Array, ids_s: jax.Array, vals_s: jax.Array,
 
     keys_s/ids_s/vals_s: one segment's (cap,) arrays (sorted keys);
     act_s/pfx: (M,) probe activity mask and bucket prefixes.  Returns
-    (cids, cvals, matched): (M, budget) candidates (-1 pad) and an (M,)
-    bool marking probes whose span was non-empty (a *real* bucket hit —
-    used by the cold tier's Bloom false-positive accounting).
+    (cids, cvals, cpos, matched): (M, budget) candidate ids/vals/entry
+    positions (-1 pad) and an (M,) bool marking probes whose span was
+    non-empty (a *real* bucket hit — used by the cold tier's Bloom
+    false-positive accounting).  ``cpos`` is each candidate's row index
+    within the segment — the cold tier uses it to address the matching
+    vector payload row in its device staging arena.
     """
     cap = keys_s.shape[0]
     budget = cfg.snap_budget_per_probe
@@ -145,7 +148,8 @@ def span_gather(keys_s: jax.Array, ids_s: jax.Array, vals_s: jax.Array,
     safe = jnp.where(ok, pos, 0)
     cids = jnp.where(ok, ids_s[safe], -1)
     cvals = jnp.where(ok, vals_s[safe], -1)
-    return cids, cvals, act_s & (hi > lo)
+    cpos = jnp.where(ok, pos, -1)
+    return cids, cvals, cpos, act_s & (hi > lo)
 
 
 def probe(snaps: SnapshotSet, hs: jax.Array, cfg: PFOConfig):
@@ -167,7 +171,7 @@ def probe(snaps: SnapshotSet, hs: jax.Array, cfg: PFOConfig):
                                    cfg.bloom_hashes_eff)         # (S, N*P)
     active = (jnp.arange(S)[:, None] < snaps.n_snaps) & hit
 
-    cids, cvals, _ = jax.vmap(
+    cids, cvals, _, _ = jax.vmap(
         lambda k, i, v, a: span_gather(k, i, v, a, pfx, cfg))(
         snaps.keys, snaps.ids, snaps.vals, active)               # (S, N*P, B)
     # newest-first ordering along the segment axis

@@ -1,12 +1,26 @@
 """Vector stores — the MainTable's Data segment (paper §3.2.1, Fig. 2).
 
-Two faithful embodiments of the paper's off-heap Data segment:
+Two embodiments of the paper's off-heap Data segment:
 
 ``DenseStore``
     Fixed-width rows (the LM-embedding fast path): a pre-allocated
     (capacity, d) array plus a free-list stack.  Allocation pops the
     stack, reclamation pushes it — O(1) both ways, mirroring the
     paper's RECLAIMED_LIST discipline with a single size class.
+
+    The dense arena is **tiered**, not fully HBM-resident: it holds
+    only the *hot + ring* working set.  When a sealed MainTable
+    segment spills to the cold tier (``core.coldtier``) it takes its
+    vector payloads with it — the spill gathers each entry's row into
+    a bucket-major write-once payload file and frees the slot — so
+    the dataset the system serves is bounded by host/flash capacity,
+    not by ``store_capacity`` (the paper's "scale capacity by flash"
+    axis, §3.2.2).  Cold candidates are ranked out of a small device
+    **staging arena** (the payload pages of cache-resident cold
+    segments, ``ColdCache.vecs``); a slot id addresses the tiers by
+    range — ``slot < capacity`` is a hot arena row, ``slot >=
+    capacity`` is staging row ``slot - capacity`` — and
+    :func:`dense_read_tiered` resolves either side.
 
 ``SparseStore``
     The paper's compressed sparse record: (size, non-zero indices,
@@ -104,6 +118,22 @@ def dense_free(st: DenseStore, slots: jax.Array, mask: jax.Array) -> DenseStore:
 def dense_read(st: DenseStore, slots: jax.Array) -> jax.Array:
     """Gather rows; slot -1 reads row 0 (callers mask by validity)."""
     return st.data[jnp.maximum(slots, 0)]
+
+
+def dense_read_tiered(st: DenseStore, staging: jax.Array | None,
+                      slots: jax.Array) -> jax.Array:
+    """Gather rows across the tiered store: ``slot < capacity`` reads
+    the hot arena, ``slot >= capacity`` reads row ``slot - capacity``
+    of the flat ``staging`` arena (the cold cache's resident payload
+    pages).  ``staging=None`` degrades to :func:`dense_read` with the
+    identical program (cold-disabled callers keep their trace)."""
+    if staging is None:
+        return dense_read(st, slots)
+    cap = st.data.shape[0]
+    hot = dense_read(st, jnp.minimum(slots, cap - 1))
+    srow = jnp.clip(slots - cap, 0, staging.shape[0] - 1)
+    cold = staging[srow]
+    return jnp.where((slots >= cap)[..., None], cold, hot)
 
 
 # ======================================================================

@@ -20,6 +20,16 @@ here matches the repo's other kernels and is exact in interpret mode.
 ops.py adds the masked top-k epilogue (``gather_rank_topk``) so
 callers see one fused call, and falls back to kernels/ref.py when
 Pallas is off.
+
+The **staged** variant (``gather_rank_staged_pallas``) is the tiered
+vector store's ranking path: slot ids ``>= n_rows`` address rows of a
+second, small *staging arena* input (the cold tier's cache-resident
+payload pages) at offset ``slot - n_rows``.  Both arenas are gathered
+and a per-candidate select picks the owning tier; the distance
+arithmetic is the exact op sequence of the plain kernel, so a
+candidate served from staging ranks bit-identically to the same
+vector in the dense store — the cold-vs-all-device differential
+harness relies on that.
 """
 from __future__ import annotations
 
@@ -44,6 +54,34 @@ def _kernel(q_ref, store_ref, slots_ref, valid_ref, out_ref, *,
         preferred_element_type=jnp.float32)              # (bq, C)
     if angular:
         # queries arrive pre-normalized (ops.py); normalize the rows
+        nrm = jnp.sqrt(jnp.sum(x * x, axis=-1))
+        d = 1.0 - dots / jnp.maximum(nrm, 1e-9)
+    else:
+        qs = jnp.sum(q * q, axis=-1)[:, None]
+        xs = jnp.sum(x * x, axis=-1)
+        d = jnp.maximum(qs + xs - 2.0 * dots, 0.0)
+    live = valid_ref[...] != 0
+    out_ref[...] = jnp.where(live, d, jnp.inf)
+
+
+def _kernel_staged(q_ref, store_ref, staging_ref, slots_ref, valid_ref,
+                   out_ref, *, n_rows: int, n_staging: int, angular: bool):
+    q = q_ref[...].astype(jnp.float32)                   # (bq, d)
+    slots = slots_ref[...]                               # (bq, C)
+    bq, c = slots.shape
+    idx_hot = jnp.clip(slots, 0, n_rows - 1).reshape(-1)
+    idx_stg = jnp.clip(slots - n_rows, 0, n_staging - 1).reshape(-1)
+    x_hot = jnp.take(store_ref[...], idx_hot, axis=0,
+                     indices_are_sorted=False, unique_indices=False)
+    x_stg = jnp.take(staging_ref[...], idx_stg, axis=0,
+                     indices_are_sorted=False, unique_indices=False)
+    staged = (slots.reshape(-1) >= n_rows)[:, None]
+    x = jnp.where(staged, x_stg, x_hot)
+    x = x.astype(jnp.float32).reshape(bq, c, -1)         # (bq, C, d)
+    dots = jax.lax.dot_general(
+        x, q, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)              # (bq, C)
+    if angular:
         nrm = jnp.sqrt(jnp.sum(x * x, axis=-1))
         d = 1.0 - dots / jnp.maximum(nrm, 1e-9)
     else:
@@ -84,3 +122,37 @@ def gather_rank_pallas(q: jax.Array, store: jax.Array, slots: jax.Array,
         out_shape=jax.ShapeDtypeStruct((nq, c), jnp.float32),
         interpret=interpret,
     )(q, store, slots, valid)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bq", "angular", "interpret"))
+def gather_rank_staged_pallas(q: jax.Array, store: jax.Array,
+                              staging: jax.Array, slots: jax.Array,
+                              valid: jax.Array, *, bq: int = 8,
+                              angular: bool = True,
+                              interpret: bool = False) -> jax.Array:
+    """Tiered-store variant: slots ``>= store rows`` gather from the
+    ``staging`` arena at ``slot - n_rows``.  Same shapes/semantics as
+    :func:`gather_rank_pallas` otherwise."""
+    nq, dim = q.shape
+    n_rows, dim2 = store.shape
+    n_staging, dim3 = staging.shape
+    nq2, c = slots.shape
+    assert dim == dim2 == dim3 and nq == nq2 and slots.shape == valid.shape
+    assert nq % bq == 0
+
+    return pl.pallas_call(
+        functools.partial(_kernel_staged, n_rows=n_rows,
+                          n_staging=n_staging, angular=angular),
+        grid=(nq // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, dim), lambda i: (i, 0)),
+            pl.BlockSpec((n_rows, dim), lambda i: (0, 0)),
+            pl.BlockSpec((n_staging, dim), lambda i: (0, 0)),
+            pl.BlockSpec((bq, c), lambda i: (i, 0)),
+            pl.BlockSpec((bq, c), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nq, c), jnp.float32),
+        interpret=interpret,
+    )(q, store, staging, slots, valid)

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .gather_rank import gather_rank_pallas
+from .gather_rank import gather_rank_pallas, gather_rank_staged_pallas
 from .hamming import hamming_pallas
 from .lsh_hash import lsh_hash_pallas
 from .pair_dist import pair_dist_pallas
@@ -99,34 +99,46 @@ def hamming(a: jax.Array, b: jax.Array) -> jax.Array:
 
 
 def gather_rank(q: jax.Array, store: jax.Array, slots: jax.Array,
-                valid: jax.Array, metric: str) -> jax.Array:
+                valid: jax.Array, metric: str,
+                staging: jax.Array | None = None) -> jax.Array:
     """Fused candidate gather + exact re-rank distances.
 
     (Q, d), (N, d) store, (Q, C) i32 slot ids, (Q, C) bool -> (Q, C)
     f32 distances, +inf where invalid.  Candidate vectors are gathered
     by slot id inside the kernel — no (Q, C, d) block materializes.
+    ``staging`` (M, d) enables the tiered-store path: slots ``>= N``
+    gather staging row ``slot - N`` (the cold tier's device payload
+    arena).  ``staging=None`` keeps the exact pre-tiered program.
     """
     nq, c = slots.shape
     if not _use_pallas():
-        return ref.ref_gather_rank(q, store, slots, valid, metric)
+        return ref.ref_gather_rank(q, store, slots, valid, metric,
+                                   staging=staging)
     if metric == "angular":
         q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
     bq, bc = 8, 128
     qp = _pad_to(q.astype(jnp.float32), 0, bq)
     sp = _pad_to(_pad_to(slots.astype(jnp.int32), 0, bq), 1, bc)
     vp = _pad_to(_pad_to(valid.astype(jnp.int32), 0, bq), 1, bc)
-    out = gather_rank_pallas(qp, store.astype(jnp.float32), sp, vp, bq=bq,
-                             angular=(metric == "angular"),
-                             interpret=_interpret())
+    if staging is None:
+        out = gather_rank_pallas(qp, store.astype(jnp.float32), sp, vp,
+                                 bq=bq, angular=(metric == "angular"),
+                                 interpret=_interpret())
+    else:
+        out = gather_rank_staged_pallas(
+            qp, store.astype(jnp.float32), staging.astype(jnp.float32),
+            sp, vp, bq=bq, angular=(metric == "angular"),
+            interpret=_interpret())
     return out[:nq, :c]
 
 
 def gather_rank_topk(q: jax.Array, store: jax.Array, slots: jax.Array,
-                     valid: jax.Array, k: int, metric: str):
+                     valid: jax.Array, k: int, metric: str,
+                     staging: jax.Array | None = None):
     """One fused call for the ranking hot path: gather by slot id,
     distance, masked top-k.  Returns (idx (Q, k) into the candidate
     axis, dists (Q, k) with +inf past the valid set)."""
-    d = gather_rank(q, store, slots, valid, metric)
+    d = gather_rank(q, store, slots, valid, metric, staging=staging)
     neg, idx = jax.lax.top_k(-d, k)
     return idx, -neg
 

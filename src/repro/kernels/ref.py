@@ -36,16 +36,23 @@ def ref_pair_dist(q: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
 
 
 def ref_gather_rank(q: jnp.ndarray, store: jnp.ndarray, slots: jnp.ndarray,
-                    valid: jnp.ndarray, metric: str) -> jnp.ndarray:
+                    valid: jnp.ndarray, metric: str,
+                    staging: jnp.ndarray | None = None) -> jnp.ndarray:
     """(Q, d) f32, (N, d) f32, (Q, C) i32, (Q, C) bool -> (Q, C) f32.
 
     Gather store rows by slot id (clipped; masked rows may carry any
     slot, including duplicates) and exact-rank against each query;
     invalid positions are +inf.  Matches ``ops.pairwise_rank`` over the
-    explicitly gathered candidate block.
+    explicitly gathered candidate block.  With ``staging`` (M, d),
+    slots ``>= store rows`` gather staging row ``slot - n`` instead
+    (the tiered-store path).
     """
     q = q.astype(jnp.float32)
     x = store[jnp.clip(slots, 0, store.shape[0] - 1)].astype(jnp.float32)
+    if staging is not None:
+        n = store.shape[0]
+        xs_ = staging[jnp.clip(slots - n, 0, staging.shape[0] - 1)]
+        x = jnp.where((slots >= n)[..., None], xs_.astype(jnp.float32), x)
     if metric == "angular":
         qn = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
         xn = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-9)

@@ -326,11 +326,14 @@ class LocalBackend:
             # compile the spill program against a scratch state so the
             # first real spill epoch does not pay a jit compile
             from repro.core.coldtier import spill_device
-            from repro.core.index import _snap_cfg_lsh, _snap_cfg_main
+            from repro.core.index import (_snap_cfg_lsh, _snap_cfg_main,
+                                          main_tree_config)
             sealed = seal_step(scratch, cfg)
             jax.block_until_ready(spill_device(
                 sealed.lsh_snaps, sealed.main_snaps, sealed.cold,
-                _snap_cfg_lsh(cfg), _snap_cfg_main(cfg))[:3])
+                sealed.store, sealed.main_forest, sealed.tombstones,
+                _snap_cfg_lsh(cfg), _snap_cfg_main(cfg),
+                main_tree_config(cfg))[:4])
         else:
             jax.block_until_ready(merge_step(seal_step(scratch, cfg), cfg))
 

@@ -21,6 +21,13 @@ Two backings share one interface:
   is what lets checkpoints reference segments by hardlink instead of
   re-dumping them (``checkpoint.ckpt.save_index_checkpoint``).
 
+A segment may carry a **vector payload block** — a (cap, d) f32 array
+with row r holding entry r's vector (the tiered dense store's flash
+level; MainTable segments only).  It lives in a sibling write-once
+``seg_<gid>.vec.npy`` file (or RAM array) sharing the segment's
+lifecycle: written in the same ``put``, deleted/exported/imported with
+the index block, mmap'd on read.
+
 Pure numpy — no JAX or repro imports — so the store can be driven from
 background compaction threads without touching device runtime state.
 """
@@ -44,7 +51,8 @@ class SegmentStore:
         if root is not None:
             os.makedirs(root, exist_ok=True)
         self._mem: dict[int, np.ndarray] = {}
-        self._meta: dict[int, dict] = {}        # gid -> {count, stamp}
+        self._mem_vec: dict[int, np.ndarray] = {}
+        self._meta: dict[int, dict] = {}   # gid -> {count, stamp[, vec_dim]}
         self._next_gid = 0
         self.bytes_written = 0
 
@@ -60,9 +68,18 @@ class SegmentStore:
             return None
         return os.path.join(self.root, f"seg_{gid:08d}.npy")
 
+    def vec_path(self, gid: int) -> str | None:
+        """Sibling file carrying the segment's vector payload block."""
+        if self.root is None:
+            return None
+        return os.path.join(self.root, f"seg_{gid:08d}.vec.npy")
+
     def put(self, keys: np.ndarray, ids: np.ndarray, vals: np.ndarray,
-            count: int, stamp: int) -> int:
-        """Persist one sealed segment; returns its gid (write-once)."""
+            count: int, stamp: int,
+            payload: np.ndarray | None = None) -> int:
+        """Persist one sealed segment; returns its gid (write-once).
+        ``payload`` (cap, d) f32 rows travel in a sibling ``.vec.npy``
+        block (the MainTable tier's spilled vectors)."""
         cap = keys.shape[0]
         rec = np.empty((cap,), SEGMENT_DTYPE)
         rec["key"] = np.asarray(keys, np.uint32)
@@ -76,6 +93,14 @@ class SegmentStore:
             np.save(self.path(gid), rec)
         self._meta[gid] = {"count": int(count), "stamp": int(stamp)}
         self.bytes_written += rec.nbytes
+        if payload is not None:
+            payload = np.asarray(payload, np.float32)
+            if self.root is None:
+                self._mem_vec[gid] = payload
+            else:
+                np.save(self.vec_path(gid), payload)
+            self._meta[gid]["vec_dim"] = int(payload.shape[1])
+            self.bytes_written += payload.nbytes
         return gid
 
     def get(self, gid: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -86,36 +111,63 @@ class SegmentStore:
             rec = np.load(self.path(gid), mmap_mode="r")
         return rec["key"], rec["id"], rec["val"]
 
+    def get_payload(self, gid: int) -> np.ndarray | None:
+        """(cap, d) f32 payload view (mmap'd in file mode); None when
+        the segment carries no vector block."""
+        if "vec_dim" not in self._meta[gid]:
+            return None
+        if self.root is None:
+            return self._mem_vec[gid]
+        return np.load(self.vec_path(gid), mmap_mode="r")
+
     def meta(self, gid: int) -> dict:
         return dict(self._meta[gid])
 
     def delete(self, gid: int) -> None:
-        self._meta.pop(gid)
+        meta = self._meta.pop(gid)
         if self.root is None:
             self._mem.pop(gid)
+            self._mem_vec.pop(gid, None)
         else:
             os.remove(self.path(gid))
+            if "vec_dim" in meta:
+                os.remove(self.vec_path(gid))
 
     # -- checkpoint support --------------------------------------------
+    @staticmethod
+    def vec_sibling(path: str) -> str:
+        """Payload file path next to a segment file path."""
+        assert path.endswith(".npy")
+        return path[:-len(".npy")] + ".vec.npy"
+
     def export(self, gid: int, dest_path: str) -> None:
-        """Materialize a segment at ``dest_path``.
+        """Materialize a segment (and its payload block, if any) at
+        ``dest_path`` (payload at the ``.vec.npy`` sibling).
 
         File mode hardlinks (the segment file is immutable, so the link
         shares the inode at zero copy cost — "manifest, not re-dump");
         cross-device or RAM-backed stores fall back to a real write.
         """
-        src = self.path(gid)
-        if src is not None:
-            try:
-                os.link(src, dest_path)
-                return
-            except OSError:
-                shutil.copyfile(src, dest_path)
-                return
-        np.save(dest_path, self._mem[gid])
+        def materialize(src, dest, mem):
+            if src is not None:
+                try:
+                    os.link(src, dest)
+                except OSError:
+                    shutil.copyfile(src, dest)
+            else:
+                np.save(dest, mem)
+        materialize(self.path(gid), dest_path, self._mem.get(gid))
+        if "vec_dim" in self._meta[gid]:
+            materialize(self.vec_path(gid), self.vec_sibling(dest_path),
+                        self._mem_vec.get(gid))
 
     def import_file(self, src_path: str, meta: dict) -> int:
-        """Adopt a checkpointed segment file into this store."""
+        """Adopt a checkpointed segment file (and its ``.vec.npy``
+        payload sibling, when the manifest records one) into this
+        store."""
         rec = np.load(src_path)
+        payload = None
+        if "vec_dim" in meta:
+            payload = np.load(self.vec_sibling(src_path))
         return self.put(rec["key"], rec["id"], rec["val"],
-                        meta["count"], meta["stamp"])
+                        meta["count"], meta["stamp"], payload=payload)

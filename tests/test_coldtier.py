@@ -328,7 +328,11 @@ def test_capacity_4x_ring_recall_under_churn():
 # ======================================================================
 # deletes / merges against cold-resident data
 # ======================================================================
-def test_delete_cold_resident_frees_slots_and_excludes():
+def test_delete_cold_resident_excludes_without_double_free():
+    """Tiered store: a spilled entry's slot is freed AT SPILL TIME (its
+    payload lives in the sealed segment), so deleting cold-resident ids
+    must not free any further slots — a second free would hand the same
+    slot to two ids.  The delete still excludes the ids from queries."""
     cfg = cold_cfg()
     vecs = _clustered(1500, cfg.dim, seed=21)
     idx = PFOIndex(cfg, seed=0)
@@ -341,7 +345,8 @@ def test_delete_cold_resident_frees_slots_and_excludes():
     rounds = idx.delete(victims)
     assert rounds >= 2                            # COLD_MISS retry happened
     assert idx.cold.counters["fetches"] > fetches0
-    assert idx.stats()["store_free"] == free0 + 40
+    # slots already left the store at spill; the delete frees none
+    assert idx.stats()["store_free"] == free0
     ids, _ = idx.query(vecs[:40], k=10)
     assert not np.isin(victims, ids).any()
 
@@ -455,7 +460,12 @@ def test_missing_newer_segment_blocks_stale_cold_resolution():
     state = state._replace(cold=state.cold._replace(main_cache=cache))
     slot, found, unresolved, _, missing, _, _ = _main_lookup_cold(
         state, X, cfg)
-    assert bool(found[0]) and int(slot[0]) == 77   # newest stamp wins
+    # newest stamp wins; the resolved slot is *staging-encoded*
+    # (store_capacity + cache_row * seg_cap + pos): the tiered store
+    # ranks spilled entries from the cold payload arena, never through
+    # the raw segment val (a store slot possibly since re-owned)
+    want = cfg.store_capacity + 1 * mcfg.snapshot_capacity + 0
+    assert bool(found[0]) and int(slot[0]) == want
     assert not bool(unresolved[0])
     assert not np.asarray(missing).any()
 
@@ -562,7 +572,8 @@ def test_checkpoint_roundtrip_cold(tmp_path, backing):
 
 def test_checkpoint_hardlinks_not_redump(tmp_path):
     """File-backed segment checkpoints reference by hardlink — same
-    inode, no data copy (the manifest-not-redump contract)."""
+    inode, no data copy (the manifest-not-redump contract) — and the
+    vector-payload ``.vec.npy`` siblings link the same way."""
     import os
     from repro.checkpoint import save_index_checkpoint
     cfg = cold_cfg()
@@ -574,13 +585,86 @@ def test_checkpoint_hardlinks_not_redump(tmp_path):
     assert idx.cold.n_cold >= 1
     save_index_checkpoint(str(tmp_path / "ck"), 1, idx)
     seg_dir = tmp_path / "ck" / "step_00000001" / "segments"
-    linked = 0
+    linked, linked_vec = 0, 0
     for f in os.listdir(seg_dir):
         src = os.path.join(root, f)
         if os.path.exists(src):
             if os.path.samefile(src, seg_dir / f):
                 linked += 1
+                if f.endswith(".vec.npy"):
+                    linked_vec += 1
     assert linked >= 1
+    assert linked_vec >= 1        # payload blocks link, not re-dump
+
+
+@pytest.mark.parametrize("backing", ["ram", "files"])
+def test_checkpoint_payload_segments_roundtrip(tmp_path, backing):
+    """Tiered-store checkpoint: spilled MainTable segments carry their
+    vector payload blocks through save/restore (manifest ``vec_dim``,
+    ``.vec.npy`` adoption), and queries that rank spilled candidates
+    from the staging arena answer bit-identically after restore."""
+    from repro.checkpoint import (load_index_checkpoint,
+                                  save_index_checkpoint)
+    cfg = cold_cfg()
+    root = str(tmp_path / "cold") if backing == "files" else None
+    vecs = _clustered(1500, cfg.dim, seed=44)
+    idx = PFOIndex(cfg, seed=0, cold_dir=root)
+    for s in range(0, 1500, 300):
+        idx.insert(np.arange(s, s + 300, dtype=np.int32), vecs[s:s + 300])
+    assert idx.cold.counters["spills"] >= 1
+    for gid in idx.cold.main_gids:
+        assert idx.cold.store.meta(gid).get("vec_dim") == cfg.dim
+        assert idx.cold.store.get_payload(gid) is not None
+    qv = vecs[:16]                 # oldest ids -> spilled, rank staged
+    i0, d0 = idx.query(qv, k=5)
+    assert idx.cold.counters["staged_ranked"] >= 1
+
+    save_index_checkpoint(str(tmp_path / "ck"), 3, idx)
+    idx2 = load_index_checkpoint(str(tmp_path / "ck"), 3, cfg, seed=0,
+                                 cold_dir=str(tmp_path / "cold2")
+                                 if backing == "files" else None)
+    for gid in idx2.cold.main_gids:
+        assert idx2.cold.store.meta(gid).get("vec_dim") == cfg.dim
+    s0 = idx2.cold.counters["staged_ranked"]
+    i1, d1 = idx2.query(qv, k=5)
+    assert idx2.cold.counters["staged_ranked"] > s0   # arena rebuilt
+    np.testing.assert_array_equal(i0, i1)
+    np.testing.assert_array_equal(d0, d1)
+
+
+def test_cold_merge_physically_drops_tombstoned_vectors():
+    """The tombstone-draining cold merge must physically remove a
+    deleted id's vector payload from every sealed segment — not merely
+    mask it: no live row of any folded segment carries a victim id, no
+    payload row carries a victim's vector bits, and pad rows are
+    zeroed."""
+    cfg = cold_cfg(max_tombstones=32)
+    vecs = _clustered(1500, cfg.dim, seed=25)
+    idx = PFOIndex(cfg, seed=0)
+    for s in range(0, 1500, 300):
+        idx.insert(np.arange(s, s + 300, dtype=np.int32), vecs[s:s + 300])
+    assert idx.cold.counters["spills"] >= 1
+    victims = np.arange(0, 120, dtype=np.int32)   # >> max_tombstones
+    idx.delete(victims)
+    assert idx.cold.counters["cold_merges"] >= 1
+    # the last sub-threshold tombstone batch is merely masked until the
+    # next merge — drain it explicitly so EVERY victim must be gone
+    idx._merge_with_cold()
+    vset = set(int(v) for v in victims)
+    victim_mat = vecs[victims]
+    checked = 0
+    for gid in idx.cold.main_gids:
+        _, ids, _ = idx.cold.store.get(gid)
+        ids = np.asarray(ids)
+        assert not (set(ids[ids >= 0].tolist()) & vset)
+        pay = np.asarray(idx.cold.store.get_payload(gid))
+        assert pay.shape[1] == cfg.dim
+        # bit-level: no surviving payload row is a deleted vector
+        eq = (pay[:, None, :] == victim_mat[None, :, :]).all(axis=-1)
+        assert not eq.any()
+        assert not pay[ids < 0].any()             # pad rows zeroed
+        checked += 1
+    assert checked >= 1
 
 
 # ======================================================================

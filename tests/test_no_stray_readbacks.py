@@ -48,7 +48,12 @@ ALLOWED = {
     ("core/baselines.py", "ZOrderIndex.insert"),
     ("core/baselines.py", "ZOrderIndex.query"),
     # cold tier: host folds / spill staging run in maintenance epochs,
-    # never inside a steady-state round
+    # never inside a steady-state round.  The tiered-store payload
+    # moves (vector pages staged at spill, fetched at cold-miss, folded
+    # at merge) ride these same entries: spill pulls payload rows in
+    # ColdManager.spill, cold-miss fetches install pages via the
+    # PFOIndex._query_cold epoch, and merges fold .vec files in
+    # ColdManager._merge_cold_impl / _collect — no new sync sites.
     ("core/coldtier.py", "ColdManager._collect"),
     ("core/coldtier.py", "ColdManager._merge_cold_impl"),
     ("core/coldtier.py", "ColdManager.spill"),
