@@ -1,5 +1,7 @@
 from .ckpt import (save_checkpoint, restore_checkpoint, latest_step,
-                   save_index_checkpoint, load_index_checkpoint)
+                   save_index_checkpoint, load_index_checkpoint,
+                   save_dist_checkpoint, load_dist_checkpoint)
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "save_index_checkpoint", "load_index_checkpoint"]
+           "save_index_checkpoint", "load_index_checkpoint",
+           "save_dist_checkpoint", "load_dist_checkpoint"]

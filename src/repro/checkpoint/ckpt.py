@@ -171,6 +171,88 @@ def load_index_checkpoint(ckpt_dir: str, step: int, cfg, seed: int = 0,
     return idx
 
 
+# ======================================================================
+# Distributed backend checkpoints: per-shard cold manifests
+#
+# A DistBackend runs one ColdManager per model shard, each owning its
+# shard's mixed-table segment chain.  The checkpoint records one
+# manifest per shard (``extra["cold_manifests"]``, indexed by shard)
+# and hardlinks each shard's segments under ``segments/shard<k>/`` —
+# restore re-adopts them shard-by-shard with no cross-shard
+# coordination, mirroring the shard-local spill/merge protocol.
+# ======================================================================
+def save_dist_checkpoint(ckpt_dir: str, step: int, backend) -> str:
+    """Checkpoint a ``repro.serving.stream.DistBackend`` (hot sharded
+    state + per-shard cold manifests)."""
+    extra = {"kind": "pfo_dist", "n_inserted": backend.n_inserted,
+             "n_model": backend.dcfg.n_model}
+    write_extra = None
+    if backend.cold_mgrs is not None:
+        mans = [m.manifest() for m in backend.cold_mgrs]
+        extra["cold_manifests"] = mans
+
+        def write_extra(tmp):
+            for s, (mgr, man) in enumerate(zip(backend.cold_mgrs, mans)):
+                seg_dir = os.path.join(tmp, "segments", f"shard{s}")
+                os.makedirs(seg_dir, exist_ok=True)
+                gids = [e["gid"] for row in man["lsh"] for e in row] \
+                    + [e["gid"] for e in man["main"]]
+                for gid in gids:
+                    mgr.store.export(
+                        gid, os.path.join(seg_dir, f"seg_{gid:08d}.npy"))
+
+    return save_checkpoint(ckpt_dir, step, backend.state, extra=extra,
+                           write_extra=write_extra)
+
+
+def load_dist_checkpoint(ckpt_dir: str, step: int, backend):
+    """Restore :func:`save_dist_checkpoint` into a freshly constructed
+    ``DistBackend`` (same ``dcfg``; its ``cold_dir`` selects the new
+    segment backing).  Each shard's manager re-adopts its own manifest;
+    the restored device routing tables stay valid because adoption
+    preserves segment order.  Device caches restart empty — residency
+    rebuilds on first touch, exactly like the single-chip restore."""
+    from jax.sharding import NamedSharding
+    from repro.core import coldtier
+    from repro.core import distributed as dist
+
+    extra_man = os.path.join(ckpt_dir, f"step_{step:08d}", "manifest.json")
+    with open(extra_man) as f:
+        n_model = json.load(f)["extra"].get("n_model")
+    if n_model is not None and n_model != backend.dcfg.n_model:
+        raise ValueError(
+            f"checkpoint has {n_model} model shards, backend has "
+            f"{backend.dcfg.n_model}: per-shard cold chains cannot be "
+            "resharded")
+    specs = dist.state_pspecs(backend.dcfg)
+    shardings = jax.tree.map(lambda s: NamedSharding(backend.mesh, s),
+                             specs)
+    state, extra = restore_checkpoint(ckpt_dir, step, backend.state,
+                                      shardings=shardings)
+    backend.n_inserted = extra.get("n_inserted", 0)
+    mans = extra.get("cold_manifests")
+    if backend.cold_mgrs is not None and mans is not None:
+        src = os.path.join(ckpt_dir, f"step_{step:08d}", "segments")
+        fresh = coldtier.init_cold(dist.shard_cold_cfg(backend.dcfg),
+                                   dist.shard_snap_cfg(backend.dcfg),
+                                   dist.shard_main_snap_cfg(backend.dcfg))
+        cold_states = []
+        for s, (mgr, man) in enumerate(zip(backend.cold_mgrs, mans)):
+            paths = {}
+            for e in [e for row in man["lsh"] for e in row] + man["main"]:
+                paths[e["gid"]] = os.path.join(
+                    src, f"shard{s}", f"seg_{e['gid']:08d}.npy")
+            mgr.adopt_manifest(man, paths)
+            shard = jax.tree.map(lambda a: a[s], state.cold)
+            cold_states.append(shard._replace(
+                lsh_cache=fresh.lsh_cache, main_cache=fresh.main_cache))
+        state = state._replace(cold=dist.dist_put_cold(
+            backend.dcfg, backend.mesh, cold_states))
+    backend.state = state
+    backend._flags = None
+    return backend
+
+
 def restore_checkpoint(ckpt_dir: str, step: int, like, shardings=None):
     """Restore into the structure of ``like``; reshard with
     ``shardings`` (same pytree of NamedSharding) when given —

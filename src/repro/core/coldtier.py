@@ -62,6 +62,7 @@ from . import snapshots as snap_mod
 from .config import PFOConfig
 from .hash_tree import TreeConfig, forest_lookup
 from .lsh import main_table_keys
+from .membership import member_sorted as _member_sorted
 from .store import DenseStore, dense_free
 from repro.storage import SegmentStore
 
@@ -194,6 +195,51 @@ def cold_probe_lsh(cold: ColdState, hs: jax.Array, lsh_cfg: PFOConfig):
     return cand, wanted, missing, jnp.sum(probed), jnp.sum(fp)
 
 
+def cold_probe_lsh_mixed(cold: ColdState, hs: jax.Array,
+                         lsh_cfg: PFOConfig):
+    """Cold-tier LSH candidates against a *mixed-table* segment set —
+    the distributed per-shard tier, where one segment chain holds
+    entries from every LSH table a shard owns (table id in ``vals``,
+    the same encoding the shard's sealed ring uses).
+
+    ``cold.lsh_route`` is stacked (1, C, W) (one mixed chain); every
+    table's probe prefixes test the same C filters, spans gather from
+    the same cache slots (``tables`` tag 0), and cross-table
+    bucket-prefix collisions filter out by ``val == table`` — the
+    candidate multiset matches the per-table tier.  Returns
+    (cand (Q, L*E*P*B), wanted (C,), missing (C,), probed, fp).
+    """
+    Q, L = hs.shape
+    C = cold.lsh_route.stamps.shape[1]
+    cache = cold.lsh_cache
+    route = jax.tree.map(lambda a: a[0], cold.lsh_route)
+    slot_ok, slot_seg, resident = _residency(cache, 0, C)
+    cands = []
+    wanted = jnp.zeros((C,), bool)
+    seg_any = jnp.zeros((C,), bool)
+    for tl in range(L):
+        pfx = snap_mod.probe_prefixes(hs[:, tl], lsh_cfg).reshape(-1)
+        hit = bloom_mod.contains_multi(route.blooms, pfx,
+                                       lsh_cfg.bloom_hashes_eff)  # (C, Q*P)
+        act = (jnp.arange(C)[:, None] < cold.n_cold) & hit
+        wanted = wanted | jnp.any(act, axis=1)
+        act_slot = slot_ok[:, None] & act[jnp.clip(cache.segs, 0, C - 1)]
+        cids, cvals, _, matched = jax.vmap(
+            lambda k, i, v, a: snap_mod.span_gather(k, i, v, a, pfx,
+                                                    lsh_cfg))(
+            cache.keys, cache.ids, cache.vals, act_slot)   # (E, Q*P, B)
+        cids = jnp.where(cvals == tl, cids, -1)
+        seg_any = seg_any | jnp.zeros((C + 1,), bool).at[slot_seg].set(
+            jnp.any(matched, axis=1))[:C]
+        cands.append(jnp.transpose(cids, (1, 0, 2)).reshape(Q, -1))
+    missing = wanted & ~resident
+    probed = wanted & resident
+    fp = probed & ~seg_any
+    return (jnp.concatenate(cands, axis=1), wanted, missing,
+            jnp.sum(probed.astype(jnp.int32)),
+            jnp.sum(fp.astype(jnp.int32)))
+
+
 def cold_lookup_main(cold: ColdState, mh: jax.Array, vids: jax.Array,
                      main_cfg: PFOConfig):
     """Exact (key, id) lookup in the cold MainTable cache.
@@ -269,22 +315,13 @@ def pack_cold_info(lsh_wanted, lsh_missing, lsh_probed, lsh_fp,
 # ======================================================================
 # jitted maintenance helpers (host-called, epoch-time)
 # ======================================================================
-def _member_sorted(x: jax.Array, table: jax.Array) -> jax.Array:
-    """Memory-lean ``jnp.isin``: (n,) x membership in (m,) table via
-    sort + searchsorted — O(n + m) memory where isin's broadcast
-    compare would materialize (n, m) (the ring id set is ~256k rows, so
-    that square is hundreds of GB)."""
-    t = jnp.sort(table.reshape(-1))
-    pos = jnp.clip(jnp.searchsorted(t, x), 0, t.shape[0] - 1)
-    return t[pos] == x
-
-
 @functools.partial(jax.jit,
-                   static_argnames=("lsh_cfg", "main_cfg", "main_tcfg"))
+                   static_argnames=("lsh_cfg", "main_cfg", "main_tcfg",
+                                    "tree_mod"))
 def spill_device(lsh_snaps, main_snaps, cold: ColdState,
                  store: DenseStore, main_forest, tombs,
                  lsh_cfg: PFOConfig, main_cfg: PFOConfig,
-                 main_tcfg: TreeConfig):
+                 main_tcfg: TreeConfig, tree_mod: int | None = None):
     """Pop the oldest ring segment of every tier; route metadata into
     the cold routing table; gather the popped MainTable segment's
     vector payloads out of the dense store and free the store slots of
@@ -300,13 +337,20 @@ def spill_device(lsh_snaps, main_snaps, cold: ColdState,
     payload — they are never ranked (hot/ring precedence,
     newest-stamp-wins resolution and the tombstone filter all shadow
     them) and their slots were already freed (or re-owned) by the
-    delete/update that superseded them."""
+    delete/update that superseded them.
+
+    ``tree_mod``: the distributed per-shard variant — the shard's hot
+    MainTable forest holds only its ``tree_mod`` local trees, so the
+    global murmur tree id reduces modulo it (the shard's ring only ever
+    holds ids the shard owns)."""
     lsh2, pl = jax.vmap(
         lambda s: snap_mod.pop_oldest(s, lsh_cfg))(lsh_snaps)
     main2, pm = snap_mod.pop_oldest(main_snaps, main_cfg)
     ids, vals = pm["ids"], pm["vals"]
     n_store = store.data.shape[0]
     mh, mtree = main_table_keys(ids, main_cfg)
+    if tree_mod is not None:
+        mtree = mtree % tree_mod
     _, hot_found = forest_lookup(main_forest, mtree, mh, ids, main_tcfg)
     in_ring = _member_sorted(ids, main2.ids)
     dead = _member_sorted(ids, tombs)
@@ -351,9 +395,11 @@ def cache_install(cache: ColdCache, slot, keys, ids, vals, stamp,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("main_cfg", "main_tcfg"))
+@functools.partial(jax.jit, static_argnames=("main_cfg", "main_tcfg",
+                                             "tree_mod"))
 def ring_payload_drain(main_snaps, store: DenseStore, main_forest,
-                       tombs, main_cfg: PFOConfig, main_tcfg: TreeConfig):
+                       tombs, main_cfg: PFOConfig, main_tcfg: TreeConfig,
+                       tree_mod: int | None = None):
     """Device half of the cold merge's ring drain: gather the vector
     payload of every ring entry the ring holds the current version of,
     and free those store slots (the entries leave the device for the
@@ -379,6 +425,8 @@ def ring_payload_drain(main_snaps, store: DenseStore, main_forest,
     first = jnp.concatenate([jnp.array([True]), sid[1:] != sid[:-1]])
     newest = jnp.zeros_like(valid).at[order].set(first & (sid < imax))
     mh, mtree = main_table_keys(ids, main_cfg)
+    if tree_mod is not None:                   # distributed: local trees
+        mtree = mtree % tree_mod
     _, hot_found = forest_lookup(main_forest, mtree, mh, ids, main_tcfg)
     dead = _member_sorted(ids, tombs)
     n_store = store.data.shape[0]
@@ -439,13 +487,17 @@ class _FoldResult(NamedTuple):
 
 def _fold_entries(keys, ids, vals, stamps, dead: np.ndarray, cap: int,
                   prefix_bits: int, bloom_hashes: int, bloom_bits: int,
-                  payloads=None):
+                  payloads=None, group_by_val: bool = False):
     """Fold concatenated segment entries: drop dead/padding, keep the
     newest stamp per id, re-sort bucket-major, chunk into cap-sized
     write-once segments with fresh Bloom filters.  Pure numpy.
     ``payloads`` (n, d) rows travel with their entries (MainTable
     tier), so tombstoned/superseded vectors are physically dropped in
-    the same pass that drops their index entries."""
+    the same pass that drops their index entries.  ``group_by_val``
+    dedupes per (id, val) instead of per id — mixed-table segments
+    (``val`` == owning LSH table, the distributed per-shard tier) keep
+    one entry per table legitimately, mirroring
+    ``snapshots.merge(group_by_val=True)``."""
     live = ids >= 0
     if dead.size:
         live &= ~np.isin(ids, dead)
@@ -456,8 +508,14 @@ def _fold_entries(keys, ids, vals, stamps, dead: np.ndarray, cap: int,
     p = None if payloads is None \
         else np.asarray(payloads, np.float32)[live]
     if i.size:
-        order = np.lexsort((-s, i))            # id asc, stamp desc
-        first = np.concatenate([[True], i[order][1:] != i[order][:-1]])
+        if group_by_val:
+            order = np.lexsort((-s, v, i))     # (id, val) asc, stamp desc
+            same = (i[order][1:] == i[order][:-1]) \
+                & (v[order][1:] == v[order][:-1])
+            first = np.concatenate([[True], ~same])
+        else:
+            order = np.lexsort((-s, i))        # id asc, stamp desc
+            first = np.concatenate([[True], i[order][1:] != i[order][:-1]])
         keep = np.sort(order[first])
         k, i, v, s = k[keep], i[keep], v[keep], s[keep]
         ko = np.argsort(k, kind="stable")
@@ -497,9 +555,14 @@ class ColdManager:
 
     def __init__(self, cfg: PFOConfig, lsh_cfg: PFOConfig,
                  main_cfg: PFOConfig, main_tcfg: TreeConfig,
-                 root: str | None = None, on_sync=None):
+                 root: str | None = None, on_sync=None,
+                 mixed_lsh: bool = False):
+        """``mixed_lsh``: the LSH tier is one mixed-table segment chain
+        (``val`` == owning table — the distributed per-shard layout,
+        driven with ``cfg.L == 1``), so folds dedupe per (id, table)."""
         self.cfg, self.lsh_cfg, self.main_cfg = cfg, lsh_cfg, main_cfg
         self.main_tcfg = main_tcfg
+        self.mixed_lsh = mixed_lsh
         self.store = SegmentStore(root)
         self.lsh_gids: list[list[int]] = [[] for _ in range(cfg.L)]
         self.main_gids: list[int] = []
@@ -639,6 +702,30 @@ class ColdManager:
         return state._replace(lsh_snaps=lsh2, main_snaps=main2,
                               cold=cold2, store=store2)
 
+    def adopt_spill(self, pl_h, pm_h) -> None:
+        """Persist one spill epoch's popped segments when the device
+        pop already ran elsewhere (the distributed backend's shard-local
+        spill program): host bookkeeping only.  ``pl_h`` arrays carry a
+        leading table axis (size ``cfg.L``), ``pm_h`` arrays are flat —
+        the same layout :meth:`spill` reads back."""
+        if self.n_cold >= self.cfg.cold_segments:
+            raise RuntimeError(
+                f"cold routing table full ({self.n_cold}/"
+                f"{self.cfg.cold_segments} segments) and compaction "
+                "cannot shrink it; raise PFOConfig.cold_segments or the "
+                "snapshot capacities")
+        for l in range(self.cfg.L):
+            self.lsh_gids[l].append(
+                self.store.put(pl_h["keys"][l], pl_h["ids"][l],
+                               pl_h["vals"][l], pl_h["count"][l],
+                               pl_h["stamp"][l]))
+        self.main_gids.append(
+            self.store.put(pm_h["keys"], pm_h["ids"], pm_h["vals"],
+                           pm_h["count"], pm_h["stamp"],
+                           payload=pm_h["payload"]))
+        self._gen += 1
+        self.counters["spills"] += 1
+
     # -- fetch ----------------------------------------------------------
     def _pick_slot(self, tags: list, use: list, needed: set) -> int | None:
         """Free slot first, else the LRU slot not needed this round."""
@@ -658,8 +745,15 @@ class ColdManager:
         every ``device_put`` before the first install so the transfers
         overlap; evicts LRU slots, never one wanted by this round.
         """
+        return state._replace(cold=self.fetch_cold(
+            state.cold, wanted_l, missing_l, wanted_m, missing_m))
+
+    def fetch_cold(self, cold: ColdState, wanted_l, missing_l,
+                   wanted_m, missing_m) -> ColdState:
+        """:meth:`fetch` against a bare (shard-local) cold state — the
+        distributed backend slices one shard out of the stacked state,
+        fetches, and scatters the result back."""
         self._tick += 1
-        cold = state.cold
         # LRU touch for segments this round actually used
         for e, tag in enumerate(self._lsh_tags):
             if tag is not None and wanted_l[tag[0], tag[1]]:
@@ -716,7 +810,7 @@ class ColdManager:
             self.counters["fetches"] += 1
         if plan:
             self.counters["fetch_rounds"] += 1
-        return state._replace(cold=cold)
+        return cold
 
     # -- compaction / merge --------------------------------------------
     def _collect(self, gids: list[int], with_payload: bool = False):
@@ -759,7 +853,8 @@ class ColdManager:
                 k, i, v, s, dead, self.lsh_cfg.snapshot_capacity,
                 self.lsh_cfg.snap_prefix_bits,
                 self.lsh_cfg.bloom_hashes_eff,
-                self.lsh_cfg.bloom_bits_eff))
+                self.lsh_cfg.bloom_bits_eff,
+                group_by_val=self.mixed_lsh))
         k, i, v, s, p = self._collect(self.main_gids, with_payload=True)
         if ring_extra_main is not None:
             rk, ri, rv, rs, rp = ring_extra_main
@@ -781,6 +876,17 @@ class ColdManager:
         rebuild the device routing table, flush the cache.
         ``mark_futile``: this was a *shrink* attempt (compaction) — if
         it did not shrink, arm the backoff."""
+        routing = self.install_layout(fold, mark_futile=mark_futile)
+        return state._replace(cold=self.routed_cold_state(routing))
+
+    def install_layout(self, fold: _FoldResult,
+                       mark_futile: bool = False):
+        """Host half of the fold install: rewrite the gid lists and
+        build the fresh routing arrays.  Returns the numpy routing
+        tuple ``(lb, ls, lc, mb, ms, mc, n_cold)`` — the single-chip
+        path converts it straight to a device ``ColdState``
+        (:meth:`routed_cold_state`); the distributed backend stacks one
+        tuple per shard before the device write."""
         cfg = self.cfg
         n_cold = max([len(s) for s in fold.lsh_segments]
                      + [len(fold.main_segments)])
@@ -832,18 +938,25 @@ class ColdManager:
         E = cfg.cold_cache_slots
         self._lsh_tags = [None] * E
         self._main_tags = [None] * E
-        cold = state.cold._replace(
+        return lb, ls, lc, mb, ms, mc, n_cold
+
+    def routed_cold_state(self, routing) -> ColdState:
+        """Fresh device cold state for an installed layout (routing
+        tables from :meth:`install_layout`, empty caches)."""
+        lb, ls, lc, mb, ms, mc, n_cold = routing
+        return ColdState(
             lsh_route=ColdRouting(blooms=jnp.asarray(lb),
                                   stamps=jnp.asarray(ls),
                                   counts=jnp.asarray(lc)),
             main_route=ColdRouting(blooms=jnp.asarray(mb),
                                    stamps=jnp.asarray(ms),
                                    counts=jnp.asarray(mc)),
-            lsh_cache=_empty_cache(cfg, self.lsh_cfg.snapshot_capacity),
-            main_cache=_empty_cache(cfg, self.main_cfg.snapshot_capacity,
+            lsh_cache=_empty_cache(self.cfg,
+                                   self.lsh_cfg.snapshot_capacity),
+            main_cache=_empty_cache(self.cfg,
+                                    self.main_cfg.snapshot_capacity,
                                     dim=self.cfg.dim),
             n_cold=jnp.int32(n_cold))
-        return state._replace(cold=cold)
 
     def _put_empty(self, tier_cfg: PFOConfig, dim: int | None = None) -> int:
         cap = tier_cfg.snapshot_capacity

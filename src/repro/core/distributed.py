@@ -14,11 +14,15 @@ Placement (mesh axes ``(pod, data, model)`` or ``(data, model)``):
   the identical round (state replicas can never diverge).
 
 Query protocol (collectives over ``model`` only):
-  1. every chip hashes the queries (replicated projections);
-  2. chips probe the hot trees *they own* plus their local sealed
-     snapshots (ownership mask == the actor single-writer guarantee);
+  1. each chip hashes its contiguous block of query rows once; the
+     full key table reassembles with one integer ``all_gather``;
+  2. (row, table) probe requests route by one ``all_to_all`` to the
+     tree-owner chip, which descends only the trees it owns and probes
+     its local sealed snapshots and cold routing table (ownership ==
+     the actor single-writer guarantee);
   3. candidate ids route by one ``all_to_all`` to their murmur owner,
-     which looks up the vector and exact-ranks against the query;
+     which looks up the vector (hot store or cold staging arena) and
+     exact-ranks against the query;
   4. (id, dist) partials ``all_gather`` over ``model``; every chip
      keeps the deduped global top-k.
 
@@ -44,12 +48,14 @@ The same routing substrate carries MoE expert dispatch in
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from . import coldtier
 from . import snapshots as snap_mod
 from .config import PFOConfig
 from .dispatch import dispatch_to_trees, gather_mailbox, mailbox_ids, \
@@ -57,10 +63,12 @@ from .dispatch import dispatch_to_trees, gather_mailbox, mailbox_ids, \
 from .hash_tree import (forest_delete_dispatched, forest_headroom,
                         forest_insert_dispatched, forest_lookup,
                         forest_query, init_forest)
-from .index import (PFOState, _tombs_threshold, lsh_tree_config,
-                    main_tree_config)
+from .index import (PFOState, _cold_full_threshold, _tombs_threshold,
+                    lsh_tree_config, main_tree_config)
 from .lsh import main_table_keys, make_projections, region_ids
-from .store import dense_alloc, dense_free, dense_init, dense_read
+from .membership import member_sorted
+from .store import (dense_alloc, dense_free, dense_init, dense_read,
+                    dense_read_tiered)
 from repro import compat
 from repro.kernels import ops as kops
 
@@ -92,18 +100,43 @@ def shard_snap_cfg(dcfg: DistConfig) -> PFOConfig:
 
 def shard_main_snap_cfg(dcfg: DistConfig) -> PFOConfig:
     cap = dcfg.main_trees_per_shard * dcfg.pfo.main_max_leaves_per_tree
-    return PFOConfig(**{**dcfg.pfo.__dict__, "snapshot_capacity": cap})
+    # store_capacity shrinks to the shard's dense-store rows so the
+    # cold staging-slot encoding (store_capacity + arena row) starts
+    # exactly at the per-shard tiered-read boundary
+    return PFOConfig(**{**dcfg.pfo.__dict__, "snapshot_capacity": cap,
+                        "store_capacity":
+                            dcfg.pfo.store_capacity // dcfg.n_model,
+                        "store_low_watermark": 0})
+
+
+def shard_cold_cfg(dcfg: DistConfig) -> PFOConfig:
+    """Per-shard cold-tier driver config: a shard's cold chain is one
+    *mixed-table* segment sequence (it mirrors the shard's mixed sealed
+    ring, table id in ``vals``), so the shared coldtier machinery runs
+    with ``L == 1``."""
+    return PFOConfig(**{**dcfg.pfo.__dict__, "L": 1})
+
+
+def _dist_cold_init(dcfg: DistConfig):
+    """Stacked (n_model, ...) empty per-shard cold states, or None."""
+    cfg = dcfg.pfo
+    if not cfg.cold_enabled:
+        return None
+    # the tiered-store low watermark needs per-shard free-list flag
+    # plumbing that does not exist yet; refuse rather than mis-spill
+    assert cfg.store_low_watermark == 0, \
+        "store_low_watermark is not supported on the distributed backend"
+    ccfg = shard_cold_cfg(dcfg)
+    snap_cfg = shard_snap_cfg(dcfg)
+    msnap_cfg = shard_main_snap_cfg(dcfg)
+    return jax.vmap(lambda _: coldtier.init_cold(ccfg, snap_cfg,
+                                                 msnap_cfg))(
+        jnp.arange(dcfg.n_model))
 
 
 def _abstract_state(dcfg: DistConfig) -> PFOState:
     """Shape skeleton of the distributed state (no allocation)."""
     cfg = dcfg.pfo
-    # the cold tier (host segment store + device routing) is single-chip
-    # for now: a sharded state would need per-shard segment stores and
-    # shard-local fetch rounds (ROADMAP)
-    assert not cfg.cold_enabled, \
-        "cold tier (cold_segments > 0) is not supported on the " \
-        "distributed backend yet"
     snap_cfg = shard_snap_cfg(dcfg)
     msnap_cfg = shard_main_snap_cfg(dcfg)
     return jax.eval_shape(
@@ -124,6 +157,7 @@ def _abstract_state(dcfg: DistConfig) -> PFOState:
             n_tombstones=jnp.int32(0),
             stamp=jnp.int32(0),
             proj=make_projections(k, cfg),
+            cold=_dist_cold_init(dcfg),
         ), jax.random.PRNGKey(0))
 
 
@@ -142,6 +176,7 @@ def state_pspecs(dcfg: DistConfig) -> PFOState:
         main_snaps=jax.tree.map(s0, ex.main_snaps),
         tombstones=P(), n_tombstones=P(), stamp=P(),
         proj=jax.tree.map(lambda _: P(), ex.proj),
+        cold=jax.tree.map(s0, ex.cold),
     )
 
 
@@ -164,6 +199,7 @@ def dist_init_state(dcfg: DistConfig, key: jax.Array, mesh: Mesh) -> PFOState:
         n_tombstones=jnp.int32(0),
         stamp=jnp.int32(0),
         proj=make_projections(key, cfg),
+        cold=_dist_cold_init(dcfg),
     )
     specs = state_pspecs(dcfg)
     return jax.tree.map(
@@ -244,13 +280,17 @@ def _route_acked(payload: jax.Array, dest: jax.Array, n_shards: int,
 
 
 def _dist_round_flags(state: PFOState, dcfg: DistConfig, fm: int, fl: int,
-                      any_pending: jax.Array, mdl: str) -> jax.Array:
+                      any_pending: jax.Array, mdl: str,
+                      cold_miss: jax.Array | None = None) -> jax.Array:
     """Packed maintenance word over the shard-local state (inside
     shard_map): worst-tree headroom combines with ``pmax`` so the word
     is replicated and the host reads ONE scalar — and the thresholds
     mirror ``index._round_flags`` exactly, so a distributed engine
     seals/merges at the same rounds as a single-chip one fed the same
-    trace (the differential tests rely on this).
+    trace (the differential tests rely on this).  With a cold tier the
+    per-shard ring/routing occupancy folds into the same word
+    (``pmax``-combined COLD_SPILL / COLD_FULL / COLD_MISS bits), so
+    steady-state rounds still read back exactly one scalar.
     """
     cfg = dcfg.pfo
     leaf_head, node_head = forest_headroom(state.lsh_forest)
@@ -269,6 +309,16 @@ def _dist_round_flags(state: PFOState, dcfg: DistConfig, fm: int, fl: int,
     snaps_full = jax.lax.pmax(state.lsh_snaps.n_snaps[0], mdl) \
         >= cfg.max_snapshots - 1
     tombs_full = state.n_tombstones >= _tombs_threshold(cfg)
+    if cfg.cold_enabled:
+        # capacity relief is a spill, never a merge — SNAPS_FULL stays
+        # 0 and the full ring arms COLD_SPILL instead; every shard
+        # spills in the same epoch (lockstep rings, pmax-combined bit)
+        cold_full = jax.lax.pmax(state.cold.n_cold[0], mdl) \
+            >= _cold_full_threshold(cfg)
+        return pack_round_flags(
+            jnp.asarray(any_pending), need_seal, jnp.bool_(False),
+            tombs_full, cold_spill=snaps_full, cold_full=cold_full,
+            cold_miss=cold_miss)
     return pack_round_flags(jnp.asarray(any_pending), need_seal,
                             snaps_full, tombs_full)
 
@@ -280,17 +330,31 @@ def make_dist_query(dcfg: DistConfig, mesh: Mesh, k: int,
                     with_drop_count: bool = False):
     """Jitted distributed query: (Q_global, d) -> ids/dists (Q_global, k).
 
-    Queries shard over the batch axes; every model shard probes only
-    the trees and sealed segments it owns, candidates route to their
-    murmur owner for the vector lookup + exact rank, and the (id, dist)
-    partials ``all_gather`` so each chip keeps the deduped global
-    top-k.  Tombstoned ids are filtered exactly like the single-chip
-    read path (sealed copies of deleted ids must not resurface).
+    Each chip hashes only its contiguous block of query rows (the full
+    key table reassembles with one integer ``all_gather`` — bit-exact —
+    for the sealed-segment probe), then (row, table) probe requests
+    route to the tree-owner shard with the same ``all_to_all`` + ack
+    machinery as the write paths: every chip descends only the trees it
+    owns, so per-chip probe work drops ~``n_model``-fold instead of
+    being replicated.  Candidates route to their murmur owner for the
+    vector lookup + exact rank, and the (id, dist) partials
+    ``all_gather`` so each chip keeps the deduped global top-k.
+    Tombstoned ids are filtered exactly like the single-chip read path
+    (sealed copies of deleted ids must not resurface).
 
     ``with_drop_count`` adds a third output: a replicated i32 scalar
     counting candidates dropped by owner-mailbox skew overflow (queries
     have no retry round) — the stream backend accumulates it on device
     and surfaces it through ``stats()``.
+
+    With a cold tier (``cfg.cold_enabled``) each shard also probes its
+    *own* mixed-table cold routing table/cache against the full key
+    table (shard-local Bloom route — no cross-shard traffic), murmur
+    owners extend the exact lookup through their cold MainTable cache,
+    and candidates resolved to a staging slot rank straight out of the
+    shard's staging arena.  Four per-shard (1, C) wanted/missing masks
+    and the psum'd (10,) cold-info vector append to the outputs, riding
+    the round's single result pickup exactly like the single-chip path.
     """
     cfg = dcfg.pfo
     mdl = dcfg.model_axis
@@ -305,18 +369,49 @@ def make_dist_query(dcfg: DistConfig, mesh: Mesh, k: int,
     def local_fn(state: PFOState, qvecs: jax.Array):
         me = jax.lax.axis_index(mdl)
         ql = qvecs.shape[0]
-        h = kops.lsh_hash(qvecs, state.proj["table_proj"], cfg.M)   # (q, L)
-        region = region_ids(h, state.proj["part_proj"], cfg)
+        # --- hash once: each chip hashes only its block of rows -------
+        # The full (ql, L) key table reassembles with one integer
+        # all_gather (bit-exact transport) for the sealed probe below.
+        per = -(-ql // S)
+        qpad = jnp.pad(qvecs, ((0, S * per - ql), (0, 0)))
+        qblk = jax.lax.dynamic_slice_in_dim(qpad, me * per, per, axis=0)
+        hb = kops.lsh_hash(qblk, state.proj["table_proj"], cfg.M)  # (per, L)
+        regb = region_ids(hb, state.proj["part_proj"], cfg)
         off = jnp.arange(cfg.L, dtype=jnp.int32)[None] * cfg.n_trees
-        gtree = region + off
+        h = jax.lax.all_gather(hb, mdl, tiled=True)[:ql]           # (ql, L)
 
-        # --- probe owned hot trees (queries replicated over model) ---
-        flat_t = gtree.reshape(-1)
-        flat_h = h.reshape(-1)
-        mine = (flat_t >= me * tps) & (flat_t < (me + 1) * tps)
-        local_t = jnp.where(mine, flat_t - me * tps, 0)
-        ids, _, _ = forest_query(state.lsh_forest, local_t, flat_h, tcfg)
-        hot = jnp.where(mine[:, None], ids, -1).reshape(ql, -1)
+        # --- route (row, table) probes to the tree-owner shard -------
+        # Every row has exactly one owner per table, so the global
+        # probe multiset a chip receives equals the rows the old
+        # replicated descent kept under its ownership mask — routing
+        # changes who computes, not what is computed.
+        gtb = (regb + off).reshape(-1)
+        rowb = me * per + jnp.arange(per, dtype=jnp.int32)
+        qrow = jnp.repeat(rowb, cfg.L)
+        psend = jnp.repeat(rowb < ql, cfg.L)
+        pdest = jnp.where(psend, gtb // tps, -1)
+        ppay = jnp.stack([hb.reshape(-1).astype(jnp.int32), qrow,
+                          gtb % tps], axis=1)
+        # per-owner capacity: 2x the even spread + per-table slack,
+        # capped at the sender total (skew beyond it DROPS probes —
+        # counted below, asserted zero by the differential tests)
+        Kp = min(per * cfg.L, 2 * ((per * cfg.L) // S) + 2 * cfg.L)
+        precv, p_ovf, _ = _route_acked(ppay, pdest, S, Kp, mdl,
+                                       marker_col=1)
+        rq_p = precv[:, 1]
+        pvalid = rq_p >= 0
+        rh_p = precv[:, 0].astype(jnp.uint32)
+        rt_p = jnp.where(pvalid, precv[:, 2], 0)
+        ids_p, _, _ = forest_query(state.lsh_forest, rt_p, rh_p, tcfg)
+
+        # regroup the descents by query row (capacity L is exact: a row
+        # sends one probe per table, so this hop can never overflow)
+        rbox_p, _ = dispatch_to_trees(jnp.where(pvalid, rq_p, -1), ql,
+                                      cfg.L)
+        (hot_g,) = gather_mailbox(rbox_p,
+                                  jnp.where(pvalid[:, None], ids_p, -1))
+        hot = jnp.where((rbox_p >= 0)[:, :, None], hot_g,
+                        -1).reshape(ql, -1)
 
         # --- probe local sealed segments ---------------------------
         # a chip's segments mix entries from every LSH table (one set
@@ -331,8 +426,17 @@ def make_dist_query(dcfg: DistConfig, mesh: Mesh, k: int,
         sealed = jnp.concatenate(scands, axis=1)
         cand = jnp.concatenate([hot, sealed], axis=1)
 
+        # --- probe the shard's cold routing table / segment cache ----
+        # (same mixed-table layout as the ring: one chain per shard,
+        # table id in vals — the Bloom route stays shard-local)
+        if cfg.cold_enabled:
+            cold_l = jax.tree.map(lambda a: a[0], state.cold)
+            ccand, wl, ml, lsh_probed, lsh_fp = \
+                coldtier.cold_probe_lsh_mixed(cold_l, h, snap_cfg)
+            cand = jnp.concatenate([cand, ccand], axis=1)
+
         # --- tombstone filter, dedupe, truncate to per-shard budget --
-        dead = jnp.isin(cand, state.tombstones) & (cand >= 0)
+        dead = member_sorted(cand, state.tombstones) & (cand >= 0)
         skey = jnp.where((cand >= 0) & ~dead, cand, INT_MAX)
         skey = jnp.sort(skey, axis=1)
         dup = jnp.concatenate([jnp.zeros((ql, 1), bool),
@@ -354,7 +458,8 @@ def make_dist_query(dcfg: DistConfig, mesh: Mesh, k: int,
         # silently degrading recall.
         K = 2 * (flat_c.shape[0] // S) + budget
         recv, send_ovf, _ = _route_acked(payload, owner, S, K, mdl)
-        dropped = jax.lax.psum(jnp.sum(send_ovf.astype(jnp.int32)), mdl)
+        dropped = jax.lax.psum(jnp.sum(send_ovf.astype(jnp.int32))
+                               + jnp.sum(p_ovf.astype(jnp.int32)), mdl)
         rid = recv[:, 0]
         rq = jnp.clip(recv[:, 1], 0, ql - 1)
 
@@ -367,9 +472,32 @@ def make_dist_query(dcfg: DistConfig, mesh: Mesh, k: int,
             lambda hh, ii: snap_mod.lookup_exact(msnaps, hh, ii,
                                                  msnap_cfg))(rh, rid)
         slot = jnp.where(found, slot, jnp.where(sfound, sval, -1))
-        ok = (rid >= 0) & (slot >= 0)
         store_l = jax.tree.map(lambda a: a[0], state.store)
-        vecs = dense_read(store_l, jnp.where(ok, slot, 0))
+        if cfg.cold_enabled:
+            # extend the exact lookup through the shard's cold cache
+            # (hot forest, then ring, then cold — newest-first);  a
+            # staging-slot hit ranks out of the shard's payload arena
+            cold_ids = jnp.where(found | sfound, -1, rid)
+            cval, cfound, row_missing, wm, mm, m_probed, m_fp = \
+                coldtier.cold_lookup_main(cold_l, rh, cold_ids,
+                                          msnap_cfg)
+            cfound = cfound & ~row_missing
+            slot = jnp.where(slot >= 0, slot,
+                             jnp.where(cfound, cval, -1))
+            ok = (rid >= 0) & (slot >= 0)
+            arena = cold_l.main_cache.vecs
+            vecs = dense_read_tiered(store_l,
+                                     arena.reshape(-1, arena.shape[-1]),
+                                     jnp.where(ok, slot, 0))
+            staged = jnp.sum(
+                (ok & (slot >= msnap_cfg.store_capacity))
+                .astype(jnp.int32))
+            info = jax.lax.psum(coldtier.pack_cold_info(
+                wl, ml, lsh_probed, lsh_fp, wm, mm, m_probed, m_fp,
+                staged, jnp.sum(ok.astype(jnp.int32))), mdl)
+        else:
+            ok = (rid >= 0) & (slot >= 0)
+            vecs = dense_read(store_l, jnp.where(ok, slot, 0))
         # exact rank inline: each routed row pairs ONE candidate with
         # its query — the fused rank kernels want wide per-query
         # candidate blocks and pad a C=1 row out to a full block
@@ -408,12 +536,20 @@ def make_dist_query(dcfg: DistConfig, mesh: Mesh, k: int,
         pd_r = jnp.where(rbox >= 0, pd_g, jnp.inf)
         out_ids, out_d = jax.vmap(
             lambda ii, dd: _dedup_topk(ii, dd, k))(pid_r, pd_r)
+        out = (out_ids, out_d)
         if with_drop_count:
-            return out_ids, out_d, dropped
-        return out_ids, out_d
+            out = out + (dropped,)
+        if cfg.cold_enabled:
+            # per-shard (1, C) masks stack to (S, C) host-side — the
+            # backend drives each shard's ColdManager fetch from its row
+            out = out + (wl[None], ml[None], wm[None], mm[None], info)
+        return out
 
     bspec = _batch_spec(dcfg)
-    out_specs = (bspec, bspec, P()) if with_drop_count else (bspec, bspec)
+    mdl_p = P(mdl)
+    out_specs = (bspec, bspec) + ((P(),) if with_drop_count else ())
+    if cfg.cold_enabled:
+        out_specs = out_specs + (mdl_p, mdl_p, mdl_p, mdl_p, P())
     fn = compat.shard_map(local_fn, mesh=mesh,
                           in_specs=(state_pspecs(dcfg), bspec),
                           out_specs=out_specs, check_vma=False)
@@ -459,8 +595,8 @@ def make_dist_insert_round(dcfg: DistConfig, mesh: Mesh, *,
 
         # re-inserting a previously-deleted id revokes its tombstone
         # (computed identically on every shard: batch is replicated)
-        revived = jnp.isin(state.tombstones,
-                           jnp.where(main_active, ids, -1))
+        revived = member_sorted(state.tombstones,
+                                jnp.where(main_active, ids, -1))
         state = state._replace(
             tombstones=jnp.where(revived, -1, state.tombstones))
 
@@ -577,6 +713,13 @@ def make_dist_delete_round(dcfg: DistConfig, mesh: Mesh, *,
     (same order, same overflow behaviour as the single-chip
     ``delete_step``, including the retry-after-merge protocol for
     tombstone-buffer overflow).
+
+    With a cold tier the owner's lookup extends through its cold cache
+    (fn returns two extra (S, C) wanted/missing mask outputs): a row
+    resolving only through a *non-resident* cold segment stays pending,
+    the flag word carries the pmax-combined COLD_MISS bit, and the host
+    fetches the missing segments into the owning shard's cache before
+    the retry round — steady-state rounds still read one scalar.
     """
     cfg = dcfg.pfo
     mdl = dcfg.model_axis
@@ -598,12 +741,27 @@ def make_dist_delete_round(dcfg: DistConfig, mesh: Mesh, *,
             lambda hh, ii: snap_mod.lookup_exact(msnaps, hh, ii,
                                                  snap_cfg))(mh, ids)
         slot = jnp.where(found, slot, jnp.where(sfound, sval, -1))
-        ok = own & (found | sfound) & (slot >= 0)
+        store_l = jax.tree.map(lambda a: a[0], state.store)
+        if cfg.cold_enabled:
+            cold_l = jax.tree.map(lambda a: a[0], state.cold)
+            cold_ids = jnp.where(own & ~(found | sfound), ids, -1)
+            cval, cfound, row_missing, wm, mm, _, _ = \
+                coldtier.cold_lookup_main(cold_l, mh, cold_ids, snap_cfg)
+            cfound = cfound & ~row_missing
+            slot = jnp.where(slot >= 0, slot,
+                             jnp.where(cfound, cval, -1))
+            ok = own & (found | sfound | cfound) & (slot >= 0)
+            unresolved = own & ~(found | sfound | cfound) & row_missing
+            arena = cold_l.main_cache.vecs
+            vecs = dense_read_tiered(store_l,
+                                     arena.reshape(-1, arena.shape[-1]),
+                                     jnp.where(ok, slot, 0))
+        else:
+            ok = own & (found | sfound) & (slot >= 0)
+            vecs = dense_read(store_l, jnp.where(ok, slot, 0))
         ok_all = _psum_bool(ok, mdl)
 
         # re-derive LSH keys from the stored vector (owner-side)
-        store_l = jax.tree.map(lambda a: a[0], state.store)
-        vecs = dense_read(store_l, jnp.where(ok, slot, 0))
         h = kops.lsh_hash(vecs, state.proj["table_proj"], cfg.M)
         region = region_ids(h, state.proj["part_proj"], cfg)
         off = jnp.arange(cfg.L, dtype=jnp.int32)[None] * cfg.n_trees
@@ -636,7 +794,15 @@ def make_dist_delete_round(dcfg: DistConfig, mesh: Mesh, *,
         main_forest = forest_delete_dispatched(state.main_forest, mh_g,
                                                mid_g, mcfg)
         m_row = _psum_bool(ok & m_ovf, mdl)
-        store_l = dense_free(store_l, slot, ok)
+        if cfg.cold_enabled:
+            # staging-slot rows were freed when their segment spilled —
+            # freeing the out-of-range encoded slot would push garbage
+            # onto the free stack
+            hot_ok = ok & (slot < snap_cfg.store_capacity)
+            store_l = dense_free(store_l, jnp.where(hot_ok, slot, 0),
+                                 hot_ok)
+        else:
+            store_l = dense_free(store_l, slot, ok)
         store = jax.tree.map(lambda a: a[None, ...], store_l)
 
         # tombstones (replicated; identical append on every shard —
@@ -657,14 +823,24 @@ def make_dist_delete_round(dcfg: DistConfig, mesh: Mesh, *,
                                tombstones=tombs, n_tombstones=n_t)
         tomb_ovf = ok_all & ~fits
         pending = (ok_all & (l_row | m_row)) | tomb_ovf
+        if cfg.cold_enabled:
+            pending = pending | _psum_bool(unresolved, mdl)
+            cold_miss = jax.lax.psum(jnp.any(mm).astype(jnp.int32),
+                                     mdl) > 0
+            flags = _dist_round_flags(state, dcfg, flags_main,
+                                      flags_lsh, jnp.any(pending), mdl,
+                                      cold_miss=cold_miss)
+            return state, pending, flags, wm[None], mm[None]
         flags = _dist_round_flags(state, dcfg, flags_main, flags_lsh,
                                   jnp.any(pending), mdl)
         return state, pending, flags
 
+    out_specs = (state_pspecs(dcfg), P(), P())
+    if cfg.cold_enabled:
+        out_specs = out_specs + (P(mdl), P(mdl))
     fn = compat.shard_map(local_fn, mesh=mesh,
                           in_specs=(state_pspecs(dcfg), P(), P()),
-                          out_specs=(state_pspecs(dcfg), P(), P()),
-                          check_vma=False)
+                          out_specs=out_specs, check_vma=False)
     return jax.jit(fn)
 
 
@@ -744,6 +920,105 @@ def make_dist_merge(dcfg: DistConfig, mesh: Mesh):
                           in_specs=(state_pspecs(dcfg),),
                           out_specs=state_pspecs(dcfg), check_vma=False)
     return jax.jit(fn)
+
+
+def make_dist_spill(dcfg: DistConfig, mesh: Mesh):
+    """Jitted distributed spill epoch: every shard pops the oldest
+    segment of its mixed LSH ring and of its MainTable ring, folds the
+    popped metadata into its own cold routing table, gathers the popped
+    MainTable payloads out of its dense store and frees the spilled
+    slots — entirely shard-local (lockstep rings mean every shard
+    spills in the same epoch; no cross-shard synchronization).
+
+    Returns ``(state', popped_lsh, popped_main)`` with the popped
+    arrays stacked (S, ...) — the host reads them back once and
+    persists each shard's segments through that shard's
+    ``ColdManager.adopt_spill``.
+    """
+    cfg = dcfg.pfo
+    snap_cfg = shard_snap_cfg(dcfg)
+    msnap_cfg = shard_main_snap_cfg(dcfg)
+    mcfg = main_tree_config(cfg)
+    mtps = dcfg.main_trees_per_shard
+    mdl = dcfg.model_axis
+
+    def local_fn(state: PFOState):
+        lsh2, main2, cold2, store2, pl, pm = coldtier.spill_device(
+            state.lsh_snaps,
+            jax.tree.map(lambda a: a[0], state.main_snaps),
+            jax.tree.map(lambda a: a[0], state.cold),
+            jax.tree.map(lambda a: a[0], state.store),
+            state.main_forest, state.tombstones,
+            snap_cfg, msnap_cfg, mcfg, tree_mod=mtps)
+        state = state._replace(
+            lsh_snaps=lsh2,
+            main_snaps=jax.tree.map(lambda a: a[None, ...], main2),
+            cold=jax.tree.map(lambda a: a[None, ...], cold2),
+            store=jax.tree.map(lambda a: a[None, ...], store2))
+        return state, pl, jax.tree.map(lambda a: a[None, ...], pm)
+
+    fn = compat.shard_map(local_fn, mesh=mesh,
+                          in_specs=(state_pspecs(dcfg),),
+                          out_specs=(state_pspecs(dcfg), P(mdl), P(mdl)),
+                          check_vma=False)
+    return jax.jit(fn)
+
+
+def make_dist_ring_drain(dcfg: DistConfig, mesh: Mesh):
+    """Jitted device half of the distributed cold merge: every shard
+    gathers the vector payloads of the ring entries it holds the
+    current version of and frees those store slots (the entries leave
+    the device for the shard's host fold).  Returns
+    ``(state', payloads (S, R, cap, d), cur (S, R, cap))``."""
+    cfg = dcfg.pfo
+    msnap_cfg = shard_main_snap_cfg(dcfg)
+    mcfg = main_tree_config(cfg)
+    mtps = dcfg.main_trees_per_shard
+    mdl = dcfg.model_axis
+
+    def local_fn(state: PFOState):
+        payload, cur, store2 = coldtier.ring_payload_drain(
+            jax.tree.map(lambda a: a[0], state.main_snaps),
+            jax.tree.map(lambda a: a[0], state.store),
+            state.main_forest, state.tombstones, msnap_cfg, mcfg,
+            tree_mod=mtps)
+        state = state._replace(
+            store=jax.tree.map(lambda a: a[None, ...], store2))
+        return state, payload[None], cur[None]
+
+    fn = compat.shard_map(local_fn, mesh=mesh,
+                          in_specs=(state_pspecs(dcfg),),
+                          out_specs=(state_pspecs(dcfg), P(mdl), P(mdl)),
+                          check_vma=False)
+    return jax.jit(fn)
+
+
+def dist_put_cold(dcfg: DistConfig, mesh: Mesh, cold_states):
+    """Stack per-shard :class:`coldtier.ColdState` values (one per
+    shard, in shard order) into the distributed state's (S, ...) cold
+    leaves with their NamedShardings — the install half of a
+    distributed cold merge/compaction."""
+    mdl = dcfg.model_axis
+    cold = jax.tree.map(lambda *xs: jnp.stack(xs), *cold_states)
+    return jax.tree.map(
+        lambda x: jax.device_put(x, NamedSharding(mesh, P(mdl))), cold)
+
+
+def dist_fresh_rings(dcfg: DistConfig, mesh: Mesh):
+    """Fresh (empty) per-shard snapshot rings with their shardings —
+    the ring reset of a distributed cold merge."""
+    mdl = dcfg.model_axis
+    snap_cfg = shard_snap_cfg(dcfg)
+    msnap_cfg = shard_main_snap_cfg(dcfg)
+    mk = jax.jit(lambda: (
+        jax.vmap(lambda _: snap_mod.init_snapshots(snap_cfg))(
+            jnp.arange(dcfg.n_model)),
+        jax.vmap(lambda _: snap_mod.init_snapshots(msnap_cfg))(
+            jnp.arange(dcfg.n_model))))
+    lsnaps, msnaps = mk()
+    put = functools.partial(jax.tree.map, lambda x: jax.device_put(
+        x, NamedSharding(mesh, P(mdl))))
+    return put(lsnaps), put(msnaps)
 
 
 def make_dist_round_flags(dcfg: DistConfig, mesh: Mesh, flags_main: int,

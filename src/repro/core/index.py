@@ -43,6 +43,7 @@ from .hash_tree import (TreeConfig, TreeState, forest_delete_dispatched,
                         forest_headroom, forest_insert_dispatched,
                         forest_lookup, forest_query, init_forest)
 from .lsh import main_table_keys, make_projections, region_ids
+from .membership import member_sorted
 from .store import (DenseStore, dense_alloc, dense_free, dense_init,
                     dense_read, dense_read_tiered)
 
@@ -232,7 +233,8 @@ def insert_step(state: PFOState, ids: jax.Array, vecs: jax.Array,
 
     # re-inserting a previously-deleted id revokes its tombstone (the
     # fresh hot MainTable entry shadows any stale sealed copies)
-    revived = jnp.isin(state.tombstones, jnp.where(main_active, ids, -1))
+    revived = member_sorted(state.tombstones,
+                            jnp.where(main_active, ids, -1))
     state = state._replace(
         tombstones=jnp.where(revived, -1, state.tombstones))
 
@@ -350,7 +352,7 @@ def _dedupe_candidates(cand: jax.Array, tombstones: jax.Array,
     """Tombstone filter + dedupe + truncate to the ranking budget:
     (Q, C_any) -> (Q, max_candidates_total), -1 pad."""
     q = cand.shape[0]
-    dead = jnp.isin(cand, tombstones) & (cand >= 0)
+    dead = member_sorted(cand, tombstones) & (cand >= 0)
     skey = jnp.where((cand >= 0) & ~dead, cand, INT_MAX)
     skey = jnp.sort(skey, axis=1)
     dup = jnp.concatenate(

@@ -1,0 +1,30 @@
+"""Memory-lean membership tests shared across the read/write paths.
+
+``jnp.isin(x, table)`` materializes the full (n, m) broadcast compare
+before reducing over the table axis.  The buffers these paths test
+against — the tombstone buffer, the ring id set, a delete batch — reach
+10^5..10^6 rows at production configs, so that square is tens to
+hundreds of GB of intermediate.  Sort + searchsorted gives the same
+answer in O(n + m) memory, and every membership test in the hot
+query/insert/delete/merge pipelines routes through here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def member_sorted(x: jax.Array, table: jax.Array) -> jax.Array:
+    """``jnp.isin(x, table)`` in O(n + m) memory.
+
+    x: any shape.  table: any shape (flattened before the sort).
+    Returns a bool array shaped like ``x`` marking elements present in
+    ``table``.  A zero-size table matches nothing (resolved statically
+    — no trace branch, and no empty-gather edge case).
+    """
+    t = table.reshape(-1)
+    if t.shape[0] == 0:
+        return jnp.zeros(x.shape, bool)
+    t = jnp.sort(t)
+    pos = jnp.clip(jnp.searchsorted(t, x), 0, t.shape[0] - 1)
+    return t[pos] == x

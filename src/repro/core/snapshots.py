@@ -30,6 +30,7 @@ import jax.numpy as jnp
 
 from . import bloom as bloom_mod
 from .config import PFOConfig
+from .membership import member_sorted
 
 
 class SnapshotSet(NamedTuple):
@@ -246,7 +247,7 @@ def merge(snaps: SnapshotSet, cfg: PFOConfig,
     rank = seg_rank.reshape(-1)
     live = ids >= 0
     if deleted_ids is not None and deleted_ids.shape[0] > 0:
-        dead = jnp.isin(ids, deleted_ids)
+        dead = member_sorted(ids, deleted_ids)
         live = live & ~dead
 
     # newest (highest stamp) version of an id wins

@@ -106,10 +106,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dispatch import (FLAG_ANY_PENDING, FLAG_NAMES,
-                                 FLAG_NEED_SEAL, FLAG_SNAPS_FULL,
-                                 FLAG_TOMBS_FULL, client_ticket,
-                                 merge_client_queues)
+from repro.core.dispatch import (FLAG_ANY_PENDING, FLAG_COLD_FULL,
+                                 FLAG_COLD_MISS, FLAG_COLD_SPILL,
+                                 FLAG_NAMES, FLAG_NEED_SEAL,
+                                 FLAG_SNAPS_FULL, FLAG_TOMBS_FULL,
+                                 client_ticket, merge_client_queues)
 from repro.core.index import (PFOIndex, delete_step, delete_step_cold,
                               init_state, insert_step, merge_step,
                               query_step, query_step_cold, round_flags,
@@ -357,7 +358,8 @@ class DistBackend:
     #: process-global jit cache the single-chip steps get for free)
     _FN_CACHE: dict = {}
 
-    def __init__(self, dcfg, mesh, seed: int = 0):
+    def __init__(self, dcfg, mesh, seed: int = 0,
+                 cold_dir: str | None = None):
         from repro.core import distributed as dist
 
         self._dist = dist
@@ -385,6 +387,32 @@ class DistBackend:
         self._merge_fn = self._cached(
             ("merge",), lambda: dist.make_dist_merge(dcfg, mesh))
         self._flags_fn = None
+        # per-shard cold tier: each shard owns one mixed-table segment
+        # chain (its own ColdManager, SegmentStore subdir, routing table
+        # and staging arena) — spill/merge/compaction stay shard-local
+        self.cold_mgrs = None
+        self._delete_miss = None
+        if self.cfg.cold_enabled:
+            import os
+            from repro.core.coldtier import ColdManager
+            from repro.core.index import main_tree_config
+
+            def _sync():
+                self.sync_count += 1
+
+            self.cold_mgrs = [
+                ColdManager(dist.shard_cold_cfg(dcfg),
+                            dist.shard_snap_cfg(dcfg),
+                            dist.shard_main_snap_cfg(dcfg),
+                            main_tree_config(self.cfg),
+                            root=None if cold_dir is None
+                            else os.path.join(cold_dir, f"shard{s}"),
+                            on_sync=_sync, mixed_lsh=True)
+                for s in range(dcfg.n_model)]
+            self._spill_fn = self._cached(
+                ("spill",), lambda: dist.make_dist_spill(dcfg, mesh))
+            self._drain_fn = self._cached(
+                ("drain",), lambda: dist.make_dist_ring_drain(dcfg, mesh))
 
     #: FIFO bound so a process cycling meshes/configs cannot pin every
     #: compiled program (and its Mesh key) forever
@@ -455,6 +483,17 @@ class DistBackend:
         g("dist.shard_imbalance").set(occ["imbalance"])
         for s, v in enumerate(occ["items_per_shard"]):
             g("dist.items_hot", shard=s).set(v)
+        if self.cold_mgrs is not None:
+            cs = self.cold_stats()
+            g("cold.segments").set(cs["cold_segments"])
+            g("cold.spills").set(cs["segments_spilled"])
+            g("cold.fetches").set(cs["fetches"])
+            g("cold.cache_hit_rate").set(cs["cache_hit_rate"])
+            g("cold.vec_staging_hit_rate").set(
+                cs["vec_staging_hit_rate"])
+            g("cold.merges").set(cs["cold_merges"])
+            for s, mgr in enumerate(self.cold_mgrs):
+                g("cold.segments", shard=s).set(mgr.n_cold)
 
     def _epoch(self, name: str, fn, *args):
         t0 = time.perf_counter()
@@ -466,16 +505,131 @@ class DistBackend:
 
     def maintain(self, flags: int) -> None:
         if flags & FLAG_NEED_SEAL:
-            if flags & FLAG_SNAPS_FULL:
+            if self.cold_mgrs is not None and flags & FLAG_COLD_SPILL:
+                # capacity relief with a cold tier: spill, never merge
+                # (lockstep rings — every shard spills this epoch)
+                self._epoch("spill", self._spill)
+                self.maintenance_log.append("spill")
+            elif flags & FLAG_SNAPS_FULL:
                 self.state = self._epoch("merge", self._merge_fn, self.state)
                 self.maintenance_log.append("merge")
             self.state = self._epoch("seal", self._seal_fn, self.state)
             self.maintenance_log.append("seal")
         if flags & FLAG_TOMBS_FULL:
-            self.state = self._epoch("merge", self._merge_fn, self.state)
+            if self.cold_mgrs is not None:
+                self._epoch("merge", self._merge_with_cold)
+            else:
+                self.state = self._epoch("merge", self._merge_fn, self.state)
             self.maintenance_log.append("merge")
+        if self.cold_mgrs is not None and flags & FLAG_COLD_FULL:
+            # proactive shrink at the watermark, synchronous per shard
+            # (folds are host-only numpy; shards in futile backoff skip)
+            self._compact()
         if flags & (FLAG_NEED_SEAL | FLAG_TOMBS_FULL):
             self._flags = None       # state changed; carried word stale
+
+    # -- cold epochs (per-shard host halves) ----------------------------
+    def _spill(self) -> None:
+        """Distributed spill epoch: one device program pops every
+        shard's oldest ring segments, the host persists each shard's
+        popped arrays through that shard's ColdManager."""
+        if any(m.n_cold >= self.cfg.cold_segments for m in self.cold_mgrs):
+            self._compact(only_full=True)
+        st, pl, pm = self._spill_fn(self.state)
+        self.sync_count += 1
+        pl_h, pm_h = jax.device_get((pl, pm))
+        for s, mgr in enumerate(self.cold_mgrs):
+            # pl rows keep a leading L==1 table axis (the mixed chain);
+            # pm rows are flat — the layout adopt_spill expects
+            mgr.adopt_spill({k2: v[s:s + 1] for k2, v in pl_h.items()},
+                            {k2: v[s] for k2, v in pm_h.items()})
+        self.state = st
+        self._flags = None
+
+    def _merge_with_cold(self) -> None:
+        """Distributed cold merge: drain every shard's ring payloads on
+        device, read the rings back once, fold ring + cold per shard
+        with the drained tombstones (host numpy, shard-local), install
+        the fresh layouts and reset rings + tombstones."""
+        self.sync_count += 1
+        tombs = np.asarray(jax.device_get(self.state.tombstones))
+        dead = tombs[tombs >= 0]
+        st, pay, _cur = self._drain_fn(self.state)
+        self.sync_count += 1
+        ls, ms, pay_h = jax.device_get((st.lsh_snaps, st.main_snaps, pay))
+        dim = self.cfg.dim
+        cold_states = []
+        for s, mgr in enumerate(self.cold_mgrs):
+            # shard s's ring: stacked leaves are (S, R, cap...), one
+            # mixed chain per shard (table id in vals)
+            lk, li, lv, lst = (ls.keys[s], ls.ids[s], ls.vals[s],
+                               ls.stamps[s])
+            n_ring = int(ls.n_snaps[s])
+            if n_ring:
+                ring_l = (np.concatenate(lk[:n_ring]),
+                          np.concatenate(li[:n_ring]),
+                          np.concatenate(lv[:n_ring]),
+                          np.concatenate([np.full(lk[r].shape, lst[r],
+                                                  np.int32)
+                                          for r in range(n_ring)]))
+            else:
+                z = np.zeros((0,), np.int32)
+                ring_l = (z.astype(np.uint32), z, z, z)
+            n_ring_m = int(ms.n_snaps[s])
+            if n_ring_m:
+                ring_m = (np.concatenate(ms.keys[s][:n_ring_m]),
+                          np.concatenate(ms.ids[s][:n_ring_m]),
+                          np.concatenate(ms.vals[s][:n_ring_m]),
+                          np.concatenate([np.full(ms.keys[s][r].shape,
+                                                  ms.stamps[s][r], np.int32)
+                                          for r in range(n_ring_m)]),
+                          np.concatenate(pay_h[s][:n_ring_m]))
+            else:
+                z = np.zeros((0,), np.int32)
+                ring_m = (z.astype(np.uint32), z, z, z,
+                          np.zeros((0, dim), np.float32))
+            mgr._discard_worker()
+            fold = mgr._fold_all(dead, ring_extra=[ring_l],
+                                 ring_extra_main=ring_m)
+            cold_states.append(
+                mgr.routed_cold_state(mgr.install_layout(fold)))
+            mgr.counters["cold_merges"] += 1
+        dist = self._dist
+        lsnaps, msnaps = dist.dist_fresh_rings(self.dcfg, self.mesh)
+        self.state = st._replace(
+            lsh_snaps=lsnaps, main_snaps=msnaps,
+            cold=dist.dist_put_cold(self.dcfg, self.mesh, cold_states),
+            tombstones=jnp.full_like(st.tombstones, -1),
+            n_tombstones=jnp.int32(0))
+
+    def _compact(self, only_full: bool = False) -> None:
+        """Synchronous per-shard cold compaction.  ``only_full``
+        restricts the fold to shards whose routing table is at hard
+        capacity (the pre-spill guard); otherwise every shard not in
+        futile backoff folds.  Shards that do not fold keep their
+        current device cold state (cache included)."""
+        ran = False
+        cold_states = []
+        for s, mgr in enumerate(self.cold_mgrs):
+            full = mgr.n_cold >= self.cfg.cold_segments
+            skip = (not full) if only_full \
+                else (mgr._gen == mgr._futile_gen)
+            if skip:
+                cold_states.append(
+                    jax.tree.map(lambda a: a[s], self.state.cold))
+                continue
+            fold = mgr._fold_all(np.zeros((0,), np.int32))
+            cold_states.append(mgr.routed_cold_state(
+                mgr.install_layout(fold, mark_futile=True)))
+            mgr.counters["compactions"] += 1
+            ran = True
+        if not ran:
+            return
+        self.state = self.state._replace(
+            cold=self._dist.dist_put_cold(self.dcfg, self.mesh,
+                                          cold_states))
+        self.maintenance_log.append("cold_compact")
+        self._flags = None
 
     # -- rounds ---------------------------------------------------------
     def _insert_fn(self, bucket: int):
@@ -508,20 +662,104 @@ class DistBackend:
                 ("query", k),
                 lambda: self._dist.make_dist_query(self.dcfg, self.mesh, k,
                                                    with_drop_count=True))
-        ids, dists, dropped = self._qry[k](self.state, qvecs)
-        self._query_drops = self._query_drops + dropped   # stays on device
-        if overlap is not None:
-            overlap()                 # dispatch in flight; pickup later
+        fn = self._qry[k]
+        if self.cold_mgrs is None:
+            ids, dists, dropped = fn(self.state, qvecs)
+            self._query_drops = self._query_drops + dropped  # on device
+            if overlap is not None:
+                overlap()             # dispatch in flight; pickup later
+            return ids, dists
+        # cold fetch loop (mirrors PFOIndex._query_cold): the per-shard
+        # wanted/missing masks ride the round's single pickup; only a
+        # miss round fetches (into the owning shard's cache) and
+        # re-probes.  Aggregated (psum'd) round info lands on shard 0's
+        # manager — cold_stats() reads the cluster totals from there.
+        mgr0 = self.cold_mgrs[0]
+        for attempt in range(self.cfg.cold_fetch_rounds + 1):
+            out = fn(self.state, qvecs)
+            if attempt == 0 and overlap is not None:
+                overlap()            # first dispatch is in flight
+            ids, dists, dropped, wl, ml, wm, mm, info = jax.device_get(out)
+            self._query_drops = self._query_drops + int(dropped)
+            mgr0.record_query_round(info)
+            if not (ml.any() or mm.any()):
+                break
+            if attempt == self.cfg.cold_fetch_rounds:
+                mgr0.counters["incomplete_query_rounds"] += 1
+                break
+            before = sum(m.counters["fetches"] for m in self.cold_mgrs)
+            with self.obs.span("cold_fetch", attempt=attempt):
+                self._fetch_shards(wl, ml, wm, mm)
+            if sum(m.counters["fetches"]
+                   for m in self.cold_mgrs) == before:
+                # every cache slot is wanted by this round on every
+                # missing shard: the miss set can never drain
+                mgr0.counters["incomplete_query_rounds"] += 1
+                break
         return ids, dists
+
+    def _fetch_shards(self, wl, ml, wm, mm) -> None:
+        """Fetch Bloom-matched non-resident segments shard by shard:
+        slice shard s's cold state out of the stacked leaves, run its
+        manager's fetch, scatter the result back.  Masks are (S, C)."""
+        cold = self.state.cold
+        for s, mgr in enumerate(self.cold_mgrs):
+            if not (ml[s].any() or mm[s].any()):
+                continue
+            shard = jax.tree.map(lambda a: a[s], cold)
+            shard = mgr.fetch_cold(shard, wl[s][None], ml[s][None],
+                                   wm[s], mm[s])
+            cold = jax.tree.map(lambda g, v: g.at[s].set(v), cold, shard)
+        self.state = self.state._replace(cold=cold)
 
     def insert_begin(self, bucket: int):
         return None                       # slots live at the owner shard
 
     def after_flags(self, flags: int) -> None:
-        """No cold tier on the distributed backend (see ROADMAP)."""
+        """COLD_MISS service: a delete round's MainTable probe matched a
+        non-resident cold segment on some shard — read the stashed
+        (S, C) masks (the only extra readback, and only on miss rounds)
+        and fetch into the owning shards before the retry round."""
+        if self.cold_mgrs is None or not flags & FLAG_COLD_MISS \
+                or self._delete_miss is None:
+            return
+        self.sync_count += 1
+        wm, mm = jax.device_get(self._delete_miss)
+        self._delete_miss = None
+        S, C = self.dcfg.n_model, self.cfg.cold_segments
+        zeros = np.zeros((S, C), bool)
+        before = sum(m.counters["fetches"] for m in self.cold_mgrs)
+        with self.obs.span("cold_fetch", path="delete"):
+            self._fetch_shards(zeros, zeros, np.asarray(wm),
+                               np.asarray(mm))
+        if np.any(mm) and sum(m.counters["fetches"]
+                              for m in self.cold_mgrs) == before:
+            raise RuntimeError(
+                f"delete cannot resolve: its Bloom route spans "
+                f"{int(np.sum(wm))} cold segments but cold_cache_slots="
+                f"{self.cfg.cold_cache_slots} cannot hold them at once; "
+                "raise PFOConfig.cold_cache_slots")
 
     def cold_stats(self) -> dict | None:
-        return None
+        if self.cold_mgrs is None:
+            return None
+        # query accounting (the psum'd info vectors) lives on shard 0's
+        # manager and is already cluster-total; structural counters
+        # (spills, fetches, segments, bytes) are per-shard and sum —
+        # shard 0's info-derived rates stay correct, and its structural
+        # shares just gain the other shards' zero-info contributions
+        stats = [m.stats() for m in self.cold_mgrs]
+        out = dict(stats[0])
+        for s in stats[1:]:
+            for k2 in ("cold_segments", "segments_spilled", "fetches",
+                       "fetch_rounds", "compactions", "cold_merges",
+                       "store_bytes_written", "vec_fetch_bytes",
+                       "vec_evictions", "vec_resident_pages"):
+                out[k2] += s[k2]
+        qr = max(self.cold_mgrs[0].counters["query_rounds"], 1)
+        out["fetches_per_query_round"] = round(out["fetches"] / qr, 4)
+        out["shards"] = len(self.cold_mgrs)
+        return out
 
     def insert_round(self, ids, vecs, carry, main_active, lsh_active,
                      bucket: int):
@@ -530,6 +768,11 @@ class DistBackend:
         return carry, ma, la, fw
 
     def delete_round(self, ids, active, bucket: int):
+        if self.cold_mgrs is not None:
+            self.state, pending, fw, wm, mm = self._delete_fn(bucket)(
+                self.state, ids, active)
+            self._delete_miss = (wm, mm)
+            return pending, fw
         self.state, pending, fw = self._delete_fn(bucket)(self.state, ids,
                                                           active)
         return pending, fw
@@ -559,12 +802,29 @@ class DistBackend:
             r = self._delete_fn(b)(self.state, ids, off)
             jax.block_until_ready(r[-1])
             if b <= qcap:
-                jax.block_until_ready(self.query_rows(vecs, default_k))
+                if default_k not in self._qry:
+                    self._qry[default_k] = self._cached(
+                        ("query", default_k),
+                        lambda: self._dist.make_dist_query(
+                            self.dcfg, self.mesh, default_k,
+                            with_drop_count=True))
+                # raw program, not query_rows: the cold path's fetch
+                # loop would count warmup rounds into the managers
+                jax.block_until_ready(
+                    self._qry[default_k](self.state, vecs)[:2])
         jax.block_until_ready(self._flags_fn(self.state))
         scratch = self._dist.dist_init_state(self.dcfg,
                                              jax.random.PRNGKey(0),
                                              self.mesh)
-        jax.block_until_ready(self._merge_fn(self._seal_fn(scratch)))
+        if self.cold_mgrs is not None:
+            # cold rings never merge on device (spill relieves capacity,
+            # TOMBS_FULL folds on host) — precompile spill + drain so
+            # the first real epoch pays no jit compile
+            sealed = self._seal_fn(scratch)
+            jax.block_until_ready(self._spill_fn(sealed)[1])
+            jax.block_until_ready(self._drain_fn(sealed)[1])
+        else:
+            jax.block_until_ready(self._merge_fn(self._seal_fn(scratch)))
 
     def stats(self) -> dict:
         st = self.state
@@ -1074,7 +1334,8 @@ class DistStreamEngine(StreamEngine):
     on host-platform virtual devices for tests/CI)."""
 
     def __init__(self, dcfg, mesh=None, scfg: StreamConfig | None = None,
-                 seed: int = 0, obs: Obs | None = None):
+                 seed: int = 0, obs: Obs | None = None,
+                 cold_dir: str | None = None):
         if mesh is None:
             from repro.sharding.policy import stream_mesh
             mesh = stream_mesh(dcfg.n_model)
@@ -1083,7 +1344,8 @@ class DistStreamEngine(StreamEngine):
                               for a in dcfg.batch_axes]))
         assert scfg.min_batch % n_data == 0, \
             "query buckets must divide across the batch axes"
-        super().__init__(DistBackend(dcfg, mesh, seed=seed), scfg, obs=obs)
+        super().__init__(DistBackend(dcfg, mesh, seed=seed,
+                                     cold_dir=cold_dir), scfg, obs=obs)
 
 
 # ======================================================================

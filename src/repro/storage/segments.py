@@ -52,6 +52,13 @@ class SegmentStore:
             os.makedirs(root, exist_ok=True)
         self._mem: dict[int, np.ndarray] = {}
         self._mem_vec: dict[int, np.ndarray] = {}
+        # one cached mmap view per segment/payload file: readers share
+        # it, and delete() closes it before unlinking — without this,
+        # every get() opened a fresh fd that outlived the file, so long
+        # compaction churn accumulated unlinked-but-open fds and the
+        # disk they pinned
+        self._views: dict[int, np.ndarray] = {}
+        self._vec_views: dict[int, np.ndarray] = {}
         self._meta: dict[int, dict] = {}   # gid -> {count, stamp[, vec_dim]}
         self._next_gid = 0
         self.bytes_written = 0
@@ -104,24 +111,45 @@ class SegmentStore:
         return gid
 
     def get(self, gid: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """(keys, ids, vals) views of a segment — mmap'd in file mode."""
+        """(keys, ids, vals) views of a segment — mmap'd in file mode.
+
+        The view is cached (segments are write-once, so it never goes
+        stale) and MUST NOT outlive the segment: ``delete`` closes it.
+        Every consumer copies what it keeps (``np.asarray`` /
+        ``np.ascontiguousarray``) before the next maintenance epoch.
+        """
         if self.root is None:
             rec = self._mem[gid]
         else:
-            rec = np.load(self.path(gid), mmap_mode="r")
+            rec = self._views.get(gid)
+            if rec is None:
+                rec = np.load(self.path(gid), mmap_mode="r")
+                self._views[gid] = rec
         return rec["key"], rec["id"], rec["val"]
 
     def get_payload(self, gid: int) -> np.ndarray | None:
-        """(cap, d) f32 payload view (mmap'd in file mode); None when
-        the segment carries no vector block."""
+        """(cap, d) f32 payload view (mmap'd, cached like ``get``);
+        None when the segment carries no vector block."""
         if "vec_dim" not in self._meta[gid]:
             return None
         if self.root is None:
             return self._mem_vec[gid]
-        return np.load(self.vec_path(gid), mmap_mode="r")
+        vec = self._vec_views.get(gid)
+        if vec is None:
+            vec = np.load(self.vec_path(gid), mmap_mode="r")
+            self._vec_views[gid] = vec
+        return vec
 
     def meta(self, gid: int) -> dict:
         return dict(self._meta[gid])
+
+    @staticmethod
+    def _close_view(view: np.ndarray | None) -> None:
+        """Release a cached mmap view's fd (np.load wraps the buffer in
+        an ``np.memmap`` whose ``_mmap`` holds it open)."""
+        mm = getattr(view, "_mmap", None)
+        if mm is not None:
+            mm.close()
 
     def delete(self, gid: int) -> None:
         meta = self._meta.pop(gid)
@@ -129,8 +157,10 @@ class SegmentStore:
             self._mem.pop(gid)
             self._mem_vec.pop(gid, None)
         else:
+            self._close_view(self._views.pop(gid, None))
             os.remove(self.path(gid))
             if "vec_dim" in meta:
+                self._close_view(self._vec_views.pop(gid, None))
                 os.remove(self.vec_path(gid))
 
     # -- checkpoint support --------------------------------------------

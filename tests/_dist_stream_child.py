@@ -108,6 +108,146 @@ def run_trace(ordering: str, n_ops: int, seed: int):
     }, deng
 
 
+def run_cold_trace():
+    """Cold-enabled differential on the real mesh: per-shard cold
+    chains + Bloom routing + staging arenas vs the single-chip tiered
+    cold path.  Phase 0 applies deterministic insert pressure until
+    the snapshot rings overflow and spill epochs fire; phase 1 mixes
+    queries (hitting cold rows), deletes (cold tombstone merges) and
+    re-inserts."""
+    from conftest import small_pfo_config
+    from repro.core import DistConfig, PFOIndex
+    from repro.serving import DistStreamEngine, StreamConfig, StreamEngine
+    from repro.sharding.policy import stream_mesh
+
+    dim = 16
+    # cold_cache_slots >= L * cold_segments: the single-chip reference
+    # runs one cold chain per LSH table and its Bloom fan-out can want
+    # every segment at once — an undersized cache thrashes and degrades
+    # its results, which would break the differential for the wrong
+    # reason (the dist mixed-table chain needs only cold_segments)
+    cfg = small_pfo_config(
+        dim=dim, L=2, C=1, m=2, main_m=2,
+        max_leaves_per_tree=24, max_nodes_per_tree=32,
+        main_max_leaves_per_tree=256, store_capacity=4096,
+        max_candidates_per_probe=32, max_candidates_total=256,
+        snap_budget_per_probe=32, max_snapshots=4, max_tombstones=48,
+        cold_segments=8, cold_cache_slots=16, cold_fetch_rounds=4)
+    mesh = stream_mesh(4, n_data=2)
+    dcfg = DistConfig(pfo=cfg, batch_axes=("data",), n_model=4)
+    scfg = StreamConfig(max_batch=16, min_batch=16, default_k=5)
+    deng = DistStreamEngine(dcfg, mesh, scfg, seed=0)
+    seng = StreamEngine(PFOIndex(cfg, seed=0), scfg)
+    deng.warmup()
+    seng.warmup()
+
+    rng = np.random.default_rng(7)
+    ver, live, pairs = {}, set(), []
+    nxt = 1000
+    for _ in range(40):
+        for _ in range(16):
+            ver[nxt] = 1
+            x = _unit(nxt, 1, dim)
+            pairs.append((deng.insert(nxt, x), seng.insert(nxt, x)))
+            live.add(nxt)
+            nxt += 1
+        deng.flush(), seng.flush()
+    for step in range(260):
+        kind = rng.choice(4, p=[.3, .4, .15, .15])
+        i = int(rng.integers(0, 128))
+        if kind == 0 and live:
+            j = sorted(live)[int(rng.integers(0, len(live)))]
+            q = _unit(j, ver[j], dim) \
+                + rng.normal(size=(dim,)).astype(np.float32) * 0.05
+            pairs.append((deng.query(q, k=5), seng.query(q, k=5)))
+        elif kind == 1:
+            ver[i] = ver.get(i, 0) + 1
+            x = _unit(i, ver[i], dim)
+            pairs.append((deng.insert(i, x), seng.insert(i, x)))
+            live.add(i)
+        elif kind == 2 and live:
+            j = sorted(live)[int(rng.integers(0, len(live)))]
+            pairs.append((deng.delete(j), seng.delete(j)))
+            live.discard(j)
+        elif kind == 3 and live:
+            j = sorted(live)[int(rng.integers(0, len(live)))]
+            ver[j] += 1
+            x = _unit(j, ver[j], dim)
+            pairs.append((deng.update(j, x), seng.update(j, x)))
+        if rng.random() < 0.12:
+            deng.flush(), seng.flush()
+    deng.flush(), seng.flush()
+
+    mism = 0
+    for td, ts in pairs:
+        a, b = deng.result(td), seng.result(ts)
+        if isinstance(b, str):
+            assert a == b, (td, a, b)
+        elif not (np.array_equal(a[0], b[0])
+                  and np.allclose(a[1], b[1], atol=1e-5)):
+            mism += 1
+    dst, sst = deng.stats(), seng.stats()
+    return {
+        "checked": len(pairs), "mismatches": mism,
+        "query_candidate_drops":
+            deng.backend.stats()["query_candidate_drops"],
+        "dist_spills": dst["spills"], "single_spills": sst["spills"],
+        "dist_merges": dst["merges"], "single_merges": sst["merges"],
+        "dist_cold_segments": dst["cold"]["cold_segments"],
+        "dist_incomplete": dst["cold"]["incomplete_query_rounds"],
+        "single_incomplete": sst["cold"]["incomplete_query_rounds"],
+        "vec_staging_hit_rate": dst["cold"]["vec_staging_hit_rate"],
+    }
+
+
+def run_drop_trace():
+    """Force owner-mailbox skew on the candidate route and assert the
+    dropped candidates are COUNTED, never silent.  Every inserted id is
+    chosen (host-side, via the same murmur keys the router uses) to be
+    owned by shard 0; a 4-row query then routes 4*budget=32 candidates
+    per sender at owner 0, past the per-owner capacity
+    2*(32/S) + budget = 24 — the overflow must land in
+    ``stats()["query_candidate_drops"]``."""
+    import jax.numpy as jnp
+    from conftest import small_pfo_config
+    from repro.core import DistConfig
+    from repro.core.lsh import main_table_keys
+    from repro.serving import DistStreamEngine, StreamConfig
+    from repro.sharding.policy import stream_mesh
+
+    dim = 16
+    cfg = small_pfo_config(
+        dim=dim, L=2, C=1, m=2, main_m=2,
+        max_leaves_per_tree=64, max_nodes_per_tree=64,
+        main_max_leaves_per_tree=256, store_capacity=4096,
+        max_candidates_per_probe=32, max_candidates_total=32,
+        snap_budget_per_probe=32)
+    mesh = stream_mesh(4, n_data=1)
+    dcfg = DistConfig(pfo=cfg, batch_axes=("data",), n_model=4)
+    scfg = StreamConfig(max_batch=16, min_batch=16, default_k=8)
+    deng = DistStreamEngine(dcfg, mesh, scfg, seed=0)
+
+    mtps = dcfg.main_trees_per_shard
+    pool = jnp.arange(1, 50000, dtype=jnp.int32)
+    _, mtree = main_table_keys(pool, cfg)
+    owner0 = np.asarray(pool)[np.asarray(mtree) // mtps == 0][:64]
+    assert len(owner0) == 64, len(owner0)
+
+    rng = np.random.default_rng(3)
+    center = rng.normal(size=(dim,)).astype(np.float32)
+    for j in owner0:
+        x = center + rng.normal(size=(dim,)).astype(np.float32) * 0.01
+        deng.insert(int(j), (x / np.linalg.norm(x)).astype(np.float32))
+    deng.flush()
+    q = center + rng.normal(size=(4, dim)).astype(np.float32) * 0.01
+    q = (q / np.linalg.norm(q, axis=1, keepdims=True)).astype(np.float32)
+    ids, _ = deng.backend.query_rows(q, k=8)
+    ids = np.asarray(ids)
+    drops = deng.backend.stats()["query_candidate_drops"]
+    return {"query_candidate_drops": int(drops),
+            "rows_with_results": int((ids >= 0).any(axis=1).sum())}
+
+
 def steady_state_readbacks(deng) -> dict:
     """Warm engine: one explicit scalar readback per round, nothing
     implicit (transfer guard)."""
@@ -133,19 +273,38 @@ def main():
 
     assert jax.device_count() >= 8, \
         f"child needs 8 virtual devices, got {jax.device_count()}"
-    orderings = sys.argv[1:] or ["window", "strict"]
+    modes = sys.argv[1:] or ["window", "strict"]
     out = {}
     deng = None
-    for ordering in orderings:
-        rec, deng = run_trace(ordering, n_ops=220, seed=11)
+    for mode in modes:
+        if mode == "drops":
+            rec = run_drop_trace()
+            assert rec["query_candidate_drops"] > 0, rec
+            # under forced skew some rows may lose every candidate —
+            # the point is the loss is counted, not that recall holds
+            assert rec["rows_with_results"] >= 1, rec
+            out["drops"] = rec
+            continue
+        if mode == "cold":
+            rec = run_cold_trace()
+            assert rec["mismatches"] == 0, rec
+            assert rec["query_candidate_drops"] == 0, rec
+            assert rec["dist_spills"] == rec["single_spills"] >= 1, rec
+            assert rec["dist_merges"] == rec["single_merges"] >= 1, rec
+            assert rec["dist_cold_segments"] >= 1, rec
+            assert rec["dist_incomplete"] == 0, rec
+            out["cold"] = rec
+            continue
+        rec, deng = run_trace(mode, n_ops=220, seed=11)
         assert rec["mismatches"] == 0, rec
         assert rec["query_candidate_drops"] == 0, rec
         assert rec["dist_seals"] == rec["single_seals"] >= 1, rec
         assert rec["dist_merges"] == rec["single_merges"] >= 1, rec
-        out[ordering] = rec
-    rb = steady_state_readbacks(deng)
-    assert rb["rounds"] >= 1 and rb["readbacks"] == rb["rounds"], rb
-    out["steady_state"] = rb
+        out[mode] = rec
+    if deng is not None:
+        rb = steady_state_readbacks(deng)
+        assert rb["rounds"] >= 1 and rb["readbacks"] == rb["rounds"], rb
+        out["steady_state"] = rb
     print("DIST_STREAM_RESULT " + json.dumps(out))
 
 

@@ -155,6 +155,135 @@ def test_dist_jit_cache_bounded_by_buckets(one_dev_engines):
     assert len(be._qry) <= 1 + 1          # default_k (+ explicit k=5)
 
 
+def test_one_device_cold_differential():
+    """Cold tier under ``DistConfig`` on the degenerate mesh: spill
+    epochs, Bloom-routed cold queries with fetch/re-probe, staging-
+    arena ranking, and the cold tombstone merge are all differential-
+    equal to the single-chip tiered engine.  cold_cache_slots is sized
+    >= L * cold_segments so the single-chip per-table chains (Bloom
+    fan-out up to L * cold_segments at once) never thrash the cache."""
+    dim = 16
+    cfg = small_pfo_config(
+        dim=dim, L=2, C=1, m=2, main_m=2,
+        max_leaves_per_tree=24, max_nodes_per_tree=32,
+        main_max_leaves_per_tree=256, store_capacity=4096,
+        max_candidates_per_probe=32, max_candidates_total=256,
+        snap_budget_per_probe=32, max_snapshots=4, max_tombstones=32,
+        cold_segments=8, cold_cache_slots=16, cold_fetch_rounds=4)
+    mesh = stream_mesh(1, n_data=1)
+    dcfg = DistConfig(pfo=cfg, batch_axes=("data",), n_model=1)
+    scfg = StreamConfig(max_batch=16, min_batch=16, default_k=5)
+    deng = DistStreamEngine(dcfg, mesh, scfg, seed=0)
+    seng = StreamEngine(PFOIndex(cfg, seed=0), scfg)
+
+    rng = np.random.default_rng(7)
+    ver, live, pairs = {}, set(), []
+    nxt = 1000
+    # phase 0: deterministic insert pressure until rings overflow and
+    # spill epochs move sealed segments into the per-shard cold store
+    for _ in range(24):
+        for _ in range(16):
+            ver[nxt] = 1
+            x = _unit(nxt, 1, dim)
+            pairs.append((deng.insert(nxt, x), seng.insert(nxt, x)))
+            live.add(nxt)
+            nxt += 1
+        deng.flush(), seng.flush()
+    # phase 1: queries against cold rows, deletes forcing the cold
+    # tombstone merge, duplicate-id re-inserts
+    for step in range(140):
+        kind = rng.choice(4, p=[.3, .4, .15, .15])
+        i = int(rng.integers(0, 128))
+        if kind == 0 and live:
+            j = sorted(live)[int(rng.integers(0, len(live)))]
+            q = _unit(j, ver[j], dim) \
+                + rng.normal(size=(dim,)).astype(np.float32) * 0.05
+            pairs.append((deng.query(q, k=5), seng.query(q, k=5)))
+        elif kind == 1:
+            ver[i] = ver.get(i, 0) + 1
+            x = _unit(i, ver[i], dim)
+            pairs.append((deng.insert(i, x), seng.insert(i, x)))
+            live.add(i)
+        elif kind == 2 and live:
+            j = sorted(live)[int(rng.integers(0, len(live)))]
+            pairs.append((deng.delete(j), seng.delete(j)))
+            live.discard(j)
+        elif kind == 3 and live:
+            j = sorted(live)[int(rng.integers(0, len(live)))]
+            ver[j] += 1
+            x = _unit(j, ver[j], dim)
+            pairs.append((deng.update(j, x), seng.update(j, x)))
+        if rng.random() < 0.12:
+            deng.flush(), seng.flush()
+    deng.flush(), seng.flush()
+
+    for td, ts in pairs:
+        a, b = deng.result(td), seng.result(ts)
+        if isinstance(b, str):
+            assert a == b, (td, a, b)
+        else:
+            np.testing.assert_array_equal(a[0], b[0])
+            np.testing.assert_allclose(a[1], b[1], atol=1e-5)
+    dst, sst = deng.stats(), seng.stats()
+    assert dst["spills"] == sst["spills"] >= 1, (dst, sst)
+    assert dst["merges"] == sst["merges"], (dst, sst)
+    assert dst["cold"]["cold_segments"] >= 1
+    assert dst["cold"]["incomplete_query_rounds"] == 0
+    assert deng.backend.stats()["query_candidate_drops"] == 0
+
+
+def test_dist_checkpoint_roundtrip_cold(tmp_path):
+    """Per-shard cold manifests survive a save/load cycle: a restored
+    ``DistBackend`` re-adopts each shard's segment chain and answers
+    queries identically, with device caches restarted empty."""
+    from repro.checkpoint import (load_dist_checkpoint,
+                                  save_dist_checkpoint)
+
+    dim = 16
+    cfg = small_pfo_config(
+        dim=dim, L=2, C=1, m=2, main_m=2,
+        max_leaves_per_tree=24, max_nodes_per_tree=32,
+        main_max_leaves_per_tree=256, store_capacity=4096,
+        max_candidates_per_probe=32, max_candidates_total=256,
+        snap_budget_per_probe=32, max_snapshots=4, max_tombstones=32,
+        cold_segments=8, cold_cache_slots=16, cold_fetch_rounds=4)
+    mesh = stream_mesh(1, n_data=1)
+    dcfg = DistConfig(pfo=cfg, batch_axes=("data",), n_model=1)
+    scfg = StreamConfig(max_batch=16, min_batch=16, default_k=5)
+    deng = DistStreamEngine(dcfg, mesh, scfg, seed=0,
+                            cold_dir=str(tmp_path / "cold"))
+    nxt = 1000
+    for _ in range(24):                     # force spills into cold
+        for _ in range(16):
+            deng.insert(nxt, _unit(nxt, 1, dim))
+            nxt += 1
+        deng.flush()
+    assert deng.stats()["cold"]["cold_segments"] >= 1
+    probes = [1000, 1100, 1200, nxt - 1]
+    want = {}
+    for p in probes:
+        t = deng.query(_unit(p, 1, dim), k=5)
+        deng.flush()
+        want[p] = deng.result(t)
+
+    path = save_dist_checkpoint(str(tmp_path / "ck"), 3, deng.backend)
+    man = json.load(open(os.path.join(path, "manifest.json")))
+    assert len(man["extra"]["cold_manifests"]) == dcfg.n_model
+
+    deng2 = DistStreamEngine(dcfg, mesh, scfg, seed=0,
+                             cold_dir=str(tmp_path / "cold2"))
+    load_dist_checkpoint(str(tmp_path / "ck"), 3, deng2.backend)
+    assert deng2.backend.n_inserted == deng.backend.n_inserted
+    assert deng2.stats()["cold"]["cold_segments"] \
+        == deng.stats()["cold"]["cold_segments"]
+    for p in probes:
+        t = deng2.query(_unit(p, 1, dim), k=5)
+        deng2.flush()
+        ids, d = deng2.result(t)
+        np.testing.assert_array_equal(ids, want[p][0])
+        np.testing.assert_allclose(d, want[p][1], atol=1e-5)
+
+
 # ======================================================================
 # multi-client ingestion (backend-independent; run on the local engine)
 # ======================================================================
@@ -228,3 +357,51 @@ def test_dist_stream_differential_8dev():
         assert rec[ordering]["dist_merges"] >= 1
     ss = rec["steady_state"]
     assert ss["readbacks"] == ss["rounds"] >= 1
+
+
+@pytest.mark.slow
+def test_dist_stream_cold_differential_8dev():
+    """Cold-enabled trace on the (data=2, model=4) mesh: per-shard
+    cold chains with Bloom routing and staging arenas must be
+    differential-equal to the single-chip tiered engine — spill and
+    merge epoch parity, zero candidate drops, zero incomplete query
+    rounds — all asserted inside the child."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8")
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    child = os.path.join(REPO, "tests", "_dist_stream_child.py")
+    proc = subprocess.run([sys.executable, child, "cold"], env=env,
+                          capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, \
+        f"child failed\nstdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-4000:]}"
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("DIST_STREAM_RESULT ")]
+    assert line, proc.stdout
+    rec = json.loads(line[0].split(" ", 1)[1])["cold"]
+    assert rec["mismatches"] == 0
+    assert rec["dist_spills"] >= 1 and rec["dist_cold_segments"] >= 1
+
+
+@pytest.mark.slow
+def test_dist_query_drop_accounting_8dev():
+    """Owner-mailbox skew on the candidate route (every candidate id
+    murmur-owned by shard 0, per-sender load past the per-owner
+    capacity) must surface in ``query_candidate_drops`` — dropped
+    candidates are counted, never silently degrade recall."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8")
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    child = os.path.join(REPO, "tests", "_dist_stream_child.py")
+    proc = subprocess.run([sys.executable, child, "drops"], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, \
+        f"child failed\nstdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-4000:]}"
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("DIST_STREAM_RESULT ")]
+    assert line, proc.stdout
+    rec = json.loads(line[0].split(" ", 1)[1])["drops"]
+    assert rec["query_candidate_drops"] > 0

@@ -1,0 +1,87 @@
+"""Parity tests for the shared O(n + m)-memory membership helper.
+
+``member_sorted`` replaced five ``jnp.isin`` sites on the hot
+query/insert/delete/merge paths (the (n, m) broadcast compare OOMs at
+production table sizes).  Its contract is exact ``jnp.isin`` parity on
+every shape the read/write paths feed it — including the edge cases
+that bit the original implementations: empty tables, all-dead
+candidate sets, duplicate ids on either side, and tables at capacity
+with ``-1`` padding.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.membership import member_sorted
+
+
+def _check(x, table):
+    got = np.asarray(member_sorted(jnp.asarray(x), jnp.asarray(table)))
+    want = np.asarray(jnp.isin(jnp.asarray(x), jnp.asarray(table)))
+    np.testing.assert_array_equal(got, want)
+    return got
+
+
+def test_empty_table_matches_nothing():
+    """Zero-size tombstone table (fresh index, post-merge reset):
+    nothing is a member, and the zero-size path must not trace an
+    empty gather."""
+    x = np.array([1, 5, -1, 0, 2**31 - 2], np.int32)
+    got = _check(x, np.zeros((0,), np.int32))
+    assert not got.any()
+
+
+def test_all_dead_candidates():
+    """Every candidate present in the table (a batch delete that
+    tombstoned the whole candidate set): all True."""
+    table = np.array([7, 3, 11, 5], np.int32)
+    got = _check(np.array([3, 3, 5, 7, 11], np.int32), table)
+    assert got.all()
+
+
+def test_duplicate_ids_both_sides():
+    """Duplicate ids in the probe set (a query's candidate list before
+    dedupe) and in the table (delete-then-reinsert leaves repeated
+    tombstones) must not perturb membership."""
+    x = np.array([4, 4, 9, 4, 9, 2], np.int32)
+    table = np.array([9, 9, 9, 4, 4], np.int32)
+    _check(x, table)
+
+
+def test_table_at_capacity_with_pad():
+    """A tombstone buffer at capacity still carries its -1 padding
+    convention upstream; the helper must treat -1 as an ordinary
+    element (callers mask ``cand >= 0`` themselves) and agree with
+    jnp.isin bit for bit."""
+    rng = np.random.default_rng(0)
+    table = np.concatenate([
+        rng.choice(10_000, size=48, replace=False).astype(np.int32),
+        np.full((16,), -1, np.int32)])
+    x = np.concatenate([table[:10], np.array([-1, 123456], np.int32),
+                        rng.integers(0, 10_000, 64).astype(np.int32)])
+    got = _check(x, table)
+    assert got[:10].all()          # real members hit
+    assert got[10]                 # -1 probe matches the -1 padding
+
+
+def test_multidim_shapes_and_fuzz():
+    """2-D probe sets (per-query candidate matrices) and random fuzz
+    across value ranges, including ids above 2^24."""
+    rng = np.random.default_rng(1)
+    for _ in range(20):
+        n = int(rng.integers(1, 64))
+        m = int(rng.integers(0, 48))
+        x = rng.integers(-1, 2**26, size=(4, n)).astype(np.int32)
+        table = rng.integers(-1, 2**26, size=(m,)).astype(np.int32)
+        _check(x, table)
+
+
+def test_unsorted_table_and_extremes():
+    """The helper sorts internally; callers pass tables in insertion
+    order.  Extreme int32 values must not overflow the searchsorted
+    clip."""
+    table = np.array([2**31 - 1, -2**31, 0, 17], np.int32)
+    x = np.array([-2**31, 2**31 - 1, 16, 17, 1], np.int32)
+    got = _check(x, table)
+    np.testing.assert_array_equal(got,
+                                  [True, True, False, True, False])

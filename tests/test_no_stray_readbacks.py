@@ -70,6 +70,19 @@ ALLOWED = {
     # serving: result materialization for the caller
     ("serving/engine.py", "ServingEngine._next_token"),
     ("serving/engine.py", "ServingEngine.generate"),
+    # distributed cold tier: every site mirrors a whitelisted
+    # single-chip counterpart and syncs only on flag-driven epochs or
+    # cold-miss rounds, never in a steady-state no-cold-hit round —
+    # _spill stages ring payloads host-side (1 sync, like
+    # ColdManager.spill), _merge_with_cold drains tombstones + ring for
+    # the per-shard host folds (2 syncs, like PFOIndex._merge_with_cold),
+    # query_rows picks up the round's single result (+ per-shard fetch
+    # masks riding it, like PFOIndex._query_cold), and after_flags
+    # services a COLD_MISS delete (like PFOIndex.fetch_delete_miss)
+    ("serving/stream.py", "DistBackend._merge_with_cold"),
+    ("serving/stream.py", "DistBackend._spill"),
+    ("serving/stream.py", "DistBackend.after_flags"),
+    ("serving/stream.py", "DistBackend.query_rows"),
     ("serving/stream.py", "DistBackend._mirror_obs"),
     ("serving/stream.py", "DistBackend.ensure_flags"),
     ("serving/stream.py", "DistBackend.read_flags"),
