@@ -107,6 +107,7 @@ def emit_bench(name: str, config: dict, results: dict, obs=None,
         doc["metrics"] = obs.snapshot()
     path = os.path.join(out_dir, f"BENCH_{name}.json")
     with open(path, "w") as f:
-        json.dump(doc, f, indent=1, default=str)
+        # stable key order -> clean diffs against committed baselines
+        json.dump(doc, f, indent=1, sort_keys=True, default=str)
     print(f"[bench] wrote {path}")
     return path

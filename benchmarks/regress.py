@@ -1,0 +1,188 @@
+"""Benchmark-trajectory regression gate.
+
+The benchmarks emit machine-readable ``BENCH_<name>.json`` telemetry
+(``benchmarks/common.emit_bench``) and CI has archived it since PR 6 —
+but nothing ever *compared* two runs, so the trajectory was empty and a
+2x regression in ``gather_rank`` or the routed descent would merge
+silently.  This comparator closes the loop: baselines are committed at
+the repo root, every CI run diffs its fresh telemetry against them, and
+a regression beyond the tolerance band fails the job.
+
+Per benchmark, :data:`SPEC` lists ``(dot.path, direction, tolerance)``
+triples into the JSON document:
+
+* ``higher`` — ratio metric, bigger is better.  FAIL when
+  ``current / baseline <= tolerance`` (tolerance 0.5 = flag a >= 2x
+  drop; the band is deliberately wide because CI runs on 2-core
+  timeshared runners).
+* ``lower`` — ratio metric, smaller is better.  FAIL when
+  ``current / baseline >= tolerance`` (tolerance 2.0 = flag a >= 2x
+  blow-up).  Both ratio checks are equality-inclusive so an exactly-2x
+  regression trips the gate (``x / 2x == 0.5`` exactly in binary
+  float).
+* ``higher_abs`` — absolute floor metric (recall).  FAIL when
+  ``current < baseline - tolerance``.
+
+A metric missing on either side is reported as SKIP, never a failure —
+benchmarks may gain metrics before their baseline is refreshed.  A
+current ``BENCH_*.json`` with no committed baseline is likewise
+skipped, so adding a new benchmark does not require landing its
+baseline in the same commit.
+
+Intentionally dependency-free (stdlib only, no jax import): the gate
+runs in milliseconds and is unit-tested against synthetic documents in
+``tests/test_regress.py``.
+
+    PYTHONPATH=src python benchmarks/regress.py \
+        --baseline-dir . --current-dir bench-artifacts
+
+Refreshing a baseline after an intentional perf change: rerun the
+benchmark with ``--out-dir .`` and commit the new ``BENCH_*.json``
+(see the "Benchmark trajectory" section of ``src/repro/obs/README.md``).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+#: benchmark name -> [(dot.path into the JSON doc, direction, tolerance)]
+SPEC: dict[str, list[tuple[str, str, float]]] = {
+    "streaming": [
+        ("results.engine_rps", "higher", 0.5),
+        ("results.speedup", "higher", 0.5),
+        ("results.flush_p99_ms", "lower", 2.0),
+    ],
+    "capacity": [
+        ("results.recall_at_10", "higher_abs", 0.02),
+        ("results.capacity_vs_hbm", "higher", 0.5),
+        ("results.read_amplification", "lower", 2.0),
+    ],
+    "openloop": [
+        ("results.peak_achieved_rps", "higher", 0.5),
+    ],
+}
+
+
+def get_path(doc: dict, path: str):
+    """``doc["a"]["b"]`` for ``"a.b"``; None when any hop is missing."""
+    cur = doc
+    for hop in path.split("."):
+        if not isinstance(cur, dict) or hop not in cur:
+            return None
+        cur = cur[hop]
+    return cur
+
+
+def compare_metric(path: str, direction: str, tol: float,
+                   baseline: dict, current: dict) -> dict:
+    """One (baseline, current) metric comparison -> result record with
+    ``status`` in {"ok", "fail", "skip"}."""
+    b, c = get_path(baseline, path), get_path(current, path)
+    rec = {"metric": path, "direction": direction, "tolerance": tol,
+           "baseline": b, "current": c, "ratio": None}
+    if not isinstance(b, (int, float)) or not isinstance(c, (int, float)):
+        rec["status"] = "skip"
+        rec["note"] = "metric missing on one side"
+        return rec
+    if direction == "higher_abs":
+        rec["status"] = "fail" if c < b - tol else "ok"
+        return rec
+    if b <= 0:
+        rec["status"] = "skip"
+        rec["note"] = f"non-positive baseline {b}"
+        return rec
+    ratio = c / b
+    rec["ratio"] = round(ratio, 4)
+    if direction == "higher":
+        rec["status"] = "fail" if ratio <= tol else "ok"
+    elif direction == "lower":
+        rec["status"] = "fail" if ratio >= tol else "ok"
+    else:
+        raise ValueError(f"unknown direction {direction!r}")
+    return rec
+
+
+def compare_doc(name: str, baseline: dict, current: dict) -> list[dict]:
+    """All SPEC'd comparisons for one benchmark."""
+    return [compare_metric(path, direction, tol, baseline, current)
+            for path, direction, tol in SPEC.get(name, [])]
+
+
+def compare_dirs(baseline_dir: str, current_dir: str,
+                 names: list[str] | None = None) -> list[dict]:
+    """Diff every ``BENCH_*.json`` under ``current_dir`` against its
+    committed twin in ``baseline_dir``; returns flat result records."""
+    out: list[dict] = []
+    for cur_path in sorted(glob.glob(os.path.join(current_dir,
+                                                  "BENCH_*.json"))):
+        fname = os.path.basename(cur_path)
+        name = fname[len("BENCH_"):-len(".json")]
+        if names and name not in names:
+            continue
+        base_path = os.path.join(baseline_dir, fname)
+        if not os.path.exists(base_path):
+            out.append({"benchmark": name, "metric": "-", "status": "skip",
+                        "note": f"no committed baseline {fname}"})
+            continue
+        with open(base_path) as f:
+            baseline = json.load(f)
+        with open(cur_path) as f:
+            current = json.load(f)
+        if name not in SPEC:
+            out.append({"benchmark": name, "metric": "-", "status": "skip",
+                        "note": "no SPEC entry"})
+            continue
+        for rec in compare_doc(name, baseline, current):
+            rec["benchmark"] = name
+            out.append(rec)
+    return out
+
+
+def format_results(results: list[dict]) -> str:
+    lines = [f"{'benchmark':<12} {'metric':<34} {'baseline':>12} "
+             f"{'current':>12} {'ratio':>8}  status"]
+    for r in results:
+        b = r.get("baseline")
+        c = r.get("current")
+        ratio = r.get("ratio")
+        lines.append(
+            f"{r['benchmark']:<12} {r['metric']:<34} "
+            f"{b if b is not None else '-':>12} "
+            f"{c if c is not None else '-':>12} "
+            f"{ratio if ratio is not None else '-':>8}  "
+            f"{r['status'].upper()}"
+            + (f"  ({r['note']})" if r.get("note") else ""))
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-dir", default=".",
+                    help="committed BENCH_*.json baselines (repo root)")
+    ap.add_argument("--current-dir", required=True,
+                    help="freshly produced BENCH_*.json artifacts")
+    ap.add_argument("--names", default=None,
+                    help="comma-separated benchmark subset")
+    args = ap.parse_args(argv)
+    names = args.names.split(",") if args.names else None
+    results = compare_dirs(args.baseline_dir, args.current_dir, names)
+    print(format_results(results))
+    compared = [r for r in results if r["status"] != "skip"]
+    failed = [r for r in results if r["status"] == "fail"]
+    if not compared:
+        print("[regress] nothing compared (no overlapping baselines?)")
+        return 0
+    if failed:
+        print(f"[regress] REGRESSION: {len(failed)}/{len(compared)} "
+              "metric(s) outside the tolerance band")
+        return 1
+    print(f"[regress] trajectory ok: {len(compared)} metric(s) within "
+          "tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

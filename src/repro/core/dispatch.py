@@ -170,8 +170,10 @@ def ticket_client(ticket: int) -> int:
 def merge_client_queues(queues: list) -> list:
     """Round-robin merge of per-client request queues into one round.
 
-    Each queue is a list of (ticket, kind, payload) tuples in that
-    client's submission order.  The merged round interleaves clients
+    Each queue is a list of (ticket, kind, payload, t_enq) tuples in
+    that client's submission order (``t_enq`` is the host enqueue
+    timestamp the serving engine's request-grain accounting rides on;
+    this merge is tuple-opaque and works for any tuple shape).  The merged round interleaves clients
     fairly (one request per client per turn) while keeping every
     client's own order intact; the stream engine's ordering modes then
     apply to the merged round as if it came from one client.

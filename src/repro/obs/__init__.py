@@ -23,6 +23,8 @@ Metric names and the trace-event schema are documented in
 """
 from __future__ import annotations
 
+import warnings
+
 from . import report
 from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                       NULL_METRIC, render_name)
@@ -38,6 +40,11 @@ class Obs:
         self.registry = MetricsRegistry(enabled=metrics)
         self.tracer = Tracer(trace_capacity, jax_annotations) if trace \
             else NULL_TRACER
+        if metrics and trace:
+            # lazy mirror: ring-wraparound loss surfaces as a gauge so
+            # a truncated trace is never silently misread
+            self.on_snapshot("trace", lambda: self.gauge(
+                "obs.trace_dropped").set(self.tracer.dropped))
 
     # -- capability flags (hot-path guards) -----------------------------
     @property
@@ -87,6 +94,13 @@ class Obs:
         return report.format_table(self.snapshot(), title=title)
 
     def save_trace(self, path: str) -> None:
+        dropped = self.tracer.dropped
+        if dropped:
+            warnings.warn(
+                f"trace ring overwrote {dropped} span(s); the saved "
+                f"trace holds only the most recent "
+                f"{self.tracer._cap} — raise trace_capacity",
+                RuntimeWarning, stacklevel=2)
         self.tracer.save(path)
 
 

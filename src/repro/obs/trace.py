@@ -50,6 +50,7 @@ NULL_SPAN = _NullSpan()
 class NullTracer:
     """Disabled tracer: every span is the shared no-op singleton."""
     enabled = False
+    dropped = 0
 
     def span(self, name: str, **args):
         return NULL_SPAN

@@ -65,6 +65,30 @@ thread of §4.2).  The ordering contract below then applies to the
 merged round: per-client submission order is always respected;
 cross-client order is the deterministic round-robin interleave.
 
+Request-grain accounting + deadlines
+------------------------------------
+Every ticket is stamped with the host wall-clock at enqueue (the
+fourth element of the ``(ticket, kind, payload, t_enq)`` queue tuple),
+and when its micro-batch completes the engine decomposes the request's
+end-to-end latency into three host-clock phases::
+
+    req.e2e_ms{kind=}  =  req.queue_wait_ms   (enqueue -> flush start)
+                        + req.batch_wait_ms   (flush start -> its
+                                               batch's dispatch)
+                        + req.service_ms      (dispatch -> its batch's
+                                               result pickup/flag ack)
+
+All four are plain host histograms — the accounting adds ZERO device
+readbacks to a round (transfer-guard tested with it enabled).  Clients
+opened with ``client(deadline_ms=...)`` join that bound's **deadline
+class**: completions feed ``slo.requests`` / ``slo.violations``
+counters and snapshot-time burn-rate gauges (``repro.obs.slo``), and a
+``window``-mode flush reorders its *query* half earliest-deadline-
+first (``slo.edf_order`` — safe because every query in the window
+probes the same post-update state), so deadline-critical requests form
+the window's first micro-batch buckets.  The update half and
+``strict`` mode are never reordered.
+
 The engine coalesces an *interleaved* stream of query / insert /
 delete / update requests into fixed-shape micro-batches.  Batch shapes
 are drawn from a small set of power-of-two **size buckets** and the
@@ -110,13 +134,15 @@ from repro.core.dispatch import (FLAG_ANY_PENDING, FLAG_COLD_FULL,
                                  FLAG_COLD_MISS, FLAG_COLD_SPILL,
                                  FLAG_NAMES, FLAG_NEED_SEAL,
                                  FLAG_SNAPS_FULL, FLAG_TOMBS_FULL,
-                                 client_ticket, merge_client_queues)
+                                 client_ticket, merge_client_queues,
+                                 ticket_client)
 from repro.core.index import (PFOIndex, delete_step, delete_step_cold,
                               init_state, insert_step, merge_step,
                               query_step, query_step_cold, round_flags,
                               seal_step)
 from repro.obs import Obs
 from repro.obs import report as obs_report
+from repro.obs import slo as obs_slo
 
 QUERY, INSERT, DELETE, UPDATE = "query", "insert", "delete", "update"
 
@@ -844,36 +870,55 @@ class DistBackend:
 # multi-client handles (per-client ticket spaces — module docstring)
 # ======================================================================
 class StreamClient:
-    """A submitter handle with its own FIFO queue and ticket space."""
+    """A submitter handle with its own FIFO queue and ticket space.
 
-    def __init__(self, engine: "StreamEngine", cid: int):
+    ``deadline_ms`` (set via :meth:`StreamEngine.client`) places every
+    request this client submits in that deadline class — see the
+    request-grain accounting section of the module docstring."""
+
+    def __init__(self, engine: "StreamEngine", cid: int,
+                 deadline_ms: float | None = None):
         self._engine = engine
         self.cid = cid
-        self._buf: list[tuple[int, str, Any]] = []
+        self.deadline_ms = deadline_ms
+        self._buf: list[tuple[int, str, Any, float]] = []
         self._seq = 0
 
-    def _enqueue(self, kind: str, payload) -> int:
+    def _enqueue(self, kind: str, payload,
+                 t_arrival: float | None = None) -> int:
         t = client_ticket(self.cid, self._seq)
         self._seq += 1
-        self._buf.append((t, kind, payload))
+        # the enqueue stamp rides the queue tuple (host wall-clock):
+        # request-grain latency accounting starts here.  ``t_arrival``
+        # (a time.perf_counter() value) backdates the stamp to when the
+        # request actually arrived — an upstream front-end stamps at
+        # socket receive so queue_wait covers its backlog too, and the
+        # open-loop benchmark stamps the Poisson arrival clock.
+        self._buf.append((t, kind, payload,
+                          time.perf_counter() if t_arrival is None
+                          else t_arrival))
         self._engine.n_requests += 1
         return t
 
-    def query(self, vec, k: int | None = None) -> int:
+    def query(self, vec, k: int | None = None,
+              t_arrival: float | None = None) -> int:
         e = self._engine
         vec = np.asarray(vec, np.float32).reshape(e._dim)
-        return self._enqueue(QUERY, (vec, int(k or e.scfg.default_k)))
+        return self._enqueue(QUERY, (vec, int(k or e.scfg.default_k)),
+                             t_arrival)
 
-    def insert(self, vid: int, vec) -> int:
+    def insert(self, vid: int, vec,
+               t_arrival: float | None = None) -> int:
         vec = np.asarray(vec, np.float32).reshape(self._engine._dim)
-        return self._enqueue(INSERT, (int(vid), vec))
+        return self._enqueue(INSERT, (int(vid), vec), t_arrival)
 
-    def delete(self, vid: int) -> int:
-        return self._enqueue(DELETE, int(vid))
+    def delete(self, vid: int, t_arrival: float | None = None) -> int:
+        return self._enqueue(DELETE, int(vid), t_arrival)
 
-    def update(self, vid: int, vec) -> int:
+    def update(self, vid: int, vec,
+               t_arrival: float | None = None) -> int:
         vec = np.asarray(vec, np.float32).reshape(self._engine._dim)
-        return self._enqueue(UPDATE, (int(vid), vec))
+        return self._enqueue(UPDATE, (int(vid), vec), t_arrival)
 
     def pending(self) -> int:
         return len(self._buf)
@@ -914,6 +959,13 @@ class StreamEngine:
         self._query_cap = self.scfg.query_cap(cfg.traversal)
         self._clients: list[StreamClient] = []
         self._self_client = StreamClient(self, 0)
+        # deadline classes (client id -> deadline_ms) + the pluggable
+        # window-mode flush policy over the query half (slo.edf_order:
+        # earliest-deadline-first; only consulted when a deadline
+        # client exists, so deadline-free engines skip the sort)
+        self._deadlines: dict[int, float] = {}
+        self.flush_policy = obs_slo.edf_order
+        self._t_flush = time.perf_counter()
         self._results: dict[int, Any] = {}
         self.events: list[tuple[str, int]] = []        # (epoch kind, flush#)
         self.n_flushes = 0
@@ -946,6 +998,15 @@ class StreamEngine:
         self._h_fill = o.histogram("stream.batch_fill")
         self._h_bucket = o.histogram("stream.bucket_rows")
         self._g_queue = o.gauge("stream.queue_depth")
+        # request-grain lifecycle histograms (module docstring): e2e is
+        # per kind; the decomposition shares one histogram each so the
+        # metric count stays flat
+        self._h_e2e = {k: o.histogram("req.e2e_ms", kind=k)
+                       for k in (QUERY, INSERT, DELETE, UPDATE)}
+        self._h_queue_wait = o.histogram("req.queue_wait_ms")
+        self._h_batch_wait = o.histogram("req.batch_wait_ms")
+        self._h_service = o.histogram("req.service_ms")
+        self._slo = obs_slo.SLOTracker(o)
         self._c_flags = tuple(
             (bit, o.counter("stream.flag_fired", flag=name))
             for bit, name in FLAG_NAMES.items())
@@ -979,11 +1040,22 @@ class StreamEngine:
     # ------------------------------------------------------------------
     # submission (the request stream)
     # ------------------------------------------------------------------
-    def client(self) -> StreamClient:
+    def client(self, deadline_ms: float | None = None) -> StreamClient:
         """Open a new client handle with its own ticket space (see the
-        multi-client contract in the module docstring)."""
-        c = StreamClient(self, len(self._clients) + 1)
+        multi-client contract in the module docstring).
+
+        ``deadline_ms`` assigns the client a deadline class: its
+        completed requests feed the ``slo.*`` violation counters and
+        burn-rate gauges, and window-mode flushes prioritize its
+        queries earliest-deadline-first (``repro.obs.slo``)."""
+        if deadline_ms is not None:
+            deadline_ms = float(deadline_ms)
+            assert deadline_ms > 0, "deadline_ms must be positive"
+        c = StreamClient(self, len(self._clients) + 1,
+                         deadline_ms=deadline_ms)
         self._clients.append(c)
+        if deadline_ms is not None:
+            self._deadlines[c.cid] = deadline_ms
         return c
 
     def query(self, vec, k: int | None = None) -> int:
@@ -1030,11 +1102,17 @@ class StreamEngine:
         self._g_queue.set(self.pending())
         queue = self._ingest()
         t0 = time.perf_counter()
+        self._t_flush = t0                # queue_wait / batch_wait pivot
         with self.obs.span("flush", depth=len(queue)):
             out: dict[int, Any] = {}
             if self.scfg.ordering == "window":
                 updates = [r for r in queue if r[1] != QUERY]
                 queries = [r for r in queue if r[1] == QUERY]
+                if self._deadlines:
+                    # deadline-aware bucket priority: the window's
+                    # queries all probe the same post-update state, so
+                    # reordering them is semantics-free (module doc)
+                    queries = self.flush_policy(queries, self._deadlines)
                 self._drain_updates_coalesced(updates, out)
                 self._drain_in_runs(queries, out)
             else:
@@ -1147,6 +1225,7 @@ class StreamEngine:
                     with self.obs.span("pack", kind=kind):
                         hold["p"] = self._pack(kind, *nxt)
 
+            t_disp = time.perf_counter()
             if kind == QUERY:
                 self._query_batch(packed, chunk, bucket, out, overlap)
             elif kind == INSERT:
@@ -1161,6 +1240,8 @@ class StreamEngine:
                 self._insert_batch(packed["ins"], chunk, bucket, out,
                                    UPDATE, None)
             self.n_batches += 1
+            if self._obs_on:
+                self._account(chunk, kind, t_disp, time.perf_counter())
             if i + 1 < len(chunks):
                 packed = hold.get("p")
                 if packed is None:
@@ -1168,19 +1249,44 @@ class StreamEngine:
                         packed = self._pack(kind, *chunks[i + 1])
 
     # ------------------------------------------------------------------
+    # request-grain lifecycle accounting (module docstring): pure host
+    # arithmetic on the enqueue stamp riding each queue tuple — never
+    # touches a device value, so it is transfer-guard-safe by
+    # construction
+    # ------------------------------------------------------------------
+    def _account(self, chunk: list, kind: str, t_disp: float,
+                 t_done: float) -> None:
+        h_e2e = self._h_e2e[kind]
+        t_flush = self._t_flush
+        batch_wait_ms = (t_disp - t_flush) * 1e3
+        service_ms = (t_done - t_disp) * 1e3
+        deadlines = self._deadlines
+        for req in chunk:
+            t_enq = req[3]
+            e2e_ms = (t_done - t_enq) * 1e3
+            h_e2e.observe(e2e_ms)
+            self._h_queue_wait.observe((t_flush - t_enq) * 1e3)
+            self._h_batch_wait.observe(batch_wait_ms)
+            self._h_service.observe(service_ms)
+            if deadlines:
+                dl = deadlines.get(ticket_client(req[0]))
+                if dl is not None:
+                    self._slo.observe(dl, e2e_ms)
+
+    # ------------------------------------------------------------------
     # host-side batch packing (the half that double-buffers)
     # ------------------------------------------------------------------
     def _pack(self, kind: str, chunk: list, bucket: int):
         if kind == QUERY:
             q = np.zeros((bucket, self._dim), np.float32)
-            for r, (_, _, (vec, _)) in enumerate(chunk):
+            for r, (_, _, (vec, _), _) in enumerate(chunk):
                 q[r] = vec
             return (jnp.asarray(q), chunk[0][2][1])
         if kind == INSERT or kind == UPDATE:
             ids = np.zeros((bucket,), np.int32)
             vecs = np.zeros((bucket, self._dim), np.float32)
             mask = np.zeros((bucket,), bool)
-            for r, (_, _, (vid, vec)) in enumerate(chunk):
+            for r, (_, _, (vid, vec), _) in enumerate(chunk):
                 ids[r], vecs[r], mask[r] = vid, vec, True
             ins = (jnp.asarray(ids), jnp.asarray(vecs), jnp.asarray(mask))
             if kind == INSERT:
@@ -1189,7 +1295,7 @@ class StreamEngine:
         # DELETE
         ids = np.zeros((bucket,), np.int32)
         mask = np.zeros((bucket,), bool)
-        for r, (_, rkind, payload) in enumerate(chunk):
+        for r, (_, rkind, payload, _) in enumerate(chunk):
             ids[r] = payload if rkind == DELETE else payload[0]
             mask[r] = True
         return (jnp.asarray(ids), jnp.asarray(mask))
@@ -1217,7 +1323,7 @@ class StreamEngine:
             ids, dists = jax.device_get((ids, dists))
         if self._obs_on:
             self._h_round[QUERY].observe((time.perf_counter() - t0) * 1e3)
-        for r, (ticket, _, _) in enumerate(chunk):
+        for r, (ticket, _, _, _) in enumerate(chunk):
             out[ticket] = (ids[r], dists[r])
 
     def _insert_batch(self, packed, chunk: list, bucket: int, out,
@@ -1252,7 +1358,7 @@ class StreamEngine:
                 break
         be.count_insert(len(chunk))
         if out is not None:
-            for ticket, _, _ in chunk:
+            for ticket, _, _, _ in chunk:
                 out[ticket] = "ok"
 
     def _delete_batch(self, packed, chunk: list, bucket: int, out,
@@ -1283,7 +1389,7 @@ class StreamEngine:
                 break
             active = pending
         if out is not None:
-            for ticket, _, _ in chunk:
+            for ticket, _, _, _ in chunk:
                 out[ticket] = "ok"
 
     # ------------------------------------------------------------------
@@ -1321,6 +1427,7 @@ class StreamEngine:
             "spills": sum(1 for e, _ in self.events if e == "spill"),
             "buckets": list(self.scfg.buckets),
             "clients": 1 + len(self._clients),
+            "deadline_clients": len(self._deadlines),
             "cold": self.backend.cold_stats(),
         }
 

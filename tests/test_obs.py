@@ -1,8 +1,10 @@
 """Observability layer tests: histogram accuracy vs numpy, registry
 semantics, span ring buffer + Perfetto export schema, disabled-path
-no-ops, derived-metric consistency with ``StreamEngine.stats()``, and
-the hard invariant — tracing adds ZERO device readbacks to a
-steady-state round (checked under the JAX transfer guard)."""
+no-ops, derived-metric consistency with ``StreamEngine.stats()``,
+request-grain accounting (``req.*`` decomposition), deadline/SLO
+classes (``obs/slo.py``), and the hard invariant — tracing AND
+per-request accounting add ZERO device readbacks to a steady-state
+round (checked under the JAX transfer guard)."""
 import json
 import sys
 import time
@@ -178,22 +180,24 @@ def test_format_table_smoke():
 # -- engine integration -------------------------------------------------
 
 def test_traced_steady_state_round_zero_extra_readbacks():
-    """With metrics AND tracing on, a warm steady-state round still does
-    exactly one explicit scalar sync (the flag word) and zero implicit
-    device->host transfers."""
+    """With metrics, tracing, per-request accounting AND a deadline
+    class all live, a warm steady-state round still does exactly one
+    explicit scalar sync (the flag word) and zero implicit device->host
+    transfers."""
     cfg = small_pfo_config()
     v = _vecs(256, cfg.dim, seed=3)
     obs = Obs(metrics=True, trace=True, trace_capacity=4096)
     eng = StreamEngine(PFOIndex(cfg, seed=0, obs=obs),
                        StreamConfig(max_batch=64, min_batch=64,
                                     query_max_batch=64))
+    client = eng.client(deadline_ms=100.0)    # SLO path live too
     for lo in (0, 64):                        # warm both rounds + flags
         for i in range(lo, lo + 64):
-            eng.insert(i, v[i])
+            client.insert(i, v[i])
         eng.flush()
 
     for i in range(128, 192):
-        eng.insert(i, v[i])
+        client.insert(i, v[i])
     before_sync = eng.index.sync_count
     before_rounds = eng.n_rounds
     n_ev = len(obs.tracer.events())
@@ -204,6 +208,141 @@ def test_traced_steady_state_round_zero_extra_readbacks():
     assert eng.index.sync_count - before_sync == rounds
     names = {e[0] for e in obs.tracer.events()[n_ev:]}
     assert {"flush", "pack", "dispatch", "flag_readback"} <= names
+    # the accounting observed every request of the guarded flush
+    snap = obs.snapshot()
+    h = snap["histograms"]["req.e2e_ms{kind=insert}"]
+    assert h["count"] == 192
+    assert snap["counters"]["slo.requests{deadline_ms=100.0}"] == 192
+
+
+# -- request-grain accounting + SLO -------------------------------------
+
+def test_request_accounting_decomposition():
+    """e2e = queue_wait + batch_wait + service, exactly, per request —
+    checked on the histogram totals (same sample count, same sum)."""
+    cfg = small_pfo_config()
+    v = _vecs(128, cfg.dim, seed=7)
+    obs = Obs()
+    eng = StreamEngine(PFOIndex(cfg, seed=0, obs=obs),
+                       StreamConfig(max_batch=32, min_batch=8))
+    for i in range(64):
+        eng.insert(i, v[i])
+    eng.flush()
+    for i in range(16):
+        eng.query(v[i], k=4)
+    eng.flush()
+    hs = obs.snapshot()["histograms"]
+    n = sum(hs[k]["count"] for k in hs if k.startswith("req.e2e_ms"))
+    assert n == 80
+    for part in ("queue_wait", "batch_wait", "service"):
+        assert hs[f"req.{part}_ms"]["count"] == n
+    e2e_sum = sum(hs[k]["mean"] * hs[k]["count"] for k in hs
+                  if k.startswith("req.e2e_ms") and hs[k]["count"])
+    part_sum = sum(hs[f"req.{p}_ms"]["mean"] * n
+                   for p in ("queue_wait", "batch_wait", "service"))
+    assert abs(e2e_sum - part_sum) / e2e_sum < 1e-6
+
+
+def test_t_arrival_backdates_queue_wait():
+    """An upstream front-end can stamp arrival time (socket receive /
+    Poisson clock); queue_wait then covers that upstream backlog."""
+    cfg = small_pfo_config()
+    v = _vecs(8, cfg.dim, seed=8)
+    obs = Obs()
+    eng = StreamEngine(PFOIndex(cfg, seed=0, obs=obs),
+                       StreamConfig(max_batch=8, min_batch=8))
+    c = eng.client()
+    c.insert(0, v[0], t_arrival=time.perf_counter() - 1.0)
+    eng.flush()
+    hs = obs.snapshot()["histograms"]
+    assert hs["req.queue_wait_ms"]["max"] >= 1000.0
+    assert hs["req.e2e_ms{kind=insert}"]["max"] >= 1000.0
+
+
+def test_deadline_violations_fire_under_injected_slow_flush():
+    """Satellite: a flush slowed past the deadline violates every
+    in-flight request of the tight class — deterministically — while a
+    loose class in the same flush stays clean."""
+    cfg = small_pfo_config()
+    v = _vecs(32, cfg.dim, seed=9)
+    obs = Obs()
+    eng = StreamEngine(PFOIndex(cfg, seed=0, obs=obs),
+                       StreamConfig(max_batch=16, min_batch=8))
+    tight = eng.client(deadline_ms=5.0)
+    loose = eng.client(deadline_ms=1e6)
+    real_pack = eng._pack
+
+    def slow_pack(kind, chunk, bucket):      # inject >deadline stall
+        time.sleep(0.02)
+        return real_pack(kind, chunk, bucket)
+
+    eng._pack = slow_pack
+    for i in range(8):
+        tight.insert(i, v[i])
+        loose.insert(100 + i, v[16 + i])
+    eng.flush()
+    cs = obs.snapshot()["counters"]
+    assert cs["slo.requests{deadline_ms=5.0}"] == 8
+    assert cs["slo.violations{deadline_ms=5.0}"] == 8
+    assert cs["slo.requests{deadline_ms=1000000.0}"] == 8
+    assert cs["slo.violations{deadline_ms=1000000.0}"] == 0
+    gs = obs.snapshot()["gauges"]
+    assert gs["slo.violation_rate{deadline_ms=5.0}"] == 1.0
+    assert gs["slo.burn_rate{deadline_ms=5.0}"] == 100.0   # 0.99 target
+    assert gs["slo.burn_rate{deadline_ms=1000000.0}"] == 0.0
+
+
+def test_edf_order_prioritizes_tight_deadline_queries():
+    from repro.obs.slo import edf_order
+    from repro.core.dispatch import client_ticket
+    deadlines = {1: 10.0, 2: 1000.0}
+    t0 = 100.0
+    queue = [
+        (client_ticket(2, 0), "query", "a", t0),        # slack 1.0s
+        (client_ticket(3, 0), "query", "b", t0),        # no deadline
+        (client_ticket(1, 0), "query", "c", t0 + 0.5),  # abs 100.51
+        (client_ticket(1, 1), "query", "d", t0),        # abs 100.01
+    ]
+    got = [r[2] for r in edf_order(queue, deadlines)]
+    assert got == ["d", "c", "a", "b"]
+    # no deadline classes registered -> identity (not even a sort)
+    assert edf_order(queue, {}) is queue
+
+
+def test_engine_client_rejects_bad_deadline():
+    cfg = small_pfo_config()
+    eng = StreamEngine(PFOIndex(cfg, seed=0),
+                       StreamConfig(max_batch=8, min_batch=8))
+    with pytest.raises(AssertionError):
+        eng.client(deadline_ms=0)
+    c = eng.client(deadline_ms=25.0)
+    assert c.deadline_ms == 25.0
+    assert eng.stats()["deadline_clients"] == 1
+
+
+def test_trace_dropped_gauge_and_save_warning(tmp_path):
+    """Ring wraparound is never silent: the gauge mirrors
+    ``Tracer.dropped`` and ``save_trace`` warns."""
+    obs = Obs(metrics=True, trace=True, trace_capacity=4)
+    for i in range(10):
+        with obs.span(f"s{i}"):
+            pass
+    assert obs.snapshot()["gauges"]["obs.trace_dropped"] == 6
+    with pytest.warns(RuntimeWarning, match="overwrote 6 span"):
+        obs.save_trace(str(tmp_path / "t.json"))
+    # no wraparound, no warning; NullTracer reports dropped == 0
+    import warnings as _w
+    clean = Obs(metrics=True, trace=True, trace_capacity=64)
+    with clean.span("x"):
+        pass
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        clean.save_trace(str(tmp_path / "t2.json"))
+    off = Obs(metrics=True, trace=False)
+    assert off.tracer.dropped == 0
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        off.save_trace(str(tmp_path / "t3.json"))
 
 
 def test_stats_and_snapshot_derive_identically():

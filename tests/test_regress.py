@@ -1,0 +1,123 @@
+"""Benchmark-trajectory gate (``benchmarks/regress.py``): tolerance-band
+semantics on synthetic documents — an exactly-2x regression MUST fail,
+plausible CI jitter MUST pass, and missing metrics/baselines are skips,
+never failures.  Also self-compares the committed repo-root baselines
+(the trajectory CI walks) to prove the committed artifacts parse and
+gate clean against themselves.
+
+Pure stdlib on the comparator side — no jax import, runs in ms."""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "benchmarks"))
+from regress import (SPEC, compare_dirs, compare_doc, compare_metric,  # noqa: E402
+                     format_results, get_path, main)
+
+sys.path.pop(0)
+
+
+def _doc(**results):
+    return {"name": "x", "results": results}
+
+
+def test_get_path():
+    d = {"a": {"b": 3}, "c": 1}
+    assert get_path(d, "a.b") == 3
+    assert get_path(d, "c") == 1
+    assert get_path(d, "a.z") is None
+    assert get_path(d, "a.b.c") is None          # scalar mid-path
+
+
+def test_identical_run_passes():
+    doc = _doc(engine_rps=500.0, speedup=3.2, flush_p99_ms=12.0)
+    assert all(r["status"] == "ok" for r in
+               compare_doc("streaming", doc, doc))
+
+
+def test_exact_2x_slower_fails():
+    """The acceptance-criteria case: current is exactly half the
+    baseline throughput -> ratio == tolerance -> FAIL (inclusive)."""
+    base = _doc(engine_rps=500.0, speedup=3.0, flush_p99_ms=10.0)
+    cur = _doc(engine_rps=250.0, speedup=1.5, flush_p99_ms=20.0)
+    res = compare_doc("streaming", base, cur)
+    assert [r["status"] for r in res] == ["fail", "fail", "fail"]
+    assert res[0]["ratio"] == 0.5
+
+
+def test_ci_jitter_passes():
+    """Anything inside the band (0.5x..2x) is jitter, not regression."""
+    base = _doc(engine_rps=500.0, speedup=3.0, flush_p99_ms=10.0)
+    cur = _doc(engine_rps=300.0, speedup=1.9, flush_p99_ms=17.0)
+    assert all(r["status"] == "ok" for r in
+               compare_doc("streaming", base, cur))
+
+
+def test_recall_absolute_floor():
+    base = _doc(recall_at_10=0.97, capacity_vs_hbm=20.0,
+                read_amplification=5.0)
+    ok = _doc(recall_at_10=0.955, capacity_vs_hbm=19.0,
+              read_amplification=6.0)
+    assert all(r["status"] == "ok" for r in
+               compare_doc("capacity", base, ok))
+    bad = dict(ok)
+    bad = _doc(recall_at_10=0.94, capacity_vs_hbm=19.0,
+               read_amplification=6.0)
+    res = {r["metric"]: r["status"] for r in
+           compare_doc("capacity", base, bad)}
+    assert res["results.recall_at_10"] == "fail"
+
+
+def test_missing_metric_is_skip_not_fail():
+    base = _doc(engine_rps=500.0)                # no speedup/p99 yet
+    cur = _doc(engine_rps=499.0, speedup=3.0, flush_p99_ms=9.0)
+    res = {r["metric"]: r["status"] for r in
+           compare_doc("streaming", base, cur)}
+    assert res["results.engine_rps"] == "ok"
+    assert res["results.speedup"] == "skip"
+    assert res["results.flush_p99_ms"] == "skip"
+    # non-positive baselines cannot form a ratio -> skip, loudly noted
+    r = compare_metric("results.engine_rps", "higher", 0.5,
+                       _doc(engine_rps=0.0), _doc(engine_rps=5.0))
+    assert r["status"] == "skip" and "non-positive" in r["note"]
+
+
+def test_compare_dirs_end_to_end(tmp_path):
+    basedir, curdir = tmp_path / "base", tmp_path / "cur"
+    basedir.mkdir(), curdir.mkdir()
+    (basedir / "BENCH_streaming.json").write_text(json.dumps(
+        _doc(engine_rps=400.0, speedup=3.0, flush_p99_ms=10.0)))
+    (curdir / "BENCH_streaming.json").write_text(json.dumps(
+        _doc(engine_rps=150.0, speedup=3.0, flush_p99_ms=10.0)))
+    (curdir / "BENCH_newbench.json").write_text(json.dumps(_doc(x=1)))
+    res = compare_dirs(str(basedir), str(curdir))
+    by = {(r["benchmark"], r["metric"]): r["status"] for r in res}
+    assert by[("streaming", "results.engine_rps")] == "fail"
+    assert by[("newbench", "-")] == "skip"       # no baseline committed
+    assert "FAIL" in format_results(res)
+    # the CLI exit codes CI keys off
+    assert main(["--baseline-dir", str(basedir),
+                 "--current-dir", str(curdir)]) == 1
+    assert main(["--baseline-dir", str(basedir),
+                 "--current-dir", str(basedir)]) == 0
+
+
+def test_committed_baselines_self_compare_clean():
+    """The repo-root baselines the CI trajectory walks must parse and
+    pass against themselves (and cover every SPEC'd benchmark that has
+    a committed artifact)."""
+    committed = sorted(REPO.glob("BENCH_*.json"))
+    if not committed:
+        pytest.skip("no committed baselines at repo root")
+    res = compare_dirs(str(REPO), str(REPO))
+    assert res, "baselines exist but nothing compared"
+    assert all(r["status"] == "ok" for r in res
+               if r["status"] != "skip")
+    compared_names = {r["benchmark"] for r in res if r["status"] == "ok"}
+    for p in committed:
+        name = p.name[len("BENCH_"):-len(".json")]
+        if name in SPEC:
+            assert name in compared_names, f"{p.name} gated nothing"
